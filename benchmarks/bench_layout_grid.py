@@ -1,0 +1,47 @@
+"""Paper Figs 6-9 — the streaming-data-lake grid: file layout (many small
+vs fewer larger segments) x intra-query parallelism (1 vs 4 workers) x
+query mode (copy vs count), full-scan baseline vs FluxSieve."""
+from __future__ import annotations
+
+import tempfile
+
+from benchmarks.common import build_world, measure, print_rows
+from repro.core.query.engine import Query
+
+
+def run(num_records: int = 100_000, runs: int = 5) -> list:
+    rows = []
+    for seg_size, label in ((2_000, "many-small"), (10_000, "few-large")):
+        for workers in (1, 4):
+            tmp = tempfile.mkdtemp(prefix=f"grid-{label}-")
+            world = build_world(num_records=num_records,
+                                segment_size=seg_size, root=tmp,
+                                index_fields=False, workers=workers)
+            term = next(t for t in world.spec.planted
+                        if t.fieldname == "content1" and t.rate >= 1e-4)
+            for mode in ("copy", "count"):
+                q = Query(terms=(("content1", term.term),), mode=mode)
+                for path in ("full_scan", "fluxsieve"):
+                    m = measure(
+                        f"grid/{label}/w{workers}/{mode}/{path}",
+                        lambda q=q, p=path: world.engine.execute(q, path=p),
+                        runs=runs,
+                        derived={"segments": len(world.store.segments)})
+                    rows.append(m)
+    # speedups per grid cell
+    by_name = {m.name: m for m in rows}
+    for seg in ("many-small", "few-large"):
+        for w in (1, 4):
+            for mode in ("copy", "count"):
+                a = by_name[f"grid/{seg}/w{w}/{mode}/full_scan"]
+                b = by_name[f"grid/{seg}/w{w}/{mode}/fluxsieve"]
+                b.derived["speedup_vs_scan"] = f"{a.median_s / b.median_s:.1f}x"
+    return rows
+
+
+def main():
+    print_rows(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Matcher scaling (paper §3.3): per-record match cost vs pattern count for
+each engine backend — the single-pass property means cost grows with
+automaton size (cache effects), not with the number of patterns scanned."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Measurement, bootstrap_median, print_rows
+from repro.core.automaton import compile_rules
+from repro.core.matcher import MatchEngine
+from repro.core.patterns import Rule, RuleSet
+from repro.data.generator import LogGenerator, WorkloadSpec
+
+import time
+
+
+def run(batch: int = 2048, width: int = 256) -> list:
+    spec = WorkloadSpec(num_records=batch, text_width=width)
+    gen = LogGenerator(spec)
+    data = gen.batch(0, batch).columns["content1"]
+    rows = []
+    for n_rules in (10, 100, 500, 1000, 2000):
+        rules = [Rule(i, f"r{i}", f"XXpat{i:05d}xx") for i in range(n_rules - 2)]
+        rules += [Rule(n_rules - 2, "real1", spec.planted[0].term),
+                  Rule(n_rules - 1, "real2", spec.planted[1].term)]
+        rs = RuleSet(tuple(rules))
+        for backend in ("dfa_ref", "dfa_selective", "shift_or"):
+            eng = MatchEngine(compile_rules(rs), backend=backend, ruleset=rs)
+
+            def call():
+                out = eng.match(data)
+                if hasattr(out, "block_until_ready"):
+                    out.block_until_ready()
+
+            call()                                       # compile/warm
+            samples = []
+            for _ in range(5):
+                t0 = time.perf_counter()
+                call()
+                samples.append(time.perf_counter() - t0)
+            med, lo, hi = bootstrap_median(samples)
+            rows.append(Measurement(
+                name=f"matcher/{backend}/{n_rules}_rules",
+                median_s=med / batch, ci_lo=lo / batch, ci_hi=hi / batch,
+                runs=5,
+                derived={
+                    "ns_per_record_byte": f"{med / batch / width * 1e9:.2f}",
+                    "records_per_s": f"{batch / med:,.0f}",
+                    "states": eng.engine.num_states,
+                }))
+    return rows
+
+
+def main():
+    print_rows(run())
+
+
+if __name__ == "__main__":
+    main()

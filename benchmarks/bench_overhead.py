@@ -1,0 +1,67 @@
+"""Paper Fig 5 — ingest overhead analysis: baseline pipeline (decode +
+write) vs FluxSieve (decode + 1000-rule match + enrich + write) at the same
+input; reports throughput parity and the CPU cost of matching."""
+from __future__ import annotations
+
+import tempfile
+
+from benchmarks.common import Measurement, planted_ruleset, print_rows
+from repro.core.matcher import compile_bundle
+from repro.core.query.store import SegmentStore
+from repro.core.stream_processor import StreamProcessor
+from repro.data.generator import LogGenerator, WorkloadSpec
+from repro.data.pipeline import IngestPipeline
+
+
+def run(num_records: int = 60_000, num_rules: int = 1000,
+        target_rate: float = 8_000.0) -> list:
+    """Paper Fig-5 methodology: both lanes consume the SAME fixed input
+    rate (the paper uses 10k events/s; we pace at `target_rate` below this
+    box's saturation point) and we compare sustained rate + CPU busy%."""
+    spec = WorkloadSpec(num_records=num_records, text_width=256)
+    rows = []
+    stats = {}
+    for lane in ("baseline", "fluxsieve", "fluxsieve-selective"):
+        gen = LogGenerator(spec)
+        proc = None
+        if lane.startswith("fluxsieve"):
+            # dfa_ref = paper-faithful AC-DFA; dfa_selective = §Perf D's
+            # two-pass confirm path (cheaper per record at high selectivity)
+            backend = "dfa_selective" if lane.endswith("selective") else "dfa_ref"
+            ruleset = planted_ruleset(spec, num_rules)
+            proc = StreamProcessor(compile_bundle(ruleset, spec.content_fields),
+                                   backend=backend)
+        store = SegmentStore(segment_size=num_records + 1)  # no seal cost
+        times = IngestPipeline(gen, store, proc).run(batch_size=4096,
+                                                     target_rate=target_rate)
+        stats[lane] = times
+        rows.append(Measurement(
+            name=f"overhead/{lane}",
+            median_s=(times.generate_s + times.process_s + times.store_s)
+            / times.records,
+            ci_lo=0, ci_hi=0, runs=1,
+            derived={
+                "sustained_rate": f"{times.sustained_rate():.0f}",
+                "cpu_busy_pct": f"{times.cpu_busy_fraction() * 100:.1f}",
+                "saturated_rate": f"{times.throughput():.0f}",
+                "match_enrich_s": f"{times.process_s:.3f}",
+            }))
+    base, flux = stats["baseline"], stats["fluxsieve"]
+    rows.append(Measurement(
+        name="overhead/delta", median_s=0, ci_lo=0, ci_hi=0, runs=1,
+        derived={
+            "sustained_rate_ratio":
+                f"{flux.sustained_rate() / base.sustained_rate():.3f}",
+            "cpu_busy_delta_pp":
+                f"{(flux.cpu_busy_fraction() - base.cpu_busy_fraction()) * 100:.1f}",
+            "target_rate": f"{target_rate:.0f}",
+        }))
+    return rows
+
+
+def main():
+    print_rows(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Paper Figs 10-13 — RTOLAP scaling: dataset size sweep (scaled 40x down
+from the paper's 5M-40M to fit CI), queries Q1-Q4, cold + hot runs,
+text-index baseline vs FluxSieve."""
+from __future__ import annotations
+
+import tempfile
+
+from benchmarks.common import build_world, measure, print_rows
+from repro.core.query.engine import Query
+
+
+def queries(world) -> dict:
+    spec = world.spec
+    ultra1 = next(t for t in spec.planted
+                  if t.fieldname == "content1" and t.rate < 1e-4)
+    rare1 = next(t for t in spec.planted
+                 if t.fieldname == "content1" and t.rate >= 1e-4)
+    rare2 = next(t for t in spec.planted
+                 if t.fieldname == "content2" and t.rate >= 1e-4)
+    return {
+        "q1_nonmatching": Query(terms=(("content1", spec.absent_terms[0]),),
+                                mode="count", name="q1"),
+        "q2_rare": Query(terms=(("content1", ultra1.term),), mode="copy",
+                         name="q2"),
+        "q3_count": Query(terms=(("content1", rare1.term),), mode="count",
+                          name="q3"),
+        "q4_multifield": Query(terms=(("content1", rare1.term),
+                                      ("content2", rare2.term)),
+                               mode="copy", name="q4"),
+    }
+
+
+def run(sizes=(125_000, 250_000), runs_hot: int = 5, runs_cold: int = 3) -> list:
+    rows = []
+    for n in sizes:
+        tmp = tempfile.mkdtemp(prefix=f"scale-{n}-")
+        world = build_world(num_records=n, segment_size=25_000, root=tmp)
+        for qname, q in queries(world).items():
+            for path in ("text_index", "fluxsieve"):
+                if path == "fluxsieve" and world.engine.mapper.map(q) is None:
+                    continue  # q1's absent term has no rule — by design
+                rows.append(measure(
+                    f"scale/{n}/{qname}/{path}/hot",
+                    lambda q=q, p=path: world.engine.execute(q, path=p),
+                    runs=runs_hot))
+                rows.append(measure(
+                    f"scale/{n}/{qname}/{path}/cold",
+                    lambda q=q, p=path: world.engine.execute(q, path=p,
+                                                             cold=True),
+                    runs=runs_cold, warmup=0))
+    by_name = {m.name: m for m in rows}
+    for name, m in by_name.items():
+        if "/fluxsieve/" in name:
+            base = by_name.get(name.replace("/fluxsieve/", "/text_index/"))
+            if base:
+                m.derived["speedup_vs_fts"] = f"{base.median_s / m.median_s:.1f}x"
+    return rows
+
+
+def main():
+    print_rows(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Paper Figs 14-15 — aggregated speedup of FluxSieve over the text-index
+baseline across query types, with --selectivity ultra|high and the
+"with count" aggregation variants (Q1/Q2/Q4 + count)."""
+from __future__ import annotations
+
+import argparse
+import tempfile
+
+from benchmarks.common import build_world, measure, print_rows
+from repro.core.query.engine import Query
+
+
+def run(selectivity: str = "ultra", num_records: int = 150_000,
+        runs: int = 5) -> list:
+    tmp = tempfile.mkdtemp(prefix=f"speedup-{selectivity}-")
+    world = build_world(num_records=num_records, segment_size=25_000,
+                        root=tmp)
+    spec = world.spec
+    pick_rate = (lambda r: r < 1e-4) if selectivity == "ultra" \
+        else (lambda r: r >= 1e-4)
+    t1 = next(t for t in spec.planted
+              if t.fieldname == "content1" and pick_rate(t.rate))
+    t2 = next(t for t in spec.planted
+              if t.fieldname == "content2" and pick_rate(t.rate))
+    qs = {
+        "q2_filter": Query(terms=(("content1", t1.term),), mode="copy"),
+        "q2_with_count": Query(terms=(("content1", t1.term),), mode="count"),
+        "q4_two_filters": Query(terms=(("content1", t1.term),
+                                       ("content2", t2.term)), mode="copy"),
+        "q4_with_count": Query(terms=(("content1", t1.term),
+                                      ("content2", t2.term)), mode="count"),
+    }
+    rows = []
+    for qname, q in qs.items():
+        for cold in (False, True):
+            tag = "cold" if cold else "hot"
+            base = measure(f"speedup-{selectivity}/{qname}/text_index/{tag}",
+                           lambda: world.engine.execute(q, path="text_index",
+                                                        cold=cold),
+                           runs=runs, warmup=0 if cold else 1)
+            flux = measure(f"speedup-{selectivity}/{qname}/fluxsieve/{tag}",
+                           lambda: world.engine.execute(q, path="fluxsieve",
+                                                        cold=cold),
+                           runs=runs, warmup=0 if cold else 1)
+            flux.derived["speedup"] = f"{base.median_s / flux.median_s:.1f}x"
+            rows += [base, flux]
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--selectivity", default="ultra",
+                    choices=("ultra", "high"))
+    args = ap.parse_args(argv)
+    print_rows(run(args.selectivity))
+
+
+if __name__ == "__main__":
+    main()

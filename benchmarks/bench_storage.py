@@ -1,0 +1,57 @@
+"""Paper §5.2 footnote 7 + §6 footnote 12 — storage overhead of enrichment:
+raw and compressed (zlib, the zstd stand-in) sizes of the base columns vs
+each enrichment layout (packed bitmap / 1000 bools / sparse ids)."""
+from __future__ import annotations
+
+import tempfile
+import zlib
+
+import numpy as np
+
+from benchmarks.common import Measurement, build_world, print_rows
+from repro.core import enrichment
+from repro.core.stream_processor import ENRICH_COLUMN
+
+
+def _compressed(arr: np.ndarray) -> int:
+    return len(zlib.compress(np.ascontiguousarray(arr).tobytes(), 6))
+
+
+def run(num_records: int = 80_000, num_rules: int = 1000) -> list:
+    tmp = tempfile.mkdtemp(prefix="storage-")
+    world = build_world(num_records=num_records, segment_size=num_records,
+                        root=tmp, num_rules=num_rules, index_fields=False)
+    seg = world.store.segments[0]
+    base_cols = [c for c in seg.column_names
+                 if c not in (ENRICH_COLUMN, "engine_version_id")]
+    base_raw = sum(seg.column(c).nbytes for c in base_cols)
+    base_zip = sum(_compressed(seg.column(c)) for c in base_cols)
+    bm = seg.column(ENRICH_COLUMN)
+    layouts = {
+        "bitmap": bm,
+        "bools": enrichment.to_bool_columns(bm, num_rules),
+        "sparse_ids": enrichment.to_sparse_ids(bm, 8),
+    }
+    rows = [Measurement(
+        name="storage/base_columns", median_s=0, ci_lo=0, ci_hi=0, runs=1,
+        derived={"raw_mb": f"{base_raw / 2**20:.2f}",
+                 "zlib_mb": f"{base_zip / 2**20:.2f}"})]
+    for name, arr in layouts.items():
+        raw = arr.nbytes
+        comp = _compressed(arr)
+        rows.append(Measurement(
+            name=f"storage/{name}", median_s=0, ci_lo=0, ci_hi=0, runs=1,
+            derived={
+                "raw_mb": f"{raw / 2**20:.2f}",
+                "zlib_mb": f"{comp / 2**20:.2f}",
+                "overhead_vs_base_pct": f"{comp / base_zip * 100:.2f}",
+            }))
+    return rows
+
+
+def main():
+    print_rows(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Shared benchmark harness: median-of-runs with bootstrap 95% CIs
+(paper §4.1 / good practices [10, 18]), world construction, CSV output."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.matcher import compile_bundle
+from repro.core.patterns import Rule, RuleSet
+from repro.core.query.engine import QueryEngine
+from repro.core.query.mapper import QueryMapper
+from repro.core.query.store import SegmentStore
+from repro.core.stream_processor import StreamProcessor
+from repro.data.generator import LogGenerator, WorkloadSpec
+from repro.data.pipeline import IngestPipeline
+
+
+@dataclass
+class Measurement:
+    name: str
+    median_s: float
+    ci_lo: float
+    ci_hi: float
+    runs: int
+    derived: dict = field(default_factory=dict)
+
+    def csv(self) -> str:
+        extra = ";".join(f"{k}={v}" for k, v in self.derived.items())
+        return (f"{self.name},{self.median_s * 1e6:.1f},"
+                f"[{self.ci_lo * 1e6:.1f}..{self.ci_hi * 1e6:.1f}]us,"
+                f"n={self.runs},{extra}")
+
+
+def bootstrap_median(samples, n_boot: int = 2000, seed: int = 0) -> tuple:
+    """-> (median, ci_lo, ci_hi) via percentile bootstrap of the median."""
+    s = np.asarray(samples, np.float64)
+    rng = np.random.default_rng(seed)
+    meds = np.median(
+        s[rng.integers(0, len(s), size=(n_boot, len(s)))], axis=1)
+    return float(np.median(s)), float(np.percentile(meds, 2.5)), \
+        float(np.percentile(meds, 97.5))
+
+
+def measure(name: str, fn, *, runs: int = 9, warmup: int = 1,
+            setup=None, derived=None) -> Measurement:
+    for _ in range(warmup):
+        if setup:
+            setup()
+        fn()
+    samples = []
+    for _ in range(runs):
+        if setup:
+            setup()
+        t0 = time.perf_counter()
+        fn()
+        samples.append(time.perf_counter() - t0)
+    med, lo, hi = bootstrap_median(samples)
+    return Measurement(name=name, median_s=med, ci_lo=lo, ci_hi=hi,
+                       runs=runs, derived=derived or {})
+
+
+# ---------------------------------------------------------------------------
+# World construction
+# ---------------------------------------------------------------------------
+
+def planted_ruleset(spec: WorkloadSpec, num_rules: int = 1000) -> RuleSet:
+    """Planted-term rules + fillers up to `num_rules` (paper: 1000 rules)."""
+    rules = [Rule(i, t.term, t.term, fields=(t.fieldname,))
+             for i, t in enumerate(spec.planted)]
+    for i in range(len(rules), num_rules):
+        rules.append(Rule(i, f"filler{i}", f"QQfiller{i:04d}qq", fields=("*",)))
+    return RuleSet(tuple(rules))
+
+
+@dataclass
+class World:
+    spec: WorkloadSpec
+    gen: LogGenerator
+    ruleset: RuleSet
+    store: SegmentStore
+    engine: QueryEngine
+    ingest_times: object
+
+
+def build_world(*, num_records: int, segment_size: int, root,
+                num_rules: int = 1000, ultra_rate: float = 2e-5,
+                high_rate: float = 2e-4, text_width: int = 256,
+                index_fields: bool = True, workers: int = 1,
+                seed: int = 7) -> World:
+    spec = WorkloadSpec(num_records=num_records, ultra_rate=ultra_rate,
+                        high_rate=high_rate, text_width=text_width, seed=seed)
+    gen = LogGenerator(spec)
+    ruleset = planted_ruleset(spec, num_rules)
+    proc = StreamProcessor(compile_bundle(ruleset, spec.content_fields),
+                           backend="dfa_ref")
+    store = SegmentStore(
+        segment_size=segment_size, root=root,
+        index_fields=spec.content_fields if index_fields else ())
+    times = IngestPipeline(gen, store, proc).run(batch_size=4096)
+    engine = QueryEngine(store, mapper=QueryMapper(ruleset), workers=workers)
+    return World(spec=spec, gen=gen, ruleset=ruleset, store=store,
+                 engine=engine, ingest_times=times)
+
+
+def print_rows(rows) -> None:
+    for m in rows:
+        print(m.csv(), flush=True)

@@ -1,0 +1,65 @@
+"""Run every benchmark (one per paper table/figure) at CI-friendly sizes.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+CSV schema: name,median_us,[ci_lo..ci_hi]us,n=runs,derived...
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sizes (seconds per bench)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    from benchmarks import (bench_layout_grid, bench_matcher, bench_overhead,
+                            bench_scale, bench_speedup, bench_storage,
+                            bench_update)
+    from benchmarks.common import print_rows
+
+    suite = {
+        "overhead": lambda: bench_overhead.run(
+            num_records=20_000 if args.quick else 60_000),
+        "matcher": lambda: bench_matcher.run(
+            batch=512 if args.quick else 2048),
+        "update": bench_update.run,
+        "storage": lambda: bench_storage.run(
+            num_records=20_000 if args.quick else 80_000),
+        "layout_grid": lambda: bench_layout_grid.run(
+            num_records=40_000 if args.quick else 100_000,
+            runs=3 if args.quick else 5),
+        "scale": lambda: bench_scale.run(
+            sizes=(40_000, 80_000) if args.quick else (125_000, 250_000),
+            runs_hot=3 if args.quick else 5,
+            runs_cold=2 if args.quick else 3),
+        "speedup_ultra": lambda: bench_speedup.run(
+            "ultra", num_records=40_000 if args.quick else 150_000,
+            runs=3 if args.quick else 5),
+        "speedup_high": lambda: bench_speedup.run(
+            "high", num_records=40_000 if args.quick else 150_000,
+            runs=3 if args.quick else 5),
+    }
+    failures = 0
+    for name, fn in suite.items():
+        if args.only and name != args.only:
+            continue
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            print_rows(fn())
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

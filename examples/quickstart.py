@@ -1,0 +1,58 @@
+"""FluxSieve quickstart: rules -> in-stream enrichment -> queries.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.matcher import compile_bundle
+from repro.core.patterns import Rule, RuleSet
+from repro.core.query.engine import Query, QueryEngine
+from repro.core.query.mapper import QueryMapper
+from repro.core.query.store import SegmentStore
+from repro.core.records import RecordBatch, encode_texts
+from repro.core.stream_processor import StreamProcessor
+
+# 1. Filtering conditions the analytical plane cares about (paper §3.3)
+rules = RuleSet((
+    Rule(0, "errors", "ERROR|FATAL", fields=("message",)),
+    Rule(1, "oom", "OutOfMemory", fields=("message",)),
+    Rule(2, "user_sessions", "session_[0-9]", fields=("context",)),
+))
+
+# 2. Stream processor: single-pass multi-pattern match + enrichment
+processor = StreamProcessor(compile_bundle(rules, ("message", "context")))
+
+batch = RecordBatch({
+    "timestamp": np.arange(5, dtype=np.int64),
+    "message": encode_texts([
+        "request ok in 12ms",
+        "ERROR db timeout after retry",
+        "java.lang.OutOfMemoryError: heap",
+        "shutdown complete",
+        "FATAL disk failure on /dev/sda",
+    ], 128),
+    "context": encode_texts([
+        "session_3 user=a", "session_7 user=b", "pod=9", "session_1 user=c",
+        "pod=2",
+    ], 64),
+})
+enriched = processor.process(batch)
+print("rule bitmaps:", enriched.columns["rule_bitmap"][:, 0])
+
+# 3. Analytical plane: columnar store + three physical query paths
+store = SegmentStore(segment_size=1024)
+store.append(enriched)
+store.seal()
+engine = QueryEngine(store, mapper=QueryMapper(rules))
+
+q = Query(terms=(("message", "ERROR|FATAL"),), mode="copy")
+res = engine.execute(q, path="fluxsieve")
+print(f"fluxsieve path: {res.count} records in {res.latency_s * 1e3:.2f} ms")
+
+q2 = Query(terms=(("message", "OutOfMemory"),), mode="count")
+res2 = engine.execute(q2)          # auto: rule registered -> fast path
+print(f"auto path={res2.path}: count={res2.count}")
+
+q3 = Query(terms=(("context", "pod=9"),), mode="count")
+res3 = engine.execute(q3)          # not a rule -> falls back to scan
+print(f"auto path={res3.path}: count={res3.count}")

@@ -1,0 +1,350 @@
+"""Architecture configuration system.
+
+Every assigned architecture is expressed as an ``ArchConfig`` — a frozen,
+hashable description of the model *and* of how its layer stack is assembled
+(``stack()`` -> scan segments).  The same config object drives:
+
+  * parameter initialization / shape derivation (models/model.py)
+  * train_step / serve_step construction (train/, serve/)
+  * the multi-pod dry-run (launch/dryrun.py) via ``input_specs()``
+  * smoke tests (reduced() shrinks every dimension but keeps the family).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Layer plan
+# ---------------------------------------------------------------------------
+
+# Mixer kinds.
+ATTN = "attn"            # full (causal or bidirectional) attention
+SWA = "swa"              # sliding-window attention
+RWKV6 = "rwkv6"          # RWKV-6 "Finch" token-shift + WKV6 recurrence
+MAMBA2 = "mamba2"        # Mamba-2 SSD block
+SHARED_ATTN = "shared_attn"  # full attention with weights shared across sites
+
+# MLP kinds.
+DENSE = "dense"          # SwiGLU MLP
+MOE = "moe"              # routed experts (+ optional shared experts)
+NONE = "none"            # mixer subsumes the MLP (rwkv6 channel-mix is its own)
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One layer inside a scan segment body."""
+    mixer: str
+    mlp: str = DENSE
+
+
+@dataclass(frozen=True)
+class StackSegment:
+    """``repeat`` iterations of a scan whose body applies ``layers`` in order."""
+    repeat: int
+    layers: tuple  # tuple[LayerSpec, ...]
+
+
+# ---------------------------------------------------------------------------
+# Shapes (assigned input-shape set for the LM family)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# ArchConfig
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // num_heads
+
+    # attention options
+    causal: bool = True
+    swa_window: int = 1_024
+    global_interval: int = 0       # gemma3: every Nth layer is global (5:1 -> 6)
+    rope_theta: float = 10_000.0
+
+    # MoE options
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    moe_top_k: int = 0
+    d_ff_expert: int = 0
+    first_k_dense: int = 0         # leading layers that stay dense (deepseek: 1)
+    capacity_factor: float = 1.25
+
+    # SSM options
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    shared_attn_interval: int = 0  # zamba2: shared attention every N mamba layers
+
+    # modality frontend ("none" | "vision_stub" | "audio_stub")
+    frontend: str = "none"
+    frontend_tokens: int = 256     # vision: patches in the prefix
+    frontend_dim: int = 1_280      # audio: frame-embedding dim
+
+    # capabilities
+    supports_decode: bool = True
+    subquadratic: bool = False     # can run long_500k
+
+    # numerics
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    # full-attention KV cache storage: bfloat16 | int8 (+bf16 per-token
+    # scales; §Perf hillclimb C — halves decode HBM traffic)
+    kv_cache_dtype: str = "bfloat16"
+
+    # citation string from the assignment table
+    source: str = ""
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    # -- layer plan ---------------------------------------------------------
+    def stack(self) -> tuple:
+        """Return the scan-segment plan for this architecture."""
+        mlp = MOE if self.num_experts > 0 else DENSE
+        if self.family == "ssm":                      # rwkv6: mixer includes its own channel-mix
+            return (StackSegment(self.num_layers, (LayerSpec(RWKV6, NONE),)),)
+        if self.family == "hybrid":                   # zamba2
+            iv = self.shared_attn_interval
+            groups, rem = divmod(self.num_layers, iv)
+            segs = []
+            if groups:
+                segs.append(StackSegment(groups, tuple([LayerSpec(MAMBA2, DENSE)] * iv
+                                                       + [LayerSpec(SHARED_ATTN, DENSE)])))
+            if rem:
+                segs.append(StackSegment(1, tuple([LayerSpec(MAMBA2, DENSE)] * rem)))
+            return tuple(segs)
+        if self.global_interval > 1:                  # gemma3 local:global mix
+            iv = self.global_interval
+            groups, rem = divmod(self.num_layers, iv)
+            segs = []
+            if groups:
+                segs.append(StackSegment(groups, tuple([LayerSpec(SWA, mlp)] * (iv - 1)
+                                                       + [LayerSpec(ATTN, mlp)])))
+            if rem:
+                segs.append(StackSegment(1, tuple([LayerSpec(SWA, mlp)] * rem)))
+            return tuple(segs)
+        if self.num_experts > 0 and self.first_k_dense > 0:
+            return (StackSegment(1, tuple([LayerSpec(ATTN, DENSE)] * self.first_k_dense)),
+                    StackSegment(self.num_layers - self.first_k_dense, (LayerSpec(ATTN, MOE),)))
+        return (StackSegment(self.num_layers, (LayerSpec(ATTN, mlp),)),)
+
+    # -- bookkeeping ---------------------------------------------------------
+    def param_count(self) -> int:
+        """Approximate parameter count N (embedding included once)."""
+        total = self.vocab_size * self.d_model        # embedding (tied head)
+        for seg in self.stack():
+            for spec in seg.layers:
+                total += seg.repeat * _layer_params(self, spec)
+        total += self.d_model                          # final norm
+        if self.frontend == "audio_stub":
+            total += self.frontend_dim * self.d_model
+        # shared attention params counted once
+        if any(s.mixer == SHARED_ATTN for seg in self.stack() for s in seg.layers):
+            total += _attn_params(self)
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed-to experts count)."""
+        if self.num_experts == 0:
+            return self.param_count()
+        total = self.vocab_size * self.d_model + self.d_model
+        for seg in self.stack():
+            for spec in seg.layers:
+                n = _attn_params(self) if spec.mixer in (ATTN, SWA, SHARED_ATTN) else _mixer_params(self, spec.mixer)
+                n += 2 * self.d_model  # norms
+                if spec.mlp == DENSE:
+                    n += 3 * self.d_model * self.d_ff
+                elif spec.mlp == MOE:
+                    n += self.num_shared_experts * 3 * self.d_model * self.d_ff_expert
+                    n += self.moe_top_k * 3 * self.d_model * self.d_ff_expert
+                    n += self.d_model * self.num_experts  # router
+                total += seg.repeat * n
+        return total
+
+    def shape_supported(self, shape_name: str) -> bool:
+        spec = SHAPES[shape_name]
+        if spec.kind == "decode":
+            if not self.supports_decode:
+                return False
+            if spec.seq_len > 100_000 and not self.subquadratic:
+                return False
+        return True
+
+    def skip_reason(self, shape_name: str) -> str:
+        spec = SHAPES[shape_name]
+        if spec.kind == "decode" and not self.supports_decode:
+            return "encoder-only architecture has no decode step"
+        if spec.kind == "decode" and spec.seq_len > 100_000 and not self.subquadratic:
+            return ("full-attention KV cache at 524288 tokens exceeds HBM; "
+                    "arch has no sub-quadratic path (see DESIGN.md)")
+        return ""
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        kw = dict(
+            num_layers=max(2, min(4, self.num_layers)),
+            d_model=128,
+            num_heads=4,
+            num_kv_heads=min(4, max(1, self.num_kv_heads * 4 // self.num_heads)),
+            head_dim=32,
+            d_ff=256,
+            vocab_size=512,
+            frontend_tokens=8,
+            frontend_dim=64,
+            swa_window=32,
+        )
+        if self.num_experts > 0:
+            kw.update(num_experts=8, d_ff_expert=64,
+                      moe_top_k=min(self.moe_top_k, 2),
+                      num_shared_experts=min(self.num_shared_experts, 1),
+                      first_k_dense=min(self.first_k_dense, 1))
+        if self.ssm_state > 0:
+            kw.update(ssm_state=16)
+        if self.shared_attn_interval > 0:
+            kw.update(shared_attn_interval=2, num_layers=4)
+        if self.global_interval > 0:
+            kw.update(global_interval=2, num_layers=4)
+        return dataclasses.replace(self, name=self.name + "-smoke", **kw)
+
+
+def _attn_params(cfg: ArchConfig) -> int:
+    q = cfg.d_model * cfg.num_heads * cfg.head_dim
+    kv = 2 * cfg.d_model * cfg.num_kv_heads * cfg.head_dim
+    o = cfg.num_heads * cfg.head_dim * cfg.d_model
+    return q + kv + o
+
+
+def _mixer_params(cfg: ArchConfig, mixer: str) -> int:
+    d = cfg.d_model
+    if mixer in (ATTN, SWA, SHARED_ATTN):
+        return _attn_params(cfg)
+    if mixer == RWKV6:
+        # time-mix: wr/wk/wv/wg/wo (5 d^2) + decay lora (128d) + small vecs;
+        # channel-mix: cm_r (d^2) + cm_k/cm_v (2 d*d_ff)
+        from repro.models.ssm import RWKV_LORA_RANK
+        tm = 5 * d * d + 2 * d * RWKV_LORA_RANK + 10 * d
+        cm = d * d + 2 * d * cfg.d_ff
+        return tm + cm
+    if mixer == MAMBA2:
+        d_in = cfg.ssm_expand * d
+        return d * (2 * d_in + 2 * cfg.ssm_state) + d_in * d + d_in * cfg.ssm_conv
+    raise ValueError(mixer)
+
+
+def _layer_params(cfg: ArchConfig, spec: LayerSpec) -> int:
+    n = 2 * cfg.d_model  # norms
+    if spec.mixer == SHARED_ATTN:
+        pass  # shared weights counted once by caller
+    else:
+        n += _mixer_params(cfg, spec.mixer)
+    if spec.mlp == DENSE:
+        n += 3 * cfg.d_model * cfg.d_ff
+    elif spec.mlp == MOE:
+        n += cfg.d_model * cfg.num_experts
+        n += (cfg.num_experts + cfg.num_shared_experts) * 3 * cfg.d_model * cfg.d_ff_expert
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; never allocate)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    """Model inputs for one (arch x shape) cell as ShapeDtypeStructs.
+
+    train  -> {tokens, labels [, vision_embeds | frames]}
+    prefill-> {tokens [, vision_embeds | frames]}
+    decode -> {tokens (B,1), cache_len scalar}  (the KV cache itself is part of
+              the serve state, built by serve.kv_cache.cache_specs)
+    """
+    spec = SHAPES[shape_name]
+    B, S = spec.global_batch, spec.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    compute = jnp.bfloat16
+
+    if spec.kind == "train":
+        out = {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+    elif spec.kind == "prefill":
+        out = {"tokens": sds((B, S), i32)}
+    else:  # decode: one new token against a cache of S
+        out = {"tokens": sds((B, 1), i32), "cache_len": sds((), i32)}
+
+    if cfg.frontend == "vision_stub" and spec.kind != "decode":
+        out["vision_embeds"] = sds((B, cfg.frontend_tokens, cfg.d_model), compute)
+        out["tokens"] = sds((B, S - cfg.frontend_tokens), i32)
+        if spec.kind == "train":
+            out["labels"] = sds((B, S - cfg.frontend_tokens), i32)
+    if cfg.frontend == "audio_stub" and spec.kind != "decode":
+        # precomputed frame embeddings replace the token stream entirely
+        out = {"frames": sds((B, S, cfg.frontend_dim), compute)}
+        if spec.kind == "train":
+            out["labels"] = sds((B, S), i32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ArchConfig:
+    if not _REGISTRY:
+        _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> list:
+    if not _REGISTRY:
+        _load_all()
+    return sorted(_REGISTRY)
+
+
+def _load_all():
+    # import for registration side effects
+    from repro.configs import (  # noqa: F401
+        rwkv6_7b, phi3_medium_14b, gemma3_27b, yi_34b, phi3_mini_3_8b,
+        llama4_scout_17b_a16e, deepseek_moe_16b, zamba2_1_2b,
+        internvl2_76b, hubert_xlarge,
+    )

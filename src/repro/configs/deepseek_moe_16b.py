@@ -1,0 +1,23 @@
+"""DeepSeekMoE 16B — 2 shared + 64 routed top-6, fine-grained experts
+[arXiv:2401.06066; hf]."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,               # nominal per-expert width (spec: d_ff=1408)
+    vocab_size=102400,
+    num_experts=64,
+    num_shared_experts=2,
+    moe_top_k=6,
+    d_ff_expert=1408,
+    first_k_dense=1,         # layer 0 is a dense MLP (d_ff_dense = 8 * 1408)
+    supports_decode=True,
+    subquadratic=False,
+    source="arXiv:2401.06066; hf",
+))

@@ -1,0 +1,20 @@
+"""Gemma-3 27B — 5:1 local:global attention, 128k ctx [hf:google/gemma-3-1b-pt; unverified]."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="gemma3-27b",
+    family="dense",
+    num_layers=62,
+    d_model=5376,
+    num_heads=32,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=21504,
+    vocab_size=262144,
+    global_interval=6,       # 5 local (SWA) : 1 global
+    swa_window=1024,
+    rope_theta=1_000_000.0,
+    supports_decode=True,
+    subquadratic=False,      # global layers are full attention -> long_500k skipped
+    source="hf:google/gemma-3-1b-pt; unverified",
+))

@@ -1,0 +1,25 @@
+"""HuBERT X-Large — encoder-only (w2v2 arch) [arXiv:2106.07447; unverified].
+
+The conv feature-extractor frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings (B, S, frontend_dim); a learned linear projects
+them into the backbone. Encoder-only -> decode shapes are skipped.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="hubert-xlarge",
+    family="audio",
+    num_layers=48,
+    d_model=1280,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=80,
+    d_ff=5120,
+    vocab_size=504,
+    causal=False,            # bidirectional encoder
+    frontend="audio_stub",
+    frontend_dim=1280,
+    supports_decode=False,
+    subquadratic=False,
+    source="arXiv:2106.07447; unverified",
+))

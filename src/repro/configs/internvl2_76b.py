@@ -1,0 +1,23 @@
+"""InternVL2-76B — InternViT + InternLM2 backbone [arXiv:2404.16821; unverified].
+
+The InternViT frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed patch embeddings occupying the first ``frontend_tokens`` positions.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="internvl2-76b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    frontend="vision_stub",
+    frontend_tokens=256,
+    supports_decode=True,
+    subquadratic=False,
+    source="arXiv:2404.16821; unverified",
+))

@@ -1,0 +1,23 @@
+"""Llama-4 Scout 17B-active/16E — MoE top-1 + shared expert, early fusion
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,               # shared-path MLP width
+    vocab_size=202048,
+    num_experts=16,
+    num_shared_experts=1,
+    moe_top_k=1,
+    d_ff_expert=8192,
+    rope_theta=500_000.0,
+    supports_decode=True,
+    subquadratic=False,
+    source="hf:meta-llama/Llama-4-Scout-17B-16E; unverified",
+))

@@ -1,0 +1,17 @@
+"""Phi-3-mini 3.8B — RoPE SwiGLU, MHA (kv=32) [arXiv:2404.14219; unverified]."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="phi3-mini-3.8b",
+    family="dense",
+    num_layers=32,
+    d_model=3072,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=96,
+    d_ff=8192,
+    vocab_size=32064,
+    supports_decode=True,
+    subquadratic=False,
+    source="arXiv:2404.14219; unverified",
+))

@@ -1,0 +1,18 @@
+"""RWKV-6 "Finch" 7B — attention-free, data-dependent decay [arXiv:2404.05892; hf]."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=64,            # head_size 64
+    num_kv_heads=64,
+    head_dim=64,
+    d_ff=14336,              # channel-mix width
+    vocab_size=65536,
+    causal=True,
+    supports_decode=True,
+    subquadratic=True,       # O(1) recurrent state -> long_500k runs
+    source="arXiv:2404.05892; hf",
+))

@@ -1,0 +1,17 @@
+"""Yi-34B — llama-arch GQA [arXiv:2403.04652; hf]."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="yi-34b",
+    family="dense",
+    num_layers=60,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    vocab_size=64000,
+    supports_decode=True,
+    subquadratic=False,
+    source="arXiv:2403.04652; hf",
+))

@@ -1,0 +1,21 @@
+"""Zamba2-1.2B — Mamba2 backbone + shared attention blocks [arXiv:2411.15242; hf]."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    num_layers=38,           # mamba2 layers; shared attn interleaved every 6
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    shared_attn_interval=6,
+    supports_decode=True,
+    subquadratic=True,       # SSD states are O(1); shared-attn KV seq-sharded
+    source="arXiv:2411.15242; hf",
+))

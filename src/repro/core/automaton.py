@@ -1,0 +1,216 @@
+"""Aho-Corasick multi-pattern automaton: host-side (numpy) construction,
+alphabet-class compression, shape-bucket padding, and checksummed
+serialization (the artifact the Updater ships through the object store —
+the TPU-side analogue of a compiled Hyperscan database, paper §3.3/3.4).
+
+The compiled artifact is pure data (int32/uint32 tables), so a "hot swap"
+on the stream processor is just replacing device arrays — the jitted
+matcher never recompiles as long as the shape bucket is unchanged.
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+from dataclasses import dataclass, replace
+
+import numpy as np
+
+from repro.core.patterns import RuleSet
+
+STATE_BUCKETS = (512, 1024, 2048, 4096, 8192, 16384, 32768, 131072)
+CLASS_BUCKETS = (16, 32, 64, 128, 256)
+WORD_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128)
+WORD_BITS = 32
+
+
+def words_for_rules(num_rules: int) -> int:
+    """Bitmap words for `num_rules`, bucketed so the jitted matcher keeps a
+    stable shape while the rule set grows (hot swap without retrace)."""
+    need = max(1, (num_rules + WORD_BITS - 1) // WORD_BITS)
+    for b in WORD_BUCKETS:
+        if need <= b:
+            return b
+    raise ValueError(f"too many rules: {num_rules}")
+
+
+@dataclass(frozen=True)
+class CompiledEngine:
+    """Padded DFA tables.
+
+    delta:        (S_pad, n_classes) int32   next-state table
+    emit:         (S_pad, W) uint32          rule bitmap emitted when entering a state
+    byte_classes: (256,) int32               byte -> alphabet equivalence class
+    """
+    delta: np.ndarray
+    emit: np.ndarray
+    byte_classes: np.ndarray
+    num_states: int
+    num_rules: int
+    version: str            # rule-set hash
+    field: str = "*"
+
+    @property
+    def bucket(self) -> int:
+        return self.delta.shape[0]
+
+    @property
+    def words(self) -> int:
+        return self.emit.shape[1]
+
+    @property
+    def n_classes(self) -> int:
+        return self.delta.shape[1]
+
+    def checksum(self) -> str:
+        h = hashlib.sha256()
+        for a in (self.delta, self.emit, self.byte_classes):
+            h.update(np.ascontiguousarray(a).tobytes())
+        h.update(f"{self.num_states}/{self.num_rules}/{self.version}/{self.field}".encode())
+        return h.hexdigest()
+
+    def serialize(self) -> bytes:
+        buf = io.BytesIO()
+        np.savez_compressed(
+            buf, delta=self.delta, emit=self.emit, byte_classes=self.byte_classes,
+            meta=np.array([self.num_states, self.num_rules], np.int64),
+            version=np.array(self.version), field=np.array(self.field),
+            checksum=np.array(self.checksum()))
+        return buf.getvalue()
+
+    @staticmethod
+    def deserialize(data: bytes, verify: bool = True) -> "CompiledEngine":
+        try:
+            z = np.load(io.BytesIO(data), allow_pickle=False)
+            eng = CompiledEngine(
+                delta=z["delta"], emit=z["emit"],
+                byte_classes=z["byte_classes"],
+                num_states=int(z["meta"][0]), num_rules=int(z["meta"][1]),
+                version=str(z["version"]), field=str(z["field"]))
+        except ValueError:
+            raise
+        except Exception as e:  # container damage (zlib/zip/key errors)
+            raise ValueError(f"corrupt engine artifact: {e}") from e
+        if verify and str(z["checksum"]) != eng.checksum():
+            raise ValueError("engine checksum mismatch — corrupt artifact")
+        return eng
+
+
+def compile_rules(ruleset: RuleSet, field: str = "*", *,
+                  compress_alphabet: bool = True,
+                  bucket: int = 0) -> CompiledEngine:
+    """Build the AC DFA for every rule applicable to `field`."""
+    rules = ruleset.rules_for_field(field) if field != "*" else list(ruleset.rules)
+    pats = []
+    ci_any = any(r.case_insensitive for r in rules)
+    for r in rules:
+        for lit in r.literals():
+            b = lit.encode("utf-8", "ignore")
+            pats.append((r.rule_id, b))
+    num_rules = ruleset.num_rules
+    W = words_for_rules(num_rules)
+
+    # --- trie ---
+    goto = [dict()]          # state -> {byte: state}
+    emit_sets = [set()]
+    for rid, pat in pats:
+        s = 0
+        for ch in pat:
+            if ch not in goto[s]:
+                goto.append(dict())
+                emit_sets.append(set())
+                goto[s][ch] = len(goto) - 1
+            s = goto[s][ch]
+        emit_sets[s].add(rid)
+
+    n = len(goto)
+    # --- BFS fail links; flatten into a dense DFA over raw bytes ---
+    fail = np.zeros(n, np.int32)
+    delta = np.zeros((n, 256), np.int32)
+    from collections import deque
+    q = deque()
+    for ch in range(256):
+        nxt = goto[0].get(ch, 0)
+        delta[0, ch] = nxt
+        if nxt:
+            fail[nxt] = 0
+            q.append(nxt)
+    while q:
+        s = q.popleft()
+        emit_sets[s] |= emit_sets[fail[s]]
+        for ch, t in goto[s].items():
+            fail[t] = delta[fail[s], ch]
+            q.append(t)
+        for ch in range(256):
+            if ch in goto[s]:
+                delta[s, ch] = goto[s][ch]
+            else:
+                delta[s, ch] = delta[fail[s], ch]
+
+    emit = np.zeros((n, W), np.uint32)
+    for s, rs in enumerate(emit_sets):
+        for rid in rs:
+            emit[s, rid // WORD_BITS] |= np.uint32(1 << (rid % WORD_BITS))
+
+    # --- case folding: route upper-case bytes through lower-case columns ---
+    if ci_any:
+        for c in range(ord("A"), ord("Z") + 1):
+            delta[:, c] = delta[:, c + 32]
+
+    # --- alphabet equivalence classes (Hyperscan-shufti-flavoured shrink):
+    # two byte columns are equivalent if identical over all states ---
+    if compress_alphabet:
+        class_of: dict = {}
+        byte_classes = np.zeros(256, np.int32)
+        rep_cols = []
+        for c in range(256):
+            key = delta[:, c].tobytes()
+            if key not in class_of:
+                class_of[key] = len(rep_cols)
+                rep_cols.append(delta[:, c])
+            byte_classes[c] = class_of[key]
+        n_classes = len(rep_cols)
+        n_classes_pad = _pick(max(n_classes, 8), CLASS_BUCKETS)
+        delta_c = np.zeros((n, n_classes_pad), np.int32)
+        delta_c[:, :n_classes] = np.stack(rep_cols, axis=1)
+        delta = delta_c
+    else:
+        byte_classes = np.arange(256, dtype=np.int32)
+
+    # --- pad states to a bucket so jit shapes are stable across versions ---
+    S_pad = bucket or _pick_bucket(n)
+    if n > S_pad:
+        raise ValueError(f"{n} states exceed bucket {S_pad}")
+    delta_p = np.zeros((S_pad, delta.shape[1]), np.int32)
+    delta_p[:n] = delta
+    emit_p = np.zeros((S_pad, W), np.uint32)
+    emit_p[:n] = emit
+    return CompiledEngine(delta=delta_p, emit=emit_p, byte_classes=byte_classes,
+                          num_states=n, num_rules=num_rules,
+                          version=ruleset.version_hash(), field=field)
+
+
+def _pick_bucket(n: int) -> int:
+    return _pick(n, STATE_BUCKETS)
+
+
+def _pick(n: int, buckets: tuple) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(f"no bucket fits {n} (buckets: {buckets})")
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def match_oracle(engine: CompiledEngine, data: np.ndarray) -> np.ndarray:
+    """Reference numpy matcher: data (N, L) uint8 -> bitmaps (N, W) uint32."""
+    N, L = data.shape
+    state = np.zeros(N, np.int32)
+    bm = np.zeros((N, engine.words), np.uint32)
+    classes = engine.byte_classes
+    for i in range(L):
+        state = engine.delta[state, classes[data[:, i]]]
+        bm |= engine.emit[state]
+    return bm

@@ -1,0 +1,60 @@
+"""Control-plane bus — the Kafka stand-in (paper §3.4.1/§3.4.3).
+
+Semantics preserved: named topics; ordered, durable, at-least-once delivery;
+per-consumer-group offsets (poll without commit re-delivers); small messages
+only (the payload is an ObjectRef, never the compiled engine itself — the
+paper's "reference-based distribution model").  Thread-safe, in-process.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+MATCHER_UPDATES = "matcher-updates"
+MATCHER_ACKS = "matcher-acks"
+
+
+@dataclass(frozen=True)
+class Message:
+    topic: str
+    offset: int
+    value: dict
+    timestamp: float
+
+
+class ControlBus:
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._topics: dict = {}     # topic -> list[Message]
+        self._offsets: dict = {}    # (topic, group) -> committed offset
+
+    def publish(self, topic: str, value: dict) -> int:
+        with self._lock:
+            log = self._topics.setdefault(topic, [])
+            msg = Message(topic=topic, offset=len(log), value=dict(value),
+                          timestamp=time.time())
+            log.append(msg)
+            return msg.offset
+
+    def poll(self, topic: str, group: str, max_messages: int = 100) -> list:
+        """At-least-once: returns messages past the committed offset; the
+        same messages are returned again until ``commit`` advances it."""
+        with self._lock:
+            log = self._topics.get(topic, [])
+            start = self._offsets.get((topic, group), 0)
+            return list(log[start:start + max_messages])
+
+    def commit(self, topic: str, group: str, offset: int) -> None:
+        with self._lock:
+            cur = self._offsets.get((topic, group), 0)
+            self._offsets[(topic, group)] = max(cur, offset + 1)
+
+    def end_offset(self, topic: str) -> int:
+        with self._lock:
+            return len(self._topics.get(topic, []))
+
+    def messages(self, topic: str, start: int = 0) -> list:
+        """Raw log read (used by the updater to watch acks)."""
+        with self._lock:
+            return list(self._topics.get(topic, [])[start:])

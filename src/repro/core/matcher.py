@@ -1,0 +1,170 @@
+"""MatchEngine — the executable multi-pattern matcher (paper §3.3).
+
+Wraps a compiled automaton (``core.automaton.CompiledEngine``) with device
+arrays and a jitted single-pass dispatch.  Engine *backends* select the
+TPU-native algorithm (DESIGN.md §2):
+
+    dfa        AC-DFA batch scan — paper-faithful default (Pallas kernel)
+    dfa_ref    pure-jnp oracle of the same
+    shift_or   bit-parallel shift-AND (literals <= 32 B) — beyond-paper
+    parallel   associative-scan DFA (small automata) — beyond-paper
+
+An ``EngineBundle`` groups one engine per record text field (paper §6.1 runs
+"one Pattern Matching Engine instance per text field") plus version metadata;
+it is the serializable artifact the Updater ships through the object store.
+Because table shapes are bucketed (automaton.py), swapping a new bundle into
+a running matcher re-uses every jit cache entry — the hot swap is O(bytes).
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.automaton import CompiledEngine, compile_rules, words_for_rules
+from repro.core.patterns import RuleSet
+from repro.kernels.dfa_scan.ops import (dfa_scan, dfa_scan_selective,
+                                        pack_delta_any)
+from repro.kernels.shift_or import ops as shift_or_ops
+
+BACKENDS = ("dfa", "dfa_ref", "dfa_selective", "shift_or", "parallel")
+
+
+class MatchEngine:
+    """One compiled automaton, resident on device, with stable jit shapes."""
+
+    def __init__(self, engine: CompiledEngine, *, backend: str = "dfa_ref",
+                 ruleset: RuleSet = None, block_n: int = 256,
+                 interpret: bool = True):
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}")
+        self.backend = backend
+        self.block_n = block_n
+        self.interpret = interpret
+        self.engine = engine
+        self.version = engine.version
+        self.num_rules = engine.num_rules
+        self.field = engine.field
+        self._delta = jnp.asarray(engine.delta)
+        self._emit = jnp.asarray(engine.emit)
+        self._classes = jnp.asarray(engine.byte_classes)
+        self._delta2 = None
+        if backend == "dfa_selective":
+            # Hyperscan-style confirm path (§Perf hillclimb D): packed
+            # any-accept transition table for the prefilter pass
+            self._delta2 = pack_delta_any(engine.delta, engine.emit)
+        self._shift_or = None
+        if backend == "shift_or":
+            if ruleset is None:
+                raise ValueError("shift_or backend needs the RuleSet to pack literals")
+            self._shift_or = shift_or_ops.compile_shift_or(ruleset, engine.field)
+
+    @property
+    def words(self) -> int:
+        return self.engine.words
+
+    def match(self, data) -> jnp.ndarray:
+        """data: (N, L) uint8 -> (N, W) uint32 packed rule bitmaps."""
+        if self.backend == "dfa_selective":
+            return dfa_scan_selective(np.asarray(data), self.engine.delta,
+                                      self.engine.emit,
+                                      self.engine.byte_classes,
+                                      delta2=self._delta2)
+        data = jnp.asarray(data)
+        if self.backend == "shift_or":
+            bm = shift_or_ops.shift_or_match(data, self._shift_or,
+                                             backend="pallas",
+                                             block_n=self.block_n,
+                                             interpret=self.interpret)
+            # shift_or packs exactly ceil(rules/32) words; widen to the bucket
+            W = self.words
+            if bm.shape[1] < W:
+                bm = jnp.pad(bm, ((0, 0), (0, W - bm.shape[1])))
+            return bm
+        backend = {"dfa": "pallas", "dfa_ref": "ref", "parallel": "parallel"}[self.backend]
+        return dfa_scan(data, self._delta, self._emit, self._classes,
+                        backend=backend, block_n=self.block_n,
+                        interpret=self.interpret)
+
+
+@dataclass(frozen=True)
+class EngineBundle:
+    """Versioned set of per-field compiled engines (the deployable artifact)."""
+    version: str
+    num_rules: int
+    engines: dict            # field -> CompiledEngine
+    ruleset_json: str = ""   # carried so shift_or backends can re-pack literals
+
+    @property
+    def fields(self) -> tuple:
+        return tuple(sorted(self.engines))
+
+    @property
+    def words(self) -> int:
+        return words_for_rules(self.num_rules)
+
+    def checksum(self) -> str:
+        h = hashlib.sha256()
+        h.update(self.version.encode())
+        h.update(str(self.num_rules).encode())
+        for f in self.fields:
+            h.update(f.encode())
+            h.update(self.engines[f].checksum().encode())
+        h.update(self.ruleset_json.encode())
+        return h.hexdigest()
+
+    def serialize(self) -> bytes:
+        arrays = {}
+        for f, eng in self.engines.items():
+            arrays[f"eng_{f}"] = np.frombuffer(eng.serialize(), np.uint8)
+        manifest = json.dumps({
+            "version": self.version, "num_rules": self.num_rules,
+            "fields": list(self.fields), "checksum": self.checksum(),
+            "ruleset_json": self.ruleset_json,
+        })
+        buf = io.BytesIO()
+        np.savez_compressed(buf, manifest=np.array(manifest), **arrays)
+        return buf.getvalue()
+
+    @staticmethod
+    def deserialize(data: bytes, verify: bool = True) -> "EngineBundle":
+        try:
+            z = np.load(io.BytesIO(data), allow_pickle=False)
+            manifest = json.loads(str(z["manifest"]))
+            engines = {f: CompiledEngine.deserialize(z[f"eng_{f}"].tobytes(),
+                                                     verify=verify)
+                       for f in manifest["fields"]}
+        except ValueError:
+            raise
+        except Exception as e:  # container damage (zlib/zip/json errors)
+            raise ValueError(f"corrupt bundle artifact: {e}") from e
+        bundle = EngineBundle(version=manifest["version"],
+                              num_rules=manifest["num_rules"], engines=engines,
+                              ruleset_json=manifest.get("ruleset_json", ""))
+        if verify and manifest["checksum"] != bundle.checksum():
+            raise ValueError("bundle checksum mismatch — corrupt artifact")
+        return bundle
+
+    def ruleset(self) -> RuleSet:
+        return RuleSet.from_json(self.ruleset_json)
+
+
+def compile_bundle(ruleset: RuleSet, fields) -> EngineBundle:
+    """Compile one engine per text field (rules select their fields)."""
+    engines = {f: compile_rules(ruleset, f) for f in fields}
+    return EngineBundle(version=ruleset.version_hash(),
+                        num_rules=ruleset.num_rules, engines=engines,
+                        ruleset_json=ruleset.to_json())
+
+
+def build_matchers(bundle: EngineBundle, *, backend: str = "dfa_ref",
+                   block_n: int = 256, interpret: bool = True) -> dict:
+    """field -> MatchEngine, ready for StreamProcessor hot-swap."""
+    rs = bundle.ruleset() if bundle.ruleset_json else None
+    return {f: MatchEngine(bundle.engines[f], backend=backend, ruleset=rs,
+                           block_n=block_n, interpret=interpret)
+            for f in bundle.fields}

@@ -1,0 +1,138 @@
+"""Versioned, immutable object store — the S3 stand-in (paper §3.4.1).
+
+Semantics preserved from the paper's design:
+  * every ``put`` creates a new immutable version (rollback + audit trail);
+  * integrity: sha256 recorded at write, verified at read;
+  * lifecycle policies: ``expire_versions`` archives old pattern versions.
+
+Backed by a local directory (or memory for tests).  The layout is
+``<root>/<key>/<v000001>.blob`` + ``.meta`` json, mirroring S3 object
+versioning closely enough that swapping in a real client is a one-file change.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import threading
+import time
+from dataclasses import dataclass
+from pathlib import Path
+
+
+@dataclass(frozen=True)
+class ObjectRef:
+    key: str
+    version: int
+    sha256: str
+    size: int
+
+    def to_dict(self) -> dict:
+        return {"key": self.key, "version": self.version,
+                "sha256": self.sha256, "size": self.size}
+
+    @staticmethod
+    def from_dict(d: dict) -> "ObjectRef":
+        return ObjectRef(key=d["key"], version=int(d["version"]),
+                         sha256=d["sha256"], size=int(d["size"]))
+
+
+class IntegrityError(ValueError):
+    pass
+
+
+class ObjectStore:
+    """put/get with versioning + checksums.  Thread-safe."""
+
+    def __init__(self, root=None):
+        self._lock = threading.RLock()
+        self._root = Path(root) if root is not None else None
+        self._mem: dict = {}  # (key, version) -> (bytes, meta)
+        if self._root is not None:
+            self._root.mkdir(parents=True, exist_ok=True)
+
+    # -- write ---------------------------------------------------------------
+    def put(self, key: str, data: bytes) -> ObjectRef:
+        if self._root is not None:
+            (self._root / key).mkdir(parents=True, exist_ok=True)
+        with self._lock:
+            version = self._latest_version(key) + 1
+            sha = hashlib.sha256(data).hexdigest()
+            meta = {"key": key, "version": version, "sha256": sha,
+                    "size": len(data), "created": time.time()}
+            if self._root is None:
+                self._mem[(key, version)] = (bytes(data), meta)
+            else:
+                blob = self._path(key, version)
+                tmp = blob.with_suffix(".tmp")
+                tmp.write_bytes(data)
+                os.replace(tmp, blob)  # atomic publish
+                self._path(key, version, ".meta").write_text(json.dumps(meta))
+            return ObjectRef(key=key, version=version, sha256=sha,
+                             size=len(data))
+
+    # -- read ----------------------------------------------------------------
+    def get(self, ref: ObjectRef, *, verify: bool = True) -> bytes:
+        data, meta = self._load(ref.key, ref.version)
+        if verify:
+            sha = hashlib.sha256(data).hexdigest()
+            if sha != ref.sha256 or sha != meta["sha256"]:
+                raise IntegrityError(
+                    f"{ref.key} v{ref.version}: checksum mismatch")
+        return data
+
+    def get_latest(self, key: str) -> tuple:
+        """-> (bytes, ObjectRef) of the newest version."""
+        v = self._latest_version(key)
+        if v == 0:
+            raise KeyError(key)
+        data, meta = self._load(key, v)
+        return data, ObjectRef(key=key, version=v, sha256=meta["sha256"],
+                               size=meta["size"])
+
+    def head(self, key: str, version: int) -> dict:
+        _, meta = self._load(key, version)
+        return dict(meta)
+
+    def list_versions(self, key: str) -> list:
+        with self._lock:
+            if self._root is None:
+                return sorted(v for k, v in self._mem if k == key)
+            d = self._root / key
+            if not d.is_dir():
+                return []
+            return sorted(int(p.stem[1:]) for p in d.glob("v*.blob"))
+
+    # -- lifecycle -----------------------------------------------------------
+    def expire_versions(self, key: str, keep_latest: int = 3) -> int:
+        """Archive (delete) all but the newest N versions.  Returns #removed."""
+        with self._lock:
+            versions = self.list_versions(key)
+            drop = versions[:-keep_latest] if keep_latest else versions
+            for v in drop:
+                if self._root is None:
+                    self._mem.pop((key, v), None)
+                else:
+                    self._path(key, v).unlink(missing_ok=True)
+                    self._path(key, v, ".meta").unlink(missing_ok=True)
+            return len(drop)
+
+    # -- internals -----------------------------------------------------------
+    def _path(self, key: str, version: int, suffix: str = ".blob") -> Path:
+        return self._root / key / f"v{version:06d}{suffix}"
+
+    def _latest_version(self, key: str) -> int:
+        versions = self.list_versions(key)
+        return versions[-1] if versions else 0
+
+    def _load(self, key: str, version: int) -> tuple:
+        with self._lock:
+            if self._root is None:
+                if (key, version) not in self._mem:
+                    raise KeyError(f"{key} v{version}")
+                return self._mem[(key, version)]
+            blob = self._path(key, version)
+            meta_p = self._path(key, version, ".meta")
+            if not blob.exists():
+                raise KeyError(f"{key} v{version}")
+            return blob.read_bytes(), json.loads(meta_p.read_text())

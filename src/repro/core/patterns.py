@@ -1,0 +1,200 @@
+"""Filtering rules and rule sets (paper §3.3-3.4).
+
+A ``Rule`` is one filtering condition the analytical plane wants evaluated
+in-stream.  Rules support literals, alternations (``a|b|c``), and a small
+character-class subset (``[0-9]``, ``[a-z]``, ``.``) — the same "compilable
+subset" philosophy Hyperscan applies; arbitrary PCRE is out of scope.
+
+A ``RuleSet`` is a versioned, hashable collection; ``diff`` computes the
+delta (paper §3.4 step 1) that drives engine recompilation.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import re
+from dataclasses import dataclass, field, asdict
+from typing import Iterable
+
+_CLASS_RE = re.compile(r"\[([^\]]+)\]|\.")
+
+_META = "|[].\\"
+
+
+def escape(literal: str) -> str:
+    """Escape a raw string so it matches literally (cf. re.escape)."""
+    return "".join("\\" + c if c in _META else c for c in literal)
+
+
+def _unescape(s: str) -> str:
+    out, i = [], 0
+    while i < len(s):
+        if s[i] == "\\" and i + 1 < len(s):
+            out.append(s[i + 1])
+            i += 2
+        else:
+            out.append(s[i])
+            i += 1
+    return "".join(out)
+
+
+def _split_unescaped(s: str, sep: str) -> list:
+    parts, cur, i = [], [], 0
+    while i < len(s):
+        if s[i] == "\\" and i + 1 < len(s):
+            cur.append(s[i:i + 2])
+            i += 2
+            continue
+        if s[i] == sep:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(s[i])
+        i += 1
+    parts.append("".join(cur))
+    return parts
+
+
+@dataclass(frozen=True)
+class Rule:
+    rule_id: int
+    name: str
+    pattern: str
+    fields: tuple = ("*",)          # record fields to evaluate ("*" = all text)
+    case_insensitive: bool = False
+
+    def __post_init__(self):
+        if not self.pattern:
+            raise ValueError("empty pattern")
+        if self.rule_id < 0:
+            raise ValueError("rule_id must be >= 0")
+        for lit in self.literals():
+            if not lit:
+                raise ValueError(f"rule {self.name}: empty alternation branch")
+            if len(lit) > 256:
+                raise ValueError(f"rule {self.name}: literal longer than 256 bytes")
+
+    def literals(self) -> tuple:
+        """Expand the pattern into the set of literal strings it matches.
+
+        Alternation expands combinatorially; character classes expand to
+        their members (bounded to keep compile cost sane — like Hyperscan's
+        literal factoring, wide classes belong in the DFA, and we cap them).
+        """
+        out = []
+        for branch in _split_unescaped(self.pattern, "|"):
+            out.extend(_expand_classes(branch))
+        if len(out) > 4096:
+            raise ValueError(f"rule {self.name}: expands to >4096 literals")
+        if self.case_insensitive:
+            out = [x.lower() for x in out]
+        return tuple(out)
+
+    def matches(self, text: str) -> bool:
+        """Pure-python oracle used by tests."""
+        hay = text.lower() if self.case_insensitive else text
+        return any(lit in hay for lit in self.literals())
+
+
+def _expand_classes(branch: str) -> list:
+    # find the first UNESCAPED class/dot; escaped metacharacters are literal
+    i = 0
+    m = None
+    while i < len(branch):
+        if branch[i] == "\\":
+            i += 2
+            continue
+        m = _CLASS_RE.match(branch, i)
+        if m:
+            break
+        i += 1
+    if not m:
+        return [_unescape(branch)]
+    pre, post = branch[:m.start()], branch[m.end():]
+    if m.group(0) == ".":
+        members = [chr(c) for c in range(32, 127)]
+    else:
+        members = _class_members(m.group(1))
+    if len(members) > 64:
+        raise ValueError(f"character class too wide: {m.group(0)}")
+    out = []
+    for ch in members:
+        out.extend(_expand_classes(pre + escape(ch) + post))
+    return out
+
+
+def _class_members(body: str) -> list:
+    out = []
+    i = 0
+    while i < len(body):
+        if i + 2 < len(body) and body[i + 1] == "-":
+            out.extend(chr(c) for c in range(ord(body[i]), ord(body[i + 2]) + 1))
+            i += 3
+        else:
+            out.append(body[i])
+            i += 1
+    return out
+
+
+@dataclass(frozen=True)
+class RuleSet:
+    rules: tuple  # tuple[Rule, ...]
+
+    def __post_init__(self):
+        ids = [r.rule_id for r in self.rules]
+        if len(set(ids)) != len(ids):
+            raise ValueError("duplicate rule_ids")
+
+    @property
+    def num_rules(self) -> int:
+        return 0 if not self.rules else max(r.rule_id for r in self.rules) + 1
+
+    def version_hash(self) -> str:
+        payload = json.dumps([asdict(r) for r in sorted(self.rules, key=lambda r: r.rule_id)],
+                             sort_keys=True, default=list)
+        return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+    def by_field(self) -> dict:
+        """field name -> list[Rule] ('*' rules appear under '*')."""
+        out: dict = {}
+        for r in self.rules:
+            for f in r.fields:
+                out.setdefault(f, []).append(r)
+        return out
+
+    def rules_for_field(self, field_name: str) -> list:
+        return [r for r in self.rules
+                if "*" in r.fields or field_name in r.fields]
+
+    def diff(self, other: "RuleSet") -> dict:
+        """Delta from self -> other (paper §3.4 'Delta Computation')."""
+        mine = {r.rule_id: r for r in self.rules}
+        theirs = {r.rule_id: r for r in other.rules}
+        added = [theirs[i] for i in theirs.keys() - mine.keys()]
+        removed = [mine[i] for i in mine.keys() - theirs.keys()]
+        changed = [theirs[i] for i in theirs.keys() & mine.keys()
+                   if theirs[i] != mine[i]]
+        return {"added": sorted(added, key=lambda r: r.rule_id),
+                "removed": sorted(removed, key=lambda r: r.rule_id),
+                "changed": sorted(changed, key=lambda r: r.rule_id)}
+
+    def with_rules(self, new_rules: Iterable[Rule]) -> "RuleSet":
+        by_id = {r.rule_id: r for r in self.rules}
+        for r in new_rules:
+            by_id[r.rule_id] = r
+        return RuleSet(tuple(sorted(by_id.values(), key=lambda r: r.rule_id)))
+
+    def without_ids(self, ids: Iterable[int]) -> "RuleSet":
+        drop = set(ids)
+        return RuleSet(tuple(r for r in self.rules if r.rule_id not in drop))
+
+    def to_json(self) -> str:
+        return json.dumps([asdict(r) for r in self.rules], default=list)
+
+    @staticmethod
+    def from_json(s: str) -> "RuleSet":
+        return RuleSet(tuple(Rule(rule_id=r["rule_id"], name=r["name"],
+                                  pattern=r["pattern"],
+                                  fields=tuple(r.get("fields", ("*",))),
+                                  case_insensitive=r.get("case_insensitive", False))
+                             for r in json.loads(s)))

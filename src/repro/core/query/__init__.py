@@ -1,0 +1,4 @@
+from repro.core.query.store import Segment, SegmentStore  # noqa: F401
+from repro.core.query.engine import Query, QueryEngine, QueryResult  # noqa: F401
+from repro.core.query.mapper import QueryMapper  # noqa: F401
+from repro.core.query.profiler import QueryProfiler  # noqa: F401

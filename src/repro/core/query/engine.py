@@ -1,0 +1,242 @@
+"""Query execution over the columnar plane — three physical paths.
+
+  full_scan   vectorized substring scan over raw content bytes
+              (the DuckDB optimized-full-scan baseline, paper §5.1);
+  text_index  token -> posting-list lookup on the per-segment inverted
+              index (the Pinot FTS baseline, paper §6.1);
+  fluxsieve   bitmap test on the enrichment column + segment zone-map
+              pruning (the paper's fast path, via the Query Mapper).
+
+A query is a conjunction of (field contains term) predicates with a
+``copy`` (materialize matching records) or ``count`` (aggregate only) mode —
+exactly the paper's Q1-Q4 and their "with count" variants.  ``cold=True``
+drops all segment caches first and reads without retaining, modelling the
+paper's cold runs; bytes read from disk are accounted per query.
+
+Consistency (paper §3.4 step 4): the fluxsieve path consults the mapper per
+segment — records ingested under an engine version that did not know a rule
+fall back to full scan for that segment (hybrid execution), so enrichment
+never changes results.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.records import RecordBatch
+from repro.core.stream_processor import ENRICH_COLUMN
+from repro.core.query.store import Segment, SegmentStore
+
+PATHS = ("full_scan", "text_index", "fluxsieve")
+
+
+@dataclass(frozen=True)
+class Query:
+    """terms: ((field, term), ...) AND-combined; mode: 'copy' | 'count'."""
+    terms: tuple
+    mode: str = "count"
+    name: str = ""
+
+    def __post_init__(self):
+        if self.mode not in ("copy", "count"):
+            raise ValueError(self.mode)
+        if not self.terms:
+            raise ValueError("empty query")
+
+    def key(self) -> tuple:
+        return tuple(sorted(self.terms))
+
+
+@dataclass
+class QueryResult:
+    count: int
+    records: RecordBatch = None
+    latency_s: float = 0.0
+    path: str = ""
+    segments_scanned: int = 0
+    segments_pruned: int = 0
+    segments_fallback: int = 0
+    bytes_read: int = 0
+
+
+def substring_scan(data: np.ndarray, term: str) -> np.ndarray:
+    """(N, L) uint8 contains `term` as a byte substring -> (N,) bool."""
+    t = term.encode()
+    N, L = data.shape
+    m = len(t)
+    if m == 0 or m > L:
+        return np.zeros(N, bool)
+    # vectorized first-byte prefilter, then confirm remaining bytes
+    acc = data[:, :L - m + 1] == t[0]
+    for i in range(1, m):
+        acc &= data[:, i:L - m + 1 + i] == t[i]
+    return acc.any(axis=1)
+
+
+class QueryEngine:
+    """``workers`` > 1 scans segments concurrently (numpy releases the GIL
+    in the vectorized kernels) — the intra-query parallelism axis of the
+    paper's Figs 6-9."""
+
+    def __init__(self, store: SegmentStore, *, mapper=None, profiler=None,
+                 workers: int = 1):
+        self.store = store
+        self.mapper = mapper          # QueryMapper (None -> no fluxsieve path)
+        self.profiler = profiler
+        self.workers = workers
+
+    # -- public ------------------------------------------------------------
+    def execute(self, query: Query, *, path: str = "auto",
+                cold: bool = False) -> QueryResult:
+        if cold:
+            self.store.drop_caches()
+        chosen = path
+        plan = None
+        if path in ("auto", "fluxsieve") and self.mapper is not None:
+            plan = self.mapper.map(query)
+        if path == "auto":
+            chosen = "fluxsieve" if plan is not None else self._fallback_path(query)
+        if chosen == "fluxsieve" and plan is None:
+            raise ValueError("query not covered by registered rules; "
+                             "no fluxsieve plan")
+        t0 = time.perf_counter()
+        res = self._run(query, chosen, plan, cache=not cold)
+        res.latency_s = time.perf_counter() - t0
+        res.path = chosen
+        if self.profiler is not None:
+            self.profiler.record(query, res)
+        return res
+
+    def _fallback_path(self, query: Query) -> str:
+        segs = self.store.segments
+        if segs and all(s.has_text_index(f) for f, _ in query.terms
+                        for s in segs):
+            return "text_index"
+        return "full_scan"
+
+    # -- execution ---------------------------------------------------------
+    def _run(self, query: Query, path: str, plan, cache: bool) -> QueryResult:
+        res = QueryResult(count=0)
+        segs = self.store.segments
+
+        def one(seg):
+            # thread-local counters; merged below (no racy increments)
+            local = QueryResult(count=0)
+            if path == "fluxsieve":
+                ids = self._seg_fluxsieve(seg, query, plan, cache, local)
+            elif path == "text_index":
+                ids = self._seg_text_index(seg, query, cache, local)
+            else:
+                ids = self._seg_full_scan(seg, query, cache, local)
+            return ids, local
+
+        if self.workers > 1 and len(segs) > 1:
+            from concurrent.futures import ThreadPoolExecutor
+            with ThreadPoolExecutor(self.workers) as pool:
+                per_seg = list(pool.map(one, segs))
+        else:
+            per_seg = [one(seg) for seg in segs]
+
+        for _, local in per_seg:
+            res.segments_scanned += local.segments_scanned
+            res.segments_pruned += local.segments_pruned
+            res.segments_fallback += local.segments_fallback
+            res.bytes_read += local.bytes_read
+
+        matches = []   # (segment, ids) for copy mode
+        for seg, (ids, _) in zip(segs, per_seg):
+            if ids is None:
+                continue
+            if isinstance(ids, int):           # metadata-only count
+                res.count += ids
+                continue
+            res.count += len(ids)
+            if query.mode == "copy" and len(ids):
+                matches.append((seg, ids))
+        if query.mode == "copy":
+            res.records = self._materialize(matches, cache, res)
+        return res
+
+    def _seg_full_scan(self, seg: Segment, query: Query, cache, res):
+        res.segments_scanned += 1
+        mask = None
+        for fieldname, term in query.terms:
+            col = self._read(seg, fieldname, cache, res)
+            m = substring_scan(col, term)
+            mask = m if mask is None else (mask & m)
+        return np.flatnonzero(mask)
+
+    def _seg_text_index(self, seg: Segment, query: Query, cache, res):
+        res.segments_scanned += 1
+        ids = None
+        for fieldname, term in query.terms:
+            idx = seg.text_index(fieldname, cache=cache)
+            posting = idx.get(term, np.zeros(0, np.int32))
+            ids = posting if ids is None else np.intersect1d(ids, posting,
+                                                             assume_unique=True)
+            if not len(ids):
+                break
+        return ids
+
+    def _seg_fluxsieve(self, seg: Segment, query: Query, plan, cache, res):
+        # consistency: records ingested before a rule existed -> fallback scan
+        if not plan.covers_segment(seg):
+            res.segments_fallback += 1
+            return self._seg_full_scan(seg, query, cache, res)
+        # zone-map pruning: segment-level OR of bitmaps lacks a needed bit
+        zone = seg.meta.get("rule_bitmap_any")
+        if zone is not None:
+            zone = np.asarray(zone, np.uint32)
+            for mask in plan.masks:
+                if not (zone & mask).any():
+                    res.segments_pruned += 1
+                    return None
+        # single-rule count: answered from per-segment metadata, zero I/O
+        if query.mode == "count" and len(plan.rule_ids) == 1:
+            c = seg.rule_count(plan.rule_ids[0])
+            if c is not None:
+                res.segments_scanned += 1
+                return int(c)
+        res.segments_scanned += 1
+        # seal-time rule postings (sparse inverted index): ids directly,
+        # intersected for multi-term AND — no bitmap-column scan
+        postings = [seg.rule_postings(rid, cache=cache)
+                    for rid in plan.rule_ids]
+        if all(p is not None for p in postings):
+            ids = postings[0]
+            for p in postings[1:]:
+                ids = np.intersect1d(ids, p, assume_unique=True)
+                if not len(ids):
+                    break
+            return ids
+        bm = self._read(seg, ENRICH_COLUMN, cache, res)
+        keep = None
+        for rid in plan.rule_ids:
+            # test ONE word column + bit, not the full (N, W) mask product
+            m = (bm[:, rid // 32] >> np.uint32(rid % 32)) & np.uint32(1)
+            keep = m.astype(bool) if keep is None else (keep & m.astype(bool))
+        return np.flatnonzero(keep)
+
+    def _materialize(self, matches, cache, res) -> RecordBatch:
+        parts = []
+        for seg, ids in matches:
+            cols = {}
+            for name in seg.column_names:
+                in_mem = name in seg._columns
+                rows = seg.column_rows(name, ids, cache=cache)
+                if not in_mem:
+                    res.bytes_read += rows.nbytes
+                cols[name] = rows
+            parts.append(RecordBatch(cols))
+        if not parts:
+            return RecordBatch({})
+        return RecordBatch.concat(parts)
+
+    def _read(self, seg: Segment, name: str, cache: bool, res: QueryResult):
+        in_mem = name in seg._columns
+        col = seg.column(name, cache=cache)
+        if not in_mem:
+            res.bytes_read += col.nbytes
+        return col

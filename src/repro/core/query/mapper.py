@@ -1,0 +1,86 @@
+"""Query Mapper — rewrites queries onto precomputed enrichment (paper §3.2
+module 5): "translates incoming queries into optimized internal queries that
+exploit the precomputed fields ... bypassing expensive full-table scans".
+
+A (field, term) predicate maps to a registered rule when the rule's pattern
+matches the term exactly and the rule covers the field.  The plan carries one
+query-time bitmap mask per predicate (AND semantics across predicates).
+
+Consistency propagation (paper §3.4 step 4): the mapper is notified of every
+activated engine version and remembers at which version id each rule first
+became active; a segment is covered only if ALL its records were enriched by
+an engine that knew every needed rule (checked against the segment's
+``engine_version_min`` zone map).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import enrichment
+from repro.core.patterns import RuleSet, escape
+from repro.core.query.store import Segment
+
+
+@dataclass(frozen=True)
+class FluxSievePlan:
+    masks: tuple            # one (W,) uint32 mask per query predicate
+    rule_ids: tuple
+    min_version_id: int     # newest version id any needed rule was added at
+
+    def covers_segment(self, seg: Segment) -> bool:
+        v = seg.meta.get("engine_version_min")
+        return v is not None and v >= self.min_version_id
+
+
+class QueryMapper:
+    def __init__(self, ruleset: RuleSet = None, *, version_id: int = 0):
+        self._rules_by_key: dict = {}   # (field, pattern) -> rule_id
+        self._rule_added_at: dict = {}  # rule_id -> version id
+        self._num_rules = 0
+        self._version_id = version_id
+        if ruleset is not None:
+            self.notify(ruleset, version_id)
+
+    # -- updater notification ------------------------------------------------
+    def notify(self, ruleset: RuleSet, version_id: int) -> None:
+        """Called whenever a new engine version activates (§3.4 step 4)."""
+        self._version_id = version_id
+        self._num_rules = max(self._num_rules, ruleset.num_rules)
+        keys = {}
+        for r in ruleset.rules:
+            for f in r.fields:
+                keys[(f, r.pattern)] = r.rule_id
+            if r.rule_id not in self._rule_added_at:
+                self._rule_added_at[r.rule_id] = version_id
+        # rules removed in this version no longer map
+        self._rules_by_key = keys
+
+    @property
+    def num_rules(self) -> int:
+        return self._num_rules
+
+    # -- planning --------------------------------------------------------
+    def lookup(self, fieldname: str, term: str):
+        for t in (term, escape(term)):
+            rid = self._rules_by_key.get((fieldname, t))
+            if rid is None:
+                rid = self._rules_by_key.get(("*", t))
+            if rid is not None:
+                return rid
+        return None
+
+    def map(self, query) -> FluxSievePlan:
+        """-> plan, or None when any predicate lacks a registered rule."""
+        masks, rids = [], []
+        min_vid = 0
+        for fieldname, term in query.terms:
+            rid = self.lookup(fieldname, term)
+            if rid is None:
+                return None
+            masks.append(enrichment.rule_mask([rid], self._num_rules))
+            rids.append(rid)
+            min_vid = max(min_vid, self._rule_added_at.get(rid, 0))
+        return FluxSievePlan(masks=tuple(masks), rule_ids=tuple(rids),
+                             min_version_id=min_vid)

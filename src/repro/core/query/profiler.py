@@ -1,0 +1,83 @@
+"""Query Profiler — workload analysis inside the analytical plane
+(paper §3.2 module 4 / §3.4): "detects frequently executed queries,
+recurring filter patterns, and high-cost query segments" and proposes
+filtering conditions for in-stream compilation.
+
+Heuristic: a predicate is *hot* once its cumulative scan cost and execution
+count cross thresholds while it is not yet covered by a registered rule.
+``propose_rules`` turns hot predicates into a new RuleSet for the Updater —
+closing the paper's feedback loop (profiler -> updater -> stream processor
+-> mapper).
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+
+from repro.core.patterns import Rule, RuleSet, escape
+
+
+@dataclass
+class PredicateStats:
+    count: int = 0
+    total_s: float = 0.0
+    slow_path_s: float = 0.0    # time spent off the fluxsieve path
+    last_path: str = ""
+
+    @property
+    def mean_s(self) -> float:
+        return self.total_s / max(self.count, 1)
+
+
+class QueryProfiler:
+    def __init__(self, *, hot_count: int = 3, hot_seconds: float = 0.05):
+        self.hot_count = hot_count
+        self.hot_seconds = hot_seconds
+        self._stats: dict = {}      # (field, term) -> PredicateStats
+        self._lock = threading.Lock()
+
+    # -- ingestion (engine calls this per query) --------------------------
+    def record(self, query, result) -> None:
+        share = result.latency_s / max(len(query.terms), 1)
+        with self._lock:
+            for key in query.terms:
+                st = self._stats.setdefault(key, PredicateStats())
+                st.count += 1
+                st.total_s += share
+                if result.path != "fluxsieve":
+                    st.slow_path_s += share
+                st.last_path = result.path
+
+    # -- analysis ----------------------------------------------------------
+    def hot_predicates(self) -> list:
+        """Predicates worth precomputing: frequent AND expensive AND still
+        executing off the fast path."""
+        with self._lock:
+            out = []
+            for (fieldname, term), st in self._stats.items():
+                if (st.count >= self.hot_count
+                        and st.slow_path_s >= self.hot_seconds):
+                    out.append(((fieldname, term), st))
+            out.sort(key=lambda kv: kv[1].slow_path_s, reverse=True)
+            return out
+
+    def propose_rules(self, current: RuleSet) -> RuleSet:
+        """Extend `current` with rules for every hot uncovered predicate."""
+        covered = {(f, r.pattern) for r in current.rules for f in r.fields}
+        next_id = current.num_rules
+        new_rules = []
+        for (fieldname, term), _ in self.hot_predicates():
+            keys = {(fieldname, term), ("*", term),
+                    (fieldname, escape(term)), ("*", escape(term))}
+            if keys & covered:
+                continue
+            new_rules.append(Rule(rule_id=next_id,
+                                  name=f"auto_{fieldname}_{term[:24]}",
+                                  pattern=escape(term),
+                                  fields=(fieldname,)))
+            next_id += 1
+        return current.with_rules(new_rules) if new_rules else current
+
+    def stats(self) -> dict:
+        with self._lock:
+            return dict(self._stats)

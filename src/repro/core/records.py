@@ -1,0 +1,88 @@
+"""Record batches — the unit of flow through the streaming data plane.
+
+A ``RecordBatch`` is a struct-of-arrays: scalar columns are 1-D numpy arrays,
+text columns are fixed-width ``(N, L) uint8`` byte matrices (zero-padded).
+Fixed width keeps every stage shape-stable (shardable, jit-friendly) and maps
+directly onto the columnar analytical plane.  The paper's logical schema
+(§4.3): ``timestamp`` (int64), ``status`` (int32), ``event_type`` (int32),
+plus 2–5 ``content*`` text fields of ~60 words each.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+TEXT_WIDTH = 512  # default fixed byte width for content fields
+
+
+def encode_texts(texts, width: int = TEXT_WIDTH) -> np.ndarray:
+    """list[str|bytes] -> (N, width) uint8, zero padded / truncated."""
+    out = np.zeros((len(texts), width), np.uint8)
+    for i, t in enumerate(texts):
+        b = t.encode("utf-8", "ignore") if isinstance(t, str) else bytes(t)
+        b = b[:width]
+        out[i, :len(b)] = np.frombuffer(b, np.uint8)
+    return out
+
+
+def decode_texts(data: np.ndarray) -> list:
+    """(N, L) uint8 -> list[str] (padding stripped)."""
+    out = []
+    for row in np.asarray(data):
+        b = row.tobytes().rstrip(b"\x00")
+        out.append(b.decode("utf-8", "replace"))
+    return out
+
+
+@dataclass
+class RecordBatch:
+    """columns: name -> np.ndarray; text columns are (N, L) uint8 2-D."""
+    columns: dict
+
+    def __post_init__(self):
+        ns = {k: v.shape[0] for k, v in self.columns.items()}
+        if len(set(ns.values())) > 1:
+            raise ValueError(f"ragged batch: {ns}")
+
+    @property
+    def num_records(self) -> int:
+        if not self.columns:
+            return 0
+        return next(iter(self.columns.values())).shape[0]
+
+    def __len__(self) -> int:
+        return self.num_records
+
+    @property
+    def text_fields(self) -> tuple:
+        return tuple(sorted(k for k, v in self.columns.items()
+                            if v.ndim == 2 and v.dtype == np.uint8))
+
+    @property
+    def scalar_fields(self) -> tuple:
+        return tuple(sorted(k for k, v in self.columns.items()
+                            if not (v.ndim == 2 and v.dtype == np.uint8)))
+
+    def with_column(self, name: str, values: np.ndarray) -> "RecordBatch":
+        cols = dict(self.columns)
+        cols[name] = values
+        return RecordBatch(cols)
+
+    def select(self, mask_or_idx: np.ndarray) -> "RecordBatch":
+        return RecordBatch({k: v[mask_or_idx] for k, v in self.columns.items()})
+
+    def slice(self, start: int, stop: int) -> "RecordBatch":
+        return RecordBatch({k: v[start:stop] for k, v in self.columns.items()})
+
+    @staticmethod
+    def concat(batches) -> "RecordBatch":
+        batches = [b for b in batches if len(b)]
+        if not batches:
+            return RecordBatch({})
+        keys = batches[0].columns.keys()
+        return RecordBatch({k: np.concatenate([b.columns[k] for b in batches])
+                            for k in keys})
+
+    def nbytes(self) -> int:
+        return sum(v.nbytes for v in self.columns.values())

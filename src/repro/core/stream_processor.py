@@ -1,0 +1,178 @@
+"""StreamProcessor — the in-stream prefilter/enricher (paper §3.2 module 2,
+§3.4.3 "Streaming Application (Matcher)").
+
+Dual-topology design, as in the paper's Kafka Streams implementation:
+
+  * the **data topology** (``process``) runs every incoming RecordBatch
+    through the active per-field matchers and attaches the packed rule
+    bitmap (enrichment) — and, in ``filter`` mode, drops non-matching
+    records entirely;
+  * the **control topology** (``poll_updates``) consumes engine-update
+    notifications, fetches the compiled artifact from the object store,
+    validates version + checksum, and hot-swaps the active matchers.
+
+The active engine lives behind a single reference read once per batch
+(`_active`), so in-flight batches finish against the engine they started
+with — the paper's no-downtime swap guarantee.  Swap never retraces jit
+caches because table shapes are bucketed (automaton.py).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import enrichment
+from repro.core.control_plane import (ControlBus, MATCHER_ACKS,
+                                      MATCHER_UPDATES)
+from repro.core.matcher import EngineBundle, MatchEngine, build_matchers
+from repro.core.object_store import ObjectRef, ObjectStore
+from repro.core.records import RecordBatch
+
+ENRICH_COLUMN = "rule_bitmap"
+ENGINE_VERSION_COLUMN = "engine_version_id"
+
+
+@dataclass
+class _Active:
+    bundle: EngineBundle
+    matchers: dict          # field -> MatchEngine
+    version_id: int         # monotonically increasing local id
+    activated_at: float
+
+
+@dataclass
+class ProcessorStats:
+    records_in: int = 0
+    records_out: int = 0
+    records_matched: int = 0
+    batches: int = 0
+    swaps: int = 0
+    match_seconds: float = 0.0
+    versions: dict = field(default_factory=dict)  # version -> activation time
+
+
+class StreamProcessor:
+    """mode: 'enrich' keeps every record and attaches the bitmap (paper's
+    deployment — analytical plane stays the complete source of truth);
+    'filter' additionally drops records that match no rule (pre-filtering
+    for pipelines that only want query-relevant records)."""
+
+    def __init__(self, bundle: EngineBundle, *, instance_id: str = "proc-0",
+                 mode: str = "enrich", backend: str = "dfa_ref",
+                 bus: ControlBus = None, store: ObjectStore = None,
+                 block_n: int = 256, interpret: bool = True):
+        if mode not in ("enrich", "filter"):
+            raise ValueError(mode)
+        self.instance_id = instance_id
+        self.mode = mode
+        self.backend = backend
+        self.block_n = block_n
+        self.interpret = interpret
+        self.bus = bus
+        self.store = store
+        self.stats = ProcessorStats()
+        self._lock = threading.RLock()
+        self._pending: dict = {}          # version -> ObjectRef (fetch queued)
+        self._swap_lock = threading.Lock()
+        self._install(bundle, version_id=0)
+
+    # -- data topology ---------------------------------------------------
+    def process(self, batch: RecordBatch) -> RecordBatch:
+        """Match + enrich (and maybe filter) one batch."""
+        active = self._active                      # single read: swap-safe
+        t0 = time.perf_counter()
+        n = len(batch)
+        W = active.bundle.words
+        bm = np.zeros((n, W), np.uint32)
+        for fieldname, engine in active.matchers.items():
+            if fieldname == "*":
+                cols = batch.text_fields
+            elif fieldname in batch.columns:
+                cols = (fieldname,)
+            else:
+                continue
+            for c in cols:
+                bm |= np.asarray(engine.match(batch.columns[c]))
+        out = batch.with_column(ENRICH_COLUMN, bm)
+        out = out.with_column(
+            ENGINE_VERSION_COLUMN,
+            np.full(n, active.version_id, np.int32))
+        matched = enrichment.any_match(bm)
+        if self.mode == "filter":
+            out = out.select(matched)
+        with self._lock:
+            self.stats.records_in += n
+            self.stats.records_out += len(out)
+            self.stats.records_matched += int(matched.sum())
+            self.stats.batches += 1
+            self.stats.match_seconds += time.perf_counter() - t0
+        return out
+
+    # -- control topology --------------------------------------------------
+    def poll_updates(self) -> int:
+        """Consume update notifications; fetch+validate+swap.  Returns the
+        number of successful swaps performed (paper §3.4.2 steps 4-6)."""
+        if self.bus is None or self.store is None:
+            return 0
+        group = f"matcher/{self.instance_id}"
+        swaps = 0
+        for msg in self.bus.poll(MATCHER_UPDATES, group):
+            ok = False
+            try:
+                ref = ObjectRef.from_dict(msg.value["object_ref"])
+                expect_version = msg.value["engine_version"]
+                expect_checksum = msg.value["checksum"]
+                data = self.store.get(ref, verify=True)           # sha256
+                bundle = EngineBundle.deserialize(data, verify=True)
+                if bundle.version != expect_version:
+                    raise ValueError(
+                        f"version mismatch: got {bundle.version}, "
+                        f"expected {expect_version}")
+                if bundle.checksum() != expect_checksum:
+                    raise ValueError("bundle checksum != notification checksum")
+                self.swap(bundle)
+                swaps += 1
+                ok = True
+            except Exception as e:  # noqa: BLE001 — ack failure, keep serving
+                err = str(e)
+            self.bus.commit(MATCHER_UPDATES, group, msg.offset)
+            ack = {"instance": self.instance_id,
+                   "engine_version": msg.value.get("engine_version"),
+                   "ok": ok}
+            if not ok:
+                ack["error"] = err
+            self.bus.publish(MATCHER_ACKS, ack)
+        return swaps
+
+    def swap(self, bundle: EngineBundle) -> None:
+        """Hot swap: build matchers off-path, then flip the reference."""
+        with self._swap_lock:
+            vid = self._active.version_id + 1
+            self._install(bundle, version_id=vid)
+            with self._lock:
+                self.stats.swaps += 1
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def active_version(self) -> str:
+        return self._active.bundle.version
+
+    @property
+    def active_version_id(self) -> int:
+        return self._active.version_id
+
+    @property
+    def num_rules(self) -> int:
+        return self._active.bundle.num_rules
+
+    def _install(self, bundle: EngineBundle, version_id: int) -> None:
+        matchers = build_matchers(bundle, backend=self.backend,
+                                  block_n=self.block_n,
+                                  interpret=self.interpret)
+        self._active = _Active(bundle=bundle, matchers=matchers,
+                               version_id=version_id,
+                               activated_at=time.time())
+        self.stats.versions[bundle.version] = self._active.activated_at

@@ -1,0 +1,178 @@
+"""MatcherUpdater — central orchestrator of pattern-engine rollout
+(paper §3.4.1-§3.4.2).
+
+Update flow, implemented verbatim against the ObjectStore/ControlBus
+stand-ins:
+
+  1. ``submit(ruleset)``     — delta computation vs the current set;
+  2. async **compilation**   — off the data path, in a worker thread;
+  3. artifact **upload**     — versioned + checksummed into the object store;
+  4. **notification**        — lightweight message (ObjectRef, version,
+                               checksum) on the matcher-updates topic;
+  5. processors fetch/validate/swap (stream_processor.poll_updates);
+  6. **acknowledgments**     — tracked per instance with a rollout timeout;
+     ``await_rollout`` reports completed/failed/missing instances and
+     ``rollback`` re-publishes a previous version.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+from repro.core.control_plane import (ControlBus, MATCHER_ACKS,
+                                      MATCHER_UPDATES)
+from repro.core.matcher import EngineBundle, compile_bundle
+from repro.core.object_store import ObjectRef, ObjectStore
+from repro.core.patterns import RuleSet
+
+ENGINE_KEY = "engines/matcher"
+
+
+@dataclass
+class UpdateHandle:
+    version: str
+    delta: dict
+    ref: ObjectRef = None
+    checksum: str = ""
+    error: str = ""
+    _done: threading.Event = field(default_factory=threading.Event)
+
+    def wait(self, timeout: float = None) -> bool:
+        return self._done.wait(timeout)
+
+    @property
+    def published(self) -> bool:
+        return self._done.is_set() and not self.error
+
+
+@dataclass
+class RolloutStatus:
+    version: str
+    acked: tuple
+    failed: dict            # instance -> error
+    missing: tuple
+    complete: bool
+
+
+class MatcherUpdater:
+    def __init__(self, store: ObjectStore, bus: ControlBus, fields,
+                 *, initial: RuleSet = None):
+        self.store = store
+        self.bus = bus
+        self.fields = tuple(fields)
+        self._lock = threading.RLock()
+        self._current: RuleSet = initial if initial is not None else RuleSet(())
+        # history entries: (version, ObjectRef|None, checksum, RuleSet)
+        # the initial (out-of-band deployed) version has no stored artifact
+        self._history: list = [(self._current.version_hash(), None, "",
+                                self._current)]
+        self._ack_cursor = 0
+
+    @property
+    def current_ruleset(self) -> RuleSet:
+        with self._lock:
+            return self._current
+
+    @property
+    def current_version(self) -> str:
+        with self._lock:
+            return self._current.version_hash()
+
+    # -- steps 1-4 -------------------------------------------------------
+    def submit(self, ruleset: RuleSet, *, asynchronous: bool = True) -> UpdateHandle:
+        """Compute delta, compile, upload, notify.  Compilation runs in a
+        worker thread by default — 'performed asynchronously and does not
+        block ongoing stream processing' (paper §3.4 step 2)."""
+        with self._lock:
+            delta = self._current.diff(ruleset)
+        handle = UpdateHandle(version=ruleset.version_hash(), delta=delta)
+        if not (delta["added"] or delta["removed"] or delta["changed"]):
+            handle.error = "no-op: target equals current rule set"
+            handle._done.set()
+            return handle
+
+        def work():
+            try:
+                bundle = compile_bundle(ruleset, self.fields)
+                ref = self.store.put(ENGINE_KEY, bundle.serialize())
+                checksum = bundle.checksum()
+                self.bus.publish(MATCHER_UPDATES, {
+                    "engine_version": bundle.version,
+                    "object_ref": ref.to_dict(),
+                    "checksum": checksum,
+                    "num_rules": bundle.num_rules,
+                    "delta": {k: [r.name for r in v] for k, v in delta.items()},
+                })
+                with self._lock:
+                    self._current = ruleset
+                    self._history.append((bundle.version, ref, checksum,
+                                          ruleset))
+                handle.ref = ref
+                handle.checksum = checksum
+            except Exception as e:  # noqa: BLE001
+                handle.error = f"{type(e).__name__}: {e}"
+            finally:
+                handle._done.set()
+
+        if asynchronous:
+            threading.Thread(target=work, daemon=True).start()
+        else:
+            work()
+        return handle
+
+    # -- step 6 ----------------------------------------------------------
+    def await_rollout(self, version: str, instances, *, timeout: float = 10.0,
+                      poll_interval: float = 0.02) -> RolloutStatus:
+        """Watch the ack topic until every instance confirms `version` (or
+        the timeout elapses — the paper's failure-detection window)."""
+        want = set(instances)
+        acked: set = set()
+        failed: dict = {}
+        deadline = time.time() + timeout
+        while time.time() < deadline:
+            for msg in self.bus.messages(MATCHER_ACKS, self._ack_cursor):
+                self._ack_cursor = msg.offset + 1
+                if msg.value.get("engine_version") != version:
+                    continue
+                inst = msg.value["instance"]
+                if msg.value.get("ok"):
+                    acked.add(inst)
+                    failed.pop(inst, None)
+                else:
+                    failed[inst] = msg.value.get("error", "unknown")
+            if want <= acked:
+                break
+            time.sleep(poll_interval)
+        missing = tuple(sorted(want - acked - set(failed)))
+        return RolloutStatus(version=version, acked=tuple(sorted(acked)),
+                             failed=failed, missing=missing,
+                             complete=want <= acked)
+
+    # -- rollback ----------------------------------------------------------
+    def rollback(self) -> UpdateHandle:
+        """Re-publish the previous engine version.  Object-store versions are
+        immutable, so when an artifact exists this is a pure notification —
+        no recompile.  The initial (out-of-band deployed) version has no
+        stored artifact; rolling back to it recompiles synchronously."""
+        with self._lock:
+            if len(self._history) < 2:
+                raise RuntimeError("no previous version to roll back to")
+            version, ref, checksum, ruleset = self._history[-2]
+        if ref is None:
+            with self._lock:
+                self._history.pop()          # drop the version being undone
+            return self.submit(ruleset, asynchronous=False)
+        with self._lock:
+            self._history.append((version, ref, checksum, ruleset))
+            self._current = ruleset
+        handle = UpdateHandle(version=version,
+                              delta={"added": [], "removed": [], "changed": []})
+        self.bus.publish(MATCHER_UPDATES, {
+            "engine_version": version, "object_ref": ref.to_dict(),
+            "checksum": checksum, "num_rules": ruleset.num_rules,
+            "delta": "rollback",
+        })
+        handle.ref, handle.checksum = ref, checksum
+        handle._done.set()
+        return handle

@@ -1,0 +1,2 @@
+from repro.data.generator import LogGenerator, WorkloadSpec  # noqa: F401
+from repro.data.pipeline import IngestPipeline, TrainDataPipeline  # noqa: F401

@@ -1,0 +1,155 @@
+"""Synthetic observability-log workload (paper §4.3).
+
+Record schema: ``timestamp`` int64 (event time), ``status`` int32,
+``event_type`` int32, and 2-5 ``content<i>`` free-text fields of ~60 words
+each.  Content words are drawn from a Zipf-distributed vocabulary; **planted
+terms** are injected at controlled selectivity so queries have exact,
+verifiable ground truth:
+
+  * ultra-high selectivity (paper §6.3.1): ~1e-6 match rate;
+  * high selectivity (paper §6.3.2): one order of magnitude more;
+  * non-matching terms (Q1): guaranteed absent from the corpus.
+
+Everything is seeded and deterministic: the i-th record of a given spec is
+identical across runs and processes (ground-truth counts can be recomputed).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.records import RecordBatch
+
+WORDS_PER_FIELD = 60
+VOCAB_SIZE = 8192
+
+
+def _make_vocab(rng: np.random.Generator, n: int) -> list:
+    """Deterministic pseudo-words, 3-10 chars."""
+    alphabet = np.frombuffer(b"abcdefghijklmnopqrstuvwxyz", np.uint8)
+    lengths = rng.integers(3, 11, size=n)
+    out = []
+    for i in range(n):
+        chars = rng.integers(0, 26, size=lengths[i])
+        out.append(alphabet[chars].tobytes().decode())
+    return out
+
+
+@dataclass(frozen=True)
+class PlantedTerm:
+    term: str
+    fieldname: str
+    rate: float          # fraction of records containing it
+
+
+@dataclass
+class WorkloadSpec:
+    num_records: int = 100_000
+    num_content_fields: int = 2
+    text_width: int = 512
+    seed: int = 7
+    ultra_rate: float = 1e-5
+    high_rate: float = 1e-4
+
+    # filled by __post_init__
+    planted: list = field(default_factory=list)
+    absent_terms: list = field(default_factory=list)
+
+    def __post_init__(self):
+        if not self.planted:
+            planted = []
+            for i in range(1, self.num_content_fields + 1):
+                f = f"content{i}"
+                planted.append(PlantedTerm(f"ULTRAneedle{i}x", f, self.ultra_rate))
+                planted.append(PlantedTerm(f"HIGHneedle{i}x", f, self.high_rate))
+            self.planted = planted
+        if not self.absent_terms:
+            self.absent_terms = ["ZZZabsentterm1", "ZZZabsentterm2"]
+
+    @property
+    def content_fields(self) -> tuple:
+        return tuple(f"content{i}" for i in range(1, self.num_content_fields + 1))
+
+
+class LogGenerator:
+    """Deterministic batch generator.  ``batch(start, n)`` is pure in
+    (spec, start, n), so ground truth is recomputable anywhere."""
+
+    def __init__(self, spec: WorkloadSpec):
+        self.spec = spec
+        vocab_rng = np.random.default_rng(spec.seed)
+        self.vocab = _make_vocab(vocab_rng, VOCAB_SIZE)
+        for t in spec.planted:
+            if t.term in self.vocab:
+                raise ValueError(f"planted term collides with vocab: {t.term}")
+        # Zipf-ish word distribution over the vocab
+        ranks = np.arange(1, VOCAB_SIZE + 1, dtype=np.float64)
+        p = 1.0 / ranks
+        self.word_p = p / p.sum()
+        # precompute byte rows for every vocab word (padded to max len + 1 space)
+        self._vocab_arr = np.asarray(self.vocab)
+
+    # -- ground truth ----------------------------------------------------
+    def plant_mask(self, term: PlantedTerm, start: int, n: int) -> np.ndarray:
+        """(n,) bool — which records in [start, start+n) contain the term.
+        Pure in (spec, term, start, n): batch-boundary and process
+        independent (stable hash, no PYTHONHASHSEED dependence)."""
+        import hashlib
+        th = int.from_bytes(
+            hashlib.sha256(term.term.encode()).digest()[:4], "little")
+        ids = np.arange(start, start + n, dtype=np.uint64)
+        mix = ids * np.uint64(0x9E3779B97F4A7C15) + np.uint64(th)
+        mix ^= mix >> np.uint64(31)
+        mix *= np.uint64(0xBF58476D1CE4E5B9)
+        mix ^= mix >> np.uint64(29)
+        u = (mix >> np.uint64(11)).astype(np.float64) / float(1 << 53)
+        return u < term.rate
+
+    def true_count(self, term: PlantedTerm, num_records: int = None) -> int:
+        n = num_records or self.spec.num_records
+        return int(self.plant_mask(term, 0, n).sum())
+
+    # -- generation ----------------------------------------------------------
+    def batch(self, start: int, n: int) -> RecordBatch:
+        spec = self.spec
+        rng = np.random.default_rng((spec.seed, start, 2))
+        cols = {
+            "timestamp": (start + np.arange(n)).astype(np.int64) * 1000,
+            "status": rng.integers(0, 5, size=n).astype(np.int32),
+            "event_type": rng.integers(0, 32, size=n).astype(np.int32),
+        }
+        for fieldname in spec.content_fields:
+            cols[fieldname] = self._content_field(fieldname, start, n, rng)
+        return RecordBatch(cols)
+
+    def batches(self, batch_size: int, limit: int = None):
+        total = limit or self.spec.num_records
+        start = 0
+        while start < total:
+            n = min(batch_size, total - start)
+            yield self.batch(start, n)
+            start += n
+
+    def _content_field(self, fieldname: str, start: int, n: int,
+                       rng: np.random.Generator) -> np.ndarray:
+        spec = self.spec
+        words = rng.choice(self._vocab_arr, size=(n, WORDS_PER_FIELD),
+                           p=self.word_p)
+        # widen the fixed-width string dtype so planted terms never truncate
+        words = words.astype("<U24")
+        # plant terms at positions guaranteed inside the byte width
+        # (first 30 words occupy <= 30 * (10+1) = 330 bytes < text_width)
+        for t in spec.planted:
+            if t.fieldname != fieldname:
+                continue
+            mask = self.plant_mask(t, start, n)
+            idx = np.flatnonzero(mask)
+            if len(idx):
+                pos = rng.integers(0, min(30, WORDS_PER_FIELD), size=len(idx))
+                words[idx, pos] = t.term
+        out = np.zeros((n, spec.text_width), np.uint8)
+        for i in range(n):
+            line = " ".join(words[i])[:spec.text_width].encode()
+            out[i, :len(line)] = np.frombuffer(line, np.uint8)
+        return out

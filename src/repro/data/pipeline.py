@@ -1,0 +1,151 @@
+"""Streaming pipelines wiring the FluxSieve stream processor into (a) the
+analytical plane and (b) LM training — DESIGN.md §3.
+
+``IngestPipeline`` is the paper's deployment: source -> StreamProcessor
+(match + enrich) -> SegmentStore, with per-stage throughput/CPU accounting
+(benchmarks read these for the Fig-5 overhead analysis).
+
+``TrainDataPipeline`` is the framework integration: the same enriched
+stream feeds LM training; rule bitmaps ride along each batch so trainers
+can subselect (``include_rules`` / ``exclude_rules``) without rescanning
+bytes — ingest-time data curation (quality/PII filters) as a first-class
+data-plane feature.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import enrichment
+from repro.core.records import RecordBatch
+from repro.core.stream_processor import ENRICH_COLUMN, StreamProcessor
+from repro.core.query.store import SegmentStore
+from repro.data import tokenizer
+from repro.data.generator import LogGenerator
+
+
+@dataclass
+class StageTimes:
+    generate_s: float = 0.0
+    process_s: float = 0.0
+    store_s: float = 0.0
+    records: int = 0
+    cpu_s: float = 0.0
+    wall_s: float = 0.0
+
+    def throughput(self) -> float:
+        total = self.generate_s + self.process_s + self.store_s
+        return self.records / total if total else 0.0
+
+    def sustained_rate(self) -> float:
+        return self.records / self.wall_s if self.wall_s else 0.0
+
+    def cpu_busy_fraction(self) -> float:
+        return self.cpu_s / self.wall_s if self.wall_s else 0.0
+
+
+class IngestPipeline:
+    """generator -> [stream processor] -> segment store.
+
+    ``processor=None`` is the paper's *baseline* lane (decode + write only);
+    with a processor it is the FluxSieve lane (match + enrich + write)."""
+
+    def __init__(self, generator: LogGenerator, store: SegmentStore,
+                 processor: StreamProcessor = None):
+        self.generator = generator
+        self.store = store
+        self.processor = processor
+        self.times = StageTimes()
+
+    def run(self, *, batch_size: int = 4096, limit: int = None,
+            poll_updates: bool = True, target_rate: float = None) -> StageTimes:
+        """``target_rate`` (records/s) paces the source like the paper's
+        fixed-rate Kafka input (Fig 5: 10k events/s); without it the
+        pipeline runs saturated."""
+        t = self.times
+        cpu0 = time.process_time()
+        wall0 = time.perf_counter()
+        total = limit or self.generator.spec.num_records
+        start = 0
+        while start < total:
+            n = min(batch_size, total - start)
+            t0 = time.perf_counter()
+            batch = self.generator.batch(start, n)
+            t1 = time.perf_counter()
+            if self.processor is not None:
+                if poll_updates:
+                    self.processor.poll_updates()  # control topology
+                batch = self.processor.process(batch)
+            t2 = time.perf_counter()
+            self.store.append(batch)
+            t3 = time.perf_counter()
+            t.generate_s += t1 - t0
+            t.process_s += t2 - t1
+            t.store_s += t3 - t2
+            t.records += n
+            start += n
+            if target_rate:
+                ahead = start / target_rate - (time.perf_counter() - wall0)
+                if ahead > 0:
+                    time.sleep(ahead)
+        self.store.seal()
+        t.cpu_s = time.process_time() - cpu0
+        t.wall_s = time.perf_counter() - wall0
+        return t
+
+
+class TrainDataPipeline:
+    """Enriched log stream -> packed LM token batches.
+
+    Rule bitmaps ride along; ``include_rules``/``exclude_rules`` subselect
+    records by precomputed enrichment before tokenization (no byte rescans).
+    """
+
+    def __init__(self, generator: LogGenerator,
+                 processor: StreamProcessor = None, *,
+                 include_rules=None, exclude_rules=None):
+        self.generator = generator
+        self.processor = processor
+        self.include_rules = tuple(include_rules or ())
+        self.exclude_rules = tuple(exclude_rules or ())
+        if (self.include_rules or self.exclude_rules) and processor is None:
+            raise ValueError("rule-based selection needs a stream processor")
+
+    def _select(self, batch: RecordBatch) -> RecordBatch:
+        if not (self.include_rules or self.exclude_rules):
+            return batch
+        bm = batch.columns[ENRICH_COLUMN]
+        n_rules = self.processor.num_rules
+        keep = np.ones(len(batch), bool)
+        if self.include_rules:
+            mask = enrichment.rule_mask(self.include_rules, n_rules)
+            keep &= (bm & mask[None]).any(axis=1)
+        if self.exclude_rules:
+            mask = enrichment.rule_mask(self.exclude_rules, n_rules)
+            keep &= ~(bm & mask[None]).any(axis=1)
+        return batch.select(keep)
+
+    def batches(self, *, seq_len: int, batch_size: int,
+                records_per_step: int = 2048, limit_steps: int = None):
+        """Yield {'tokens': (B, S), 'labels': (B, S)} train batches."""
+        start = 0
+        step = 0
+        spec = self.generator.spec
+        while limit_steps is None or step < limit_steps:
+            raw = self.generator.batch(start % spec.num_records,
+                                       records_per_step)
+            start += records_per_step
+            if self.processor is not None:
+                self.processor.poll_updates()
+                raw = self.processor.process(raw)
+            raw = self._select(raw)
+            if len(raw) == 0:
+                continue
+            text = np.concatenate([raw.columns[f] for f in raw.text_fields],
+                                  axis=1)
+            rows = tokenizer.encode_bytes(text)
+            tokens, labels = tokenizer.pack_sequences(rows, seq_len, batch_size)
+            yield {"tokens": tokens, "labels": labels}
+            step += 1

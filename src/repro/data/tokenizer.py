@@ -1,0 +1,52 @@
+"""Byte-level tokenizer for LM training over log text.
+
+Vocabulary: 256 raw bytes + special tokens.  Arbitrary vocab sizes (the
+assigned architectures range 504..262144) are handled by mapping bytes into
+the low id range — the framework trains real models on real log bytes while
+keeping each architecture's embedding table at its assigned size.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+PAD = 0
+BOS = 1
+EOS = 2
+BYTE_OFFSET = 3
+
+
+def encode_bytes(data: np.ndarray, *, add_bos: bool = True) -> np.ndarray:
+    """(N, L) uint8 text -> (N, L+1) int32 token ids (BOS prepended)."""
+    toks = data.astype(np.int32) + BYTE_OFFSET
+    toks = np.where(data == 0, PAD, toks)
+    if add_bos:
+        bos = np.full((data.shape[0], 1), BOS, np.int32)
+        toks = np.concatenate([bos, toks], axis=1)
+    return toks
+
+
+def decode_tokens(tokens: np.ndarray) -> list:
+    out = []
+    for row in np.asarray(tokens):
+        bs = bytes(int(t) - BYTE_OFFSET for t in row
+                   if t >= BYTE_OFFSET and t < BYTE_OFFSET + 256)
+        out.append(bs.decode("utf-8", "replace"))
+    return out
+
+
+def pack_sequences(token_rows: np.ndarray, seq_len: int,
+                   batch: int) -> tuple:
+    """Greedy-pack variable-content rows into (batch, seq_len) blocks.
+
+    Returns (tokens, labels): labels are the next-token shift with PAD
+    positions masked to -1 (ignored by the loss)."""
+    flat = token_rows.reshape(-1)
+    flat = flat[flat != PAD]
+    need = batch * (seq_len + 1)
+    if len(flat) < need:
+        reps = -(-need // max(len(flat), 1))
+        flat = np.tile(flat, reps)
+    flat = flat[:need].reshape(batch, seq_len + 1)
+    tokens = flat[:, :-1].astype(np.int32)
+    labels = flat[:, 1:].astype(np.int32)
+    return tokens, labels

@@ -1,0 +1,4 @@
+from repro.distributed.sharding import (  # noqa: F401
+    ShardingRules, DEFAULT_RULES, logical_to_spec, spec_for, with_logical_constraint,
+    mesh_axis_names, data_axes, model_axis,
+)

@@ -1,0 +1,155 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every parameter / activation is annotated with *logical* axis names; a rule
+table maps logical names to mesh axes.  The production mesh is
+``(pod, data, model)`` (multi-pod) or ``(data, model)`` (single pod):
+
+  * ``data``  carries batch data-parallelism AND FSDP parameter sharding
+  * ``model`` carries tensor parallelism / expert parallelism / KV-sequence
+    sharding for distributed decode
+  * ``pod``   carries hierarchical data parallelism across pods (reduce
+    within pod over ICI first, then across pods over DCN)
+
+Rules are plain dicts so experiments (§Perf) can swap strategies without
+touching model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """logical axis -> mesh axis (or tuple of mesh axes, or None)."""
+    rules: tuple = (
+        # activations
+        ("batch", ("pod", "data")),
+        ("seq", None),                 # sequence replicated in train/prefill
+        ("kv_seq", "model"),           # decode KV cache: sequence over model
+        ("embed_act", None),
+        ("heads_act", "model"),
+        ("mlp_act", "model"),
+        ("vocab_act", "model"),
+        # parameters: ("fsdp dim", "tp dim")
+        ("embed", "data"),             # FSDP shard of d_model param dim
+        ("vocab", "model"),
+        ("heads", "model"),
+        ("kv_heads", "model"),
+        ("mlp", "model"),
+        ("expert", "model"),
+        ("expert_mlp", "data"),        # FSDP shard of expert ffn dim
+        ("ssm_inner", "model"),
+        ("ssm_state", None),
+        ("frontend_in", None),
+        ("layers", None),              # stacked scan dim, never sharded
+        (None, None),
+    )
+
+    def get(self, name):
+        for k, v in self.rules:
+            if k == name:
+                return v
+        raise KeyError(f"no sharding rule for logical axis {name!r}")
+
+    def replace(self, **kw) -> "ShardingRules":
+        new = dict(self.rules)
+        new.update(kw)
+        return ShardingRules(tuple(new.items()))
+
+
+DEFAULT_RULES = ShardingRules()
+
+
+def mesh_axis_names(mesh: Mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def data_axes(mesh: Mesh) -> tuple:
+    """Mesh axes carrying batch parallelism."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def model_axis(mesh: Mesh):
+    return "model" if "model" in mesh.axis_names else None
+
+
+def _resolve(axis, mesh: Mesh):
+    """Drop mesh axes that don't exist on this mesh (e.g. 'pod' on single pod)."""
+    if axis is None:
+        return None
+    if isinstance(axis, (tuple, list)):
+        kept = tuple(a for a in axis if a in mesh.axis_names)
+        return kept if kept else None
+    return axis if axis in mesh.axis_names else None
+
+
+def logical_to_spec(logical: tuple, mesh: Mesh, rules: ShardingRules = DEFAULT_RULES) -> P:
+    return P(*[_resolve(rules.get(name), mesh) for name in logical])
+
+
+def spec_for(logical: tuple, mesh: Mesh, rules: ShardingRules = DEFAULT_RULES) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(logical, mesh, rules))
+
+
+def with_logical_constraint(x, logical: tuple, mesh: Mesh = None,
+                            rules: ShardingRules = DEFAULT_RULES):
+    """Apply a sharding constraint from logical axis names (no-op without mesh)."""
+    if mesh is None or mesh.empty:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec_for(logical, mesh, rules))
+
+
+def tree_specs(logical_tree, mesh: Mesh, rules: ShardingRules = DEFAULT_RULES):
+    """Map a pytree of logical-axis tuples to a pytree of NamedShardings."""
+    return jax.tree.map(
+        lambda logical: spec_for(logical, mesh, rules),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def _axes_size(axis, mesh: Mesh) -> int:
+    axes = axis if isinstance(axis, (tuple, list)) else (axis,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def checked_spec_for(logical: tuple, shape: tuple, mesh: Mesh,
+                     rules: ShardingRules = DEFAULT_RULES) -> NamedSharding:
+    """Like spec_for, but dims that do not divide their mesh-axis product
+    fall back to replication (e.g. GQA kv_heads=10 on model=16 — see
+    DESIGN.md §6: head replication is the baseline, padding is a perf
+    iteration)."""
+    spec = []
+    used: set = set()
+    for dim, name in zip(shape, logical):
+        ax = _resolve(rules.get(name), mesh)
+        if ax is not None and dim % _axes_size(ax, mesh) != 0:
+            ax = None
+        # a mesh axis may appear at most once per spec: later dims that map
+        # to an already-used axis replicate instead
+        if ax is not None:
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            if used & set(axes):
+                ax = None
+            else:
+                used |= set(axes)
+        spec.append(ax)
+    return NamedSharding(mesh, P(*spec))
+
+
+def tree_specs_checked(logical_tree, shape_tree, mesh: Mesh,
+                       rules: ShardingRules = DEFAULT_RULES):
+    """Shape-aware tree_specs: every leaf sharding is divisibility-checked."""
+    is_logical = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    return jax.tree.map(
+        lambda logical, spec: checked_spec_for(logical, spec.shape, mesh,
+                                               rules),
+        logical_tree, shape_tree, is_leaf=is_logical)

@@ -1,0 +1,53 @@
+"""Jitted wrappers for bitmap filtering: count and copy (index-compaction)
+query modes over enrichment columns."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitmap_filter.bitmap_filter import (bitmap_filter_kernel,
+                                                       BLOCK_N)
+from repro.kernels.bitmap_filter.ref import bitmap_filter_ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def bitmap_match(bitmaps, query, *, backend: str = "ref",
+                 block_n: int = BLOCK_N, interpret: bool = True):
+    """(N, W) & (W,) -> match (N,) bool."""
+    N = bitmaps.shape[0]
+    if backend == "pallas":
+        n_pad = _round_up(max(N, 1), block_n)
+        bm = jnp.pad(bitmaps, ((0, n_pad - N), (0, 0)))
+        match, _ = bitmap_filter_kernel(bm, query[None], block_n=block_n,
+                                        interpret=interpret)
+        return match[:N].astype(bool)
+    return bitmap_filter_ref(bitmaps, query)
+
+
+def bitmap_count(bitmaps, query, *, backend: str = "ref",
+                 block_n: int = BLOCK_N, interpret: bool = True):
+    """Aggregation (count) query — paper's Q3/Qx-with-count."""
+    if backend == "pallas":
+        N = bitmaps.shape[0]
+        n_pad = _round_up(max(N, 1), block_n)
+        bm = jnp.pad(bitmaps, ((0, n_pad - N), (0, 0)))
+        _, counts = bitmap_filter_kernel(bm, query[None], block_n=block_n,
+                                         interpret=interpret)
+        return counts.sum(dtype=jnp.int32)
+    return bitmap_filter_ref(bitmaps, query).sum(dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("max_out",))
+def bitmap_select(bitmaps, query, *, max_out: int):
+    """Copy mode: compacted indices of matching records (static bound).
+    Returns (indices (max_out,) int32 padded with -1, count)."""
+    match = bitmap_filter_ref(bitmaps, query)
+    count = match.sum(dtype=jnp.int32)
+    order = jnp.argsort(~match)                                  # matches first
+    idx = jnp.where(jnp.arange(max_out) < count, order[:max_out], -1)
+    return idx, count

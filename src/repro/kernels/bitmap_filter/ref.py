@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the query-time bitmap filter."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bitmap_filter_ref(bitmaps, query):
+    """bitmaps: (N, W) uint32; query: (W,) uint32.
+    Returns match: (N,) bool — record matches ANY rule bit in `query`."""
+    return jnp.any(bitmaps & query[None], axis=1)
+
+
+def bitmap_count_ref(bitmaps, query):
+    return bitmap_filter_ref(bitmaps, query).sum(dtype=jnp.int32)

@@ -1,0 +1,143 @@
+"""Jitted wrapper for the DFA-scan kernel: padding, byte-class mapping,
+engine selection, and shape bucketing so hot-swapped engines never retrace.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.dfa_scan.dfa_scan import dfa_scan_kernel, BLOCK_N
+from repro.kernels.dfa_scan.ref import dfa_scan_ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "block_n", "interpret"))
+def _dispatch(data, delta, emit, byte_classes, *, backend: str,
+              block_n: int, interpret: bool):
+    cls = jnp.take(byte_classes, data.astype(jnp.int32))
+    if backend == "ref":
+        return dfa_scan_ref(data, delta, emit, byte_classes)
+    if backend == "pallas":
+        return dfa_scan_kernel(cls, delta, emit, block_n=block_n,
+                               interpret=interpret)
+    if backend == "parallel":
+        return _parallel_dfa(cls, delta, emit)
+    raise ValueError(backend)
+
+
+def dfa_scan(data, delta, emit, byte_classes, *, backend: str = "ref",
+             block_n: int = BLOCK_N, interpret: bool = True):
+    """data: (N, L) uint8 (any N) -> (N, W) uint32 rule bitmaps."""
+    N = data.shape[0]
+    n_pad = _round_up(max(N, 1), block_n) if backend == "pallas" else N
+    if n_pad != N:
+        data = jnp.pad(data, ((0, n_pad - N), (0, 0)))
+    out = _dispatch(data, delta, emit, byte_classes, backend=backend,
+                    block_n=block_n, interpret=interpret)
+    return out[:N]
+
+
+# ---------------------------------------------------------------------------
+# Selective two-pass scan (§Perf hillclimb D): Hyperscan-style confirm path.
+# Pass 1 runs the DFA tracking ONE bit per record ("did any accepting state
+# occur"), with the accept flag PACKED into the transition value
+# (delta2 = next_state*2 + accepts(next_state)) so each byte costs a single
+# gather + shift/and/or.  Pass 2 (the full emit-bitmap walk) runs only on
+# the records that matched — under the paper's high-selectivity workloads,
+# almost none.  Tables are int16 when the packed value fits (S*2 < 32768),
+# halving the working set.
+# ---------------------------------------------------------------------------
+
+def pack_delta_any(delta, emit):
+    """(S, C) int32 + (S, W) emit -> packed delta2 (int16 when it fits)."""
+    import numpy as onp
+    d = onp.asarray(delta)
+    accepts = (onp.asarray(emit) != 0).any(axis=1).astype(onp.int32)
+    packed = d * 2 + accepts[d]
+    if packed.max() < 32768:
+        return packed.astype(onp.int16)
+    return packed
+
+
+@functools.partial(jax.jit)
+def _any_scan(cls, delta2_flat, n_classes):
+    """cls: (N, L) int32 class ids -> (N,) bool any-accept flag."""
+    N, L = cls.shape
+
+    def body(carry, col):
+        packed, hit = carry
+        state = (packed >> 1).astype(jnp.int32)
+        nxt = jnp.take(delta2_flat, state * n_classes + col).astype(jnp.int32)
+        return (nxt, hit | (nxt & 1).astype(jnp.bool_)), None
+
+    init = (jnp.zeros((N,), jnp.int32), jnp.zeros((N,), jnp.bool_))
+    (_, hit), _ = jax.lax.scan(body, init, cls.T)
+    return hit
+
+
+def dfa_scan_selective(data, delta, emit, byte_classes, delta2=None):
+    """Two-pass matcher: any-accept prefilter + full confirm on matches.
+    data: (N, L) uint8 -> (N, W) uint32 (numpy).  Not jittable end-to-end
+    (the confirm subset is data-dependent); pads the subset to a power of
+    two so the confirm path retraces O(log N) times at most."""
+    import numpy as onp
+    if delta2 is None:
+        delta2 = pack_delta_any(delta, emit)
+    cls = jnp.take(jnp.asarray(byte_classes),
+                   jnp.asarray(data).astype(jnp.int32))
+    n_classes = delta.shape[1]
+    hit = onp.asarray(_any_scan(cls, jnp.asarray(delta2).reshape(-1),
+                                n_classes))
+    N = data.shape[0]
+    W = emit.shape[1]
+    out = onp.zeros((N, W), onp.uint32)
+    idx = onp.flatnonzero(hit)
+    if len(idx) == 0:
+        return out
+    n_pad = 1 << (len(idx) - 1).bit_length()
+    sub = onp.zeros((n_pad, data.shape[1]), onp.uint8)
+    sub[:len(idx)] = onp.asarray(data)[idx]
+    bm = dfa_scan(jnp.asarray(sub), jnp.asarray(delta), jnp.asarray(emit),
+                  jnp.asarray(byte_classes), backend="ref")
+    out[idx] = onp.asarray(bm)[:len(idx)]
+    return out
+
+
+def _parallel_dfa(cls, delta, emit):
+    """Beyond-paper variant: Mytkowicz-style data-parallel FSM.
+
+    Each byte position induces a transition *function* [S]->[S] (a gathered
+    column of delta); function composition is associative, so the running
+    state at every position is an ``associative_scan`` — O(log L) depth at
+    the cost of materializing (N, L, S) function tables.  Only sensible for
+    small automata (S <= 256); the roofline trade is analyzed in
+    EXPERIMENTS.md §Perf.
+    """
+    N, L = cls.shape
+    S = delta.shape[0]
+    if S > 256:
+        raise ValueError("parallel_dfa is intended for small automata (S<=256)")
+    # funcs[n, l, s] = delta[s, cls[n, l]]
+    funcs = delta.T[cls]                                        # (N, L, S)
+
+    def compose(f, g):
+        # (f then g): h[s] = g[f[s]]
+        return jnp.take_along_axis(g, f, axis=-1)
+
+    prefix = jax.lax.associative_scan(compose, funcs, axis=1)   # (N, L, S)
+    states = prefix[..., 0]                                     # start state 0
+    bms = jnp.take(emit, states, axis=0)                        # (N, L, W)
+    return jax.lax.reduce_or(bms, axes=(1,)) if hasattr(jax.lax, "reduce_or") \
+        else _or_reduce(bms)
+
+
+def _or_reduce(x):
+    def f(a, b):
+        return a | b
+    return jax.lax.reduce(x, jnp.zeros((), x.dtype), f, (1,))

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the AC-DFA batch scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dfa_scan_ref(data, delta, emit, byte_classes):
+    """data: (N, L) uint8; delta: (S, C) int32; emit: (S, W) uint32;
+    byte_classes: (256,) int32.  Returns bitmaps (N, W) uint32.
+
+    Records are padded with byte 0; byte 0's class transitions are part of
+    the automaton (it never appears in patterns, so it only walks fail links
+    — matches already recorded stay recorded)."""
+    N, L = data.shape
+    W = emit.shape[1]
+    cls = jnp.take(byte_classes, data.astype(jnp.int32))        # (N, L)
+
+    def step(carry, col):
+        state, bm = carry
+        state = delta[state, col]
+        bm = bm | jnp.take(emit, state, axis=0)
+        return (state, bm), None
+
+    init = (jnp.zeros((N,), jnp.int32), jnp.zeros((N, W), jnp.uint32))
+    (state, bm), _ = jax.lax.scan(step, init, cls.T)
+    return bm

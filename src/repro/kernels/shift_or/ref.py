@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the bit-parallel (shift-AND) multi-pattern matcher."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def shift_or_ref(data, tbl, init_mask, final_mask):
+    """data: (N, L) uint8; tbl: (256, Wb) uint32 per-byte position masks;
+    init_mask/final_mask: (Wb,) uint32.  Returns match words (N, Wb) uint32
+    with a bit set at each pattern's final position iff that pattern occurred.
+
+    Patterns are first-fit packed into independent 32-bit words (no pattern
+    spans a word boundary), so the per-word recurrence needs no carries:
+        S = ((S << 1) | I) & T[byte];  M |= S & F
+    """
+    N, L = data.shape
+    Wb = tbl.shape[1]
+
+    def step(carry, byte_col):
+        S, M = carry
+        t = jnp.take(tbl, byte_col.astype(jnp.int32), axis=0)   # (N, Wb)
+        S = ((S << jnp.uint32(1)) | init_mask[None]) & t
+        M = M | (S & final_mask[None])
+        return (S, M), None
+
+    init = (jnp.zeros((N, Wb), jnp.uint32), jnp.zeros((N, Wb), jnp.uint32))
+    (S, M), _ = jax.lax.scan(step, init, data.T)
+    return M

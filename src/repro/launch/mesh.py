@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+A FUNCTION (never a module-level constant) so importing this module never
+touches jax device state.  The caller is responsible for the placeholder
+device count (launch/dryrun.py sets XLA_FLAGS before any import).
+
+Mesh shapes (TPU v5e pods):
+  single pod : (16, 16)       axes (data, model)   = 256 chips
+  multi  pod : (2, 16, 16)    axes (pod, data, model) = 512 chips
+"""
+from __future__ import annotations
+
+import jax
+
+SINGLE_POD_SHAPE = (16, 16)
+MULTI_POD_SHAPE = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, found {len(devices)}; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count "
+            "before the first jax import (see launch/dryrun.py)")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_smoke_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh over whatever devices exist (tests on 1 CPU device)."""
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])

@@ -1,0 +1,99 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb iterations on the model plane — each iteration re-lowers
+one dry-run cell with a candidate change and writes a tagged result JSON for
+before/after comparison against the baseline cell.
+
+    PYTHONPATH=src python -m repro.launch.perf_iterations --iter b1
+    b1: phi3-mini train_4k, pure-FSDP rules (no TP) — kills the Megatron
+        activation all-reduces for a model that does not need TP at 3.8B.
+    b2: phi3-mini train_4k on the multi-pod mesh, int8+error-feedback
+        cross-pod gradient psum vs the fp32 GSPMD all-reduce.
+    b3: phi3-mini train_4k, FSDP + remat policy keeping checkpointed dots
+        (fewer collective replays in backward).
+    c1: yi-34b decode_32k with int8 KV cache (+bf16 scales).
+    c2: yi-34b decode_32k int8 KV + pure-data decode sharding.
+"""  # noqa: E402
+
+import argparse
+import dataclasses
+import sys
+
+from repro.configs import base as cfgbase
+from repro.distributed.sharding import DEFAULT_RULES, ShardingRules
+from repro.launch import dryrun
+from repro.models.model import Model
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_step import TrainStepConfig
+
+FSDP_RULES = ShardingRules(tuple(dict(DEFAULT_RULES.rules, **{
+    "batch": ("pod", "data", "model"),    # all chips carry batch DP
+    "embed": ("data", "model"),           # params fully FSDP-sharded
+    "mlp": None, "heads": None, "kv_heads": None, "vocab": None,
+    "expert": None, "expert_mlp": ("data", "model"),
+    "heads_act": None, "mlp_act": None, "vocab_act": None,
+    "kv_seq": "model",                    # decode KV stays seq-sharded
+}).items()))
+
+# Serving posture: weights RESIDENT (TP-sharded over model, replicated over
+# data) — no per-step FSDP parameter all-gathers at decode time.
+SERVE_RULES = ShardingRules(tuple(dict(DEFAULT_RULES.rules, **{
+    "embed": None,
+    "expert_mlp": None,
+}).items()))
+
+
+def run(name: str, out_dir: str = "results/dryrun") -> dict:
+    opt = OptimizerConfig()
+    if name == "b1":
+        ts = TrainStepConfig(microbatches=1, optimizer=opt)
+        return dryrun.run_cell("phi3-mini-3.8b", "train_4k", "single",
+                               ts_cfg=ts, out_dir=out_dir, rules=FSDP_RULES,
+                               tag="b1_fsdp")
+    if name == "b2":
+        ts = TrainStepConfig(microbatches=8, grad_compression="int8",
+                             optimizer=opt)
+        return dryrun.run_cell("phi3-mini-3.8b", "train_4k", "multi",
+                               ts_cfg=ts, out_dir=out_dir,
+                               tag="b2_int8grad")
+    if name == "b2base":
+        ts = TrainStepConfig(microbatches=8, optimizer=opt)
+        return dryrun.run_cell("phi3-mini-3.8b", "train_4k", "multi",
+                               ts_cfg=ts, out_dir=out_dir, tag="b2_base")
+    if name == "b3":
+        ts = TrainStepConfig(microbatches=1, optimizer=opt)
+        return dryrun.run_cell("phi3-mini-3.8b", "train_4k", "single",
+                               ts_cfg=ts, out_dir=out_dir, rules=FSDP_RULES,
+                               tag="b3_fsdp_mb8")
+    if name == "c0":    # re-baselined with result-size AG accounting
+        return dryrun.run_cell("yi-34b", "decode_32k", "single",
+                               out_dir=out_dir, tag="c0_base")
+    if name in ("c1", "c2"):
+        cfg = dataclasses.replace(cfgbase.get_config("yi-34b"),
+                                  kv_cache_dtype="int8")
+        # register a variant config under a tagged name
+        cfgbase.register(dataclasses.replace(cfg, name="yi-34b-kvq"))
+        rules = SERVE_RULES if name == "c2" else DEFAULT_RULES
+        return dryrun.run_cell("yi-34b-kvq", "decode_32k", "single",
+                               out_dir=out_dir, rules=rules,
+                               tag=f"{name}_int8kv")
+    if name == "c2base":  # resident weights, bf16 cache (isolate the rules)
+        return dryrun.run_cell("yi-34b", "decode_32k", "single",
+                               out_dir=out_dir, rules=SERVE_RULES,
+                               tag="c2_base_resident")
+    raise SystemExit(f"unknown iteration {name}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--iter", required=True,
+                    choices=("b1", "b2", "b2base", "b3", "c0", "c1", "c2", "c2base"))
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args(argv)
+    cell = run(args.iter, args.out)
+    return 0 if cell.get("status") == "ok" else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,89 @@
+"""Render the roofline table + dry-run summary from results/dryrun/*.json.
+
+    PYTHONPATH=src python -m repro.launch.report --dir results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import base as cfgbase
+
+HBM_PER_CHIP = 16 * 2**30  # v5e
+
+
+def load_cells(dirpath, tag: str = "") -> list:
+    cells = []
+    for f in sorted(Path(dirpath).glob("*.json")):
+        parts = f.stem.split("__")
+        if tag and (len(parts) < 4 or parts[3] != tag):
+            continue
+        if not tag and len(parts) > 3:
+            continue
+        cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def mem_total(cell) -> int:
+    m = cell["roofline"]["memory_per_device"]
+    return (m.get("argument_size_in_bytes", 0)
+            + m.get("temp_size_in_bytes", 0)
+            + m.get("output_size_in_bytes", 0))
+
+
+def roofline_row(cell) -> str:
+    r = cell["roofline"]
+    mem_gib = mem_total(cell) / 2**30
+    fits = "Y" if mem_total(cell) <= HBM_PER_CHIP else "OVER"
+    if cell.get("cost_mode") == "scan":
+        # scan-mode cells prove compile + memory only; XLA counts loop
+        # bodies once so the cost columns would be meaningless
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"n/a | n/a | n/a | compile+mem proof | n/a | n/a | "
+                f"{mem_gib:.1f} ({fits}) |")
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compute_s']:.4f} | {r['memory_s']:.4f} | "
+            f"{r['collective_s']:.4f} | {r['dominant']} | "
+            f"{r['useful_flops_ratio']:.1%} | {r['roofline_fraction']:.2%} | "
+            f"{mem_gib:.1f} ({fits}) |")
+
+
+def skipped_rows() -> list:
+    out = []
+    for arch in cfgbase.list_configs():
+        cfg = cfgbase.get_config(arch)
+        for shape in cfgbase.SHAPES:
+            if not cfg.shape_supported(shape):
+                out.append(f"| {arch} | {shape} | — | "
+                           f"skip: {cfg.skip_reason(shape)[:60]}… |")
+    return out
+
+
+HEADER = ("| arch | shape | mesh | compute s | memory s | collective s | "
+          "dominant | useful | roofline | mem/dev GiB |\n"
+          "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args(argv)
+    cells = load_cells(args.dir, args.tag)
+    print(HEADER)
+    for c in sorted(cells, key=lambda c: (c["arch"], c["shape"], c["mesh"])):
+        if c.get("status") == "ok":
+            print(roofline_row(c))
+    print()
+    print("Skipped cells (assignment-mandated):")
+    for row in skipped_rows():
+        print(row)
+    oks = [c for c in cells if c.get("status") == "ok"]
+    print(f"\n{len(oks)} cells compiled OK")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

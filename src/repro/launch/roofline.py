@@ -1,0 +1,131 @@
+"""Roofline terms from a compiled dry-run artifact (task spec §Roofline).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.  XLA's cost analysis and the partitioned HLO module are
+per-device, so global quantities are per-device x chips; the spec's ratios
+
+    compute    = HLO_FLOPs        / (chips x peak)
+    memory     = HLO_bytes        / (chips x HBM_bw)
+    collective = collective_bytes / (chips x link_bw)
+
+reduce to per-device quantities over per-chip rates.  ``model_flops`` is
+6·N·D (train) / 2·N·D (forward-only), N = active params, D = tokens.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field, asdict
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link (ICI)
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device (partitioned-module) measurements
+    device_flops: float
+    device_bytes: float
+    device_collective_bytes: float
+    collective_detail: dict = field(default_factory=dict)
+    # memory fit
+    memory_per_device: dict = field(default_factory=dict)
+    # usefulness
+    model_flops_global: float = 0.0
+
+    # -- spec terms ------------------------------------------------------
+    @property
+    def compute_s(self) -> float:
+        return self.device_flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.device_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.device_collective_bytes / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Lower-bound step time: the dominant term (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs_global — remat/redundancy waste."""
+        total = self.device_flops * self.chips
+        return self.model_flops_global / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU bound: useful FLOPs at the dominant-term step time."""
+        if self.step_s == 0:
+            return 0.0
+        achieved = self.model_flops_global / self.step_s
+        return achieved / (self.chips * PEAK_FLOPS)
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d.update(compute_s=self.compute_s, memory_s=self.memory_s,
+                 collective_s=self.collective_s, dominant=self.dominant,
+                 step_s=self.step_s,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+    def row(self) -> str:
+        return (f"{self.arch:24s} {self.shape:12s} {self.mesh:10s} "
+                f"compute {self.compute_s:9.4f}s  memory {self.memory_s:9.4f}s  "
+                f"collective {self.collective_s:9.4f}s  -> {self.dominant:10s} "
+                f"useful {self.useful_flops_ratio:6.1%}  "
+                f"roofline {self.roofline_fraction:6.1%}")
+
+
+def model_flops(cfg, shape_spec) -> float:
+    """6·N_active·D for train, 2·N_active·D forward-only."""
+    n = cfg.active_param_count()
+    if shape_spec.kind == "train":
+        d = shape_spec.global_batch * shape_spec.seq_len
+        return 6.0 * n * d
+    if shape_spec.kind == "prefill":
+        d = shape_spec.global_batch * shape_spec.seq_len
+        return 2.0 * n * d
+    # decode: one new token per sequence
+    return 2.0 * n * shape_spec.global_batch
+
+
+def from_compiled(arch: str, shape: str, mesh_name: str, chips: int,
+                  compiled, collective_stats, model_flops_global: float
+                  ) -> RooflineTerms:
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            mem_d[k] = int(v)
+    return RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        device_flops=float(cost.get("flops", 0.0)),
+        device_bytes=float(cost.get("bytes accessed", 0.0)),
+        device_collective_bytes=float(collective_stats.total_bytes),
+        collective_detail=collective_stats.summary(),
+        memory_per_device=mem_d,
+        model_flops_global=model_flops_global)
+
+
+def save_json(path, terms_list) -> None:
+    with open(path, "w") as f:
+        json.dump([t.to_dict() for t in terms_list], f, indent=1)

@@ -1,0 +1,274 @@
+"""Attention: chunked (flash-style) full attention, banded sliding-window
+attention, and single-token decode attention over (possibly sequence-sharded)
+KV caches.  Pure JAX — written so the GSPMD partitioner produces the intended
+collectives; Pallas kernels are reserved for the paper's hot spots (matching).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDecl, apply_rope
+
+NEG_INF = -1e30
+
+
+def _chunk(x, c, axis=1):
+    """(B, S, ...) -> (n, B, c, ...) chunks along `axis`."""
+    B = x.shape[0]
+    n = x.shape[axis] // c
+    x = x.reshape(x.shape[:axis] + (n, c) + x.shape[axis + 1:])
+    return jnp.moveaxis(x, axis, 0)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=0, q_offset=0, chunk=512):
+    """Online-softmax chunked attention.
+
+    q: (B, Sq, H, hd);  k, v: (B, Sk, KV, hd);  H % KV == 0.
+    Returns (B, Sq, H, hd).  fp32 accumulators, bf16 in/out friendly.
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    cq = chunk if Sq % chunk == 0 else Sq
+    ck = chunk if Sk % chunk == 0 else Sk
+    scale = hd ** -0.5
+
+    qs = _chunk(q.reshape(B, Sq, KV, G, hd), cq)          # (nq, B, cq, KV, G, hd)
+    ks = _chunk(k, ck)                                     # (nk, B, ck, KV, hd)
+    vs = _chunk(v, ck)
+
+    def q_body(_, qi_i):
+        qi, i = qi_i
+
+        def k_body(carry, kj_j):
+            m, l, acc = carry
+            kj, vj, j = kj_j
+            s = jnp.einsum("bqKgd,bkKd->bKgqk", qi.astype(jnp.float32),
+                           kj.astype(jnp.float32)) * scale
+            rows = q_offset + i * cq + jnp.arange(cq)
+            cols = j * ck + jnp.arange(ck)
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= rows[:, None] >= cols[None, :]
+            if window:
+                mask &= (rows[:, None] - cols[None, :]) < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            safe = jnp.where(m_new <= NEG_INF, 0.0, m_new)
+            p = jnp.exp(s - safe[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            corr = jnp.where(m <= NEG_INF, 0.0, jnp.exp(m - safe))
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bKgqk,bkKd->bKgqd", p, vj.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        init = (jnp.full((B, KV, G, cq), NEG_INF, jnp.float32),
+                jnp.zeros((B, KV, G, cq), jnp.float32),
+                jnp.zeros((B, KV, G, cq, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            k_body, init, (ks, vs, jnp.arange(ks.shape[0])))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]       # (B, KV, G, cq, hd)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_body, None, (qs, jnp.arange(qs.shape[0])))
+    # (nq, B, KV, G, cq, hd) -> (B, Sq, H, hd)
+    outs = jnp.moveaxis(outs, 0, 3)                        # (B, KV, G, nq, cq, hd)
+    outs = outs.reshape(B, KV, G, Sq, hd)
+    return jnp.moveaxis(outs, 3, 1).reshape(B, Sq, H, hd)
+
+
+def local_attention(q, k, v, *, window, q_offset=0):
+    """Banded causal attention: each chunk attends to itself + previous chunk.
+
+    FLOPs are O(S * 2w) — honest sliding-window cost, unlike masked full
+    attention.  `window` doubles as the chunk size.
+    """
+    B, S0, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    c = min(window, S0)
+    if S0 % c:  # pad to a chunk multiple; padded tail rows are sliced off
+        pad_n = c - S0 % c
+        q = jnp.pad(q, ((0, 0), (0, pad_n), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad_n), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_n), (0, 0), (0, 0)))
+    Sq = q.shape[1]
+    scale = hd ** -0.5
+
+    qs = _chunk(q.reshape(B, Sq, KV, G, hd), c)            # (n, B, c, KV, G, hd)
+    pad = jnp.zeros_like(k[:, :c])
+    kp = _chunk(jnp.concatenate([pad, k], 1), c)           # (n+1, B, c, KV, hd)
+    vp = _chunk(jnp.concatenate([jnp.zeros_like(v[:, :c]), v], 1), c)
+    k2 = jnp.concatenate([kp[:-1], kp[1:]], axis=2)        # (n, B, 2c, KV, hd)
+    v2 = jnp.concatenate([vp[:-1], vp[1:]], axis=2)
+
+    rows = jnp.arange(c)[:, None]                          # within-chunk
+    cols = jnp.arange(2 * c)[None, :] - c                  # relative to chunk start
+    band = (rows >= cols) & ((rows - cols) < window)
+
+    def body(_, xs):
+        qi, ki, vi, i = xs
+        s = jnp.einsum("bqKgd,bkKd->bKgqk", qi.astype(jnp.float32),
+                       ki.astype(jnp.float32)) * scale
+        valid = band & ((cols + i * c) >= 0)               # mask the left pad
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bKgqk,bkKd->bKgqd", p, vi.astype(jnp.float32))
+        return None, o.astype(q.dtype)
+
+    _, outs = jax.lax.scan(body, None, (qs, k2, v2, jnp.arange(qs.shape[0])))
+    outs = jnp.moveaxis(outs, 0, 3).reshape(B, KV, G, Sq, hd)
+    return jnp.moveaxis(outs, 3, 1).reshape(B, Sq, H, hd)[:, :S0]
+
+
+def decode_attention(q, k_cache, v_cache, cache_len):
+    """One-token attention over the cache (supports sequence-sharded caches:
+    the softmax over the sharded axis lowers to psum-style collectives).
+
+    q: (B, 1, H, hd);  caches: (B, Smax, KV, hd);  attends to pos <= cache_len.
+    """
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    qf = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bKgd,bsKd->bKgs", qf, k_cache.astype(jnp.float32)) * hd ** -0.5
+    pos = jnp.arange(k_cache.shape[1])
+    s = jnp.where(pos[None, None, None] <= cache_len, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bKgs,bsKd->bKgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV quantization (§Perf hillclimb C): per-(token, kv-head) absmax
+# scales; halves decode-time cache traffic at <1e-2 logit error.
+# ---------------------------------------------------------------------------
+
+def quantize_kv(x):
+    """x: (..., hd) -> (int8 values, bf16 scales (...,))."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q, scale):
+    return q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + cache handling)
+# ---------------------------------------------------------------------------
+
+def attn_decls(cfg) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": ParamDecl((d, H, hd), ("embed", "heads", None)),
+        "wk": ParamDecl((d, KV, hd), ("embed", "kv_heads", None)),
+        "wv": ParamDecl((d, KV, hd), ("embed", "kv_heads", None)),
+        "wo": ParamDecl((H, hd, d), ("heads", None, "embed")),
+    }
+
+
+def attn_apply(params, x, cfg, *, positions, window=0, constrain=lambda x, a: x):
+    """Train/prefill path.  x: (B, S, d).  Returns (out, (k, v)) — k/v in cache
+    layout (B, S, KV, hd) so prefill can persist them."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    q = constrain(q, ("batch", "seq", "heads_act", None))
+    k = constrain(k, ("batch", "seq", "heads_act", None))
+    if cfg.causal:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if window:
+        o = local_attention(q, k, v, window=window)
+    else:
+        o = chunked_attention(q, k, v, causal=cfg.causal)
+    o = constrain(o, ("batch", "seq", "heads_act", None))
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+    return out, (k, v)
+
+
+def attn_decode_apply(params, x, cfg, cache, cache_len, *, constrain=lambda x, a: x):
+    """Decode path.  x: (B, 1, d); cache {'k','v'[,'k_s','v_s']}:
+    (B, Smax, KV, hd).  Writes the new KV at cache_len, attends to
+    <= cache_len.  int8 caches carry per-(token, head) scales."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    pos = cache_len[None].astype(jnp.int32)                # (1,) broadcast over B
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    quantized = "k_s" in cache
+    if quantized:
+        k_q, k_s = quantize_kv(k)
+        v_q, v_s = quantize_kv(v)
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k_q,
+                                                     cache_len, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v_q,
+                                                     cache_len, axis=1),
+            "k_s": jax.lax.dynamic_update_slice_in_dim(cache["k_s"], k_s,
+                                                       cache_len, axis=1),
+            "v_s": jax.lax.dynamic_update_slice_in_dim(cache["v_s"], v_s,
+                                                       cache_len, axis=1),
+        }
+        new_cache = {n: constrain(c, ("batch", "kv_seq", None, None)[:c.ndim])
+                     for n, c in new_cache.items()}
+        k_read = dequantize_kv(new_cache["k"], new_cache["k_s"])
+        v_read = dequantize_kv(new_cache["v"], new_cache["v_s"])
+    else:
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), cache_len, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), cache_len, axis=1),
+        }
+        new_cache = {n: constrain(c, ("batch", "kv_seq", None, None))
+                     for n, c in new_cache.items()}
+        k_read, v_read = new_cache["k"], new_cache["v"]
+    o = decode_attention(q, k_read, v_read, cache_len)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+    return out, new_cache
+
+
+def attn_decode_apply_ring(params, x, cfg, cache, cache_len, window: int, *,
+                           constrain=lambda x, a: x):
+    """Decode against a ring (sliding-window) KV cache of size `window`.
+
+    Ring slot j holds absolute position p_j = cache_len - ((cache_len - j) mod W)
+    (so slot cache_len % W holds the just-written token).  Keys are stored with
+    RoPE already applied at their absolute positions.
+    """
+    dt = x.dtype
+    W = cache["k"].shape[1]
+    B = x.shape[0]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    pos = cache_len[None].astype(jnp.int32)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    slot = jnp.mod(cache_len, W)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+
+    j = jnp.arange(W)
+    p_j = cache_len - jnp.mod(cache_len - j, W)                # absolute positions
+    valid = (p_j >= 0) & (p_j > cache_len - window) & (p_j <= cache_len)
+    G = H // KV
+    qf = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bKgd,bsKd->bKgs", qf, k_cache.astype(jnp.float32)) * hd ** -0.5
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bKgs,bsKd->bKgd", p, v_cache.astype(jnp.float32))
+    o = o.reshape(B, 1, H, hd).astype(dt)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+    return out, {"k": k_cache, "v": v_cache}

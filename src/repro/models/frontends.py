@@ -1,0 +1,27 @@
+"""Modality frontend STUBS (per the assignment: ``[audio]``/``[vlm]`` entries
+specify the transformer BACKBONE only; the modality frontend provides
+precomputed frame/patch embeddings).
+
+These helpers synthesize deterministic embeddings with the right shapes for
+examples/smoke tests; ``input_specs()`` (configs/base.py) provides the
+matching ShapeDtypeStructs for the dry-run.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def vision_patch_embeds(batch: int, num_patches: int, d_model: int,
+                        seed: int = 0) -> np.ndarray:
+    """InternViT stand-in: (B, P, d_model) precomputed patch embeddings."""
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((batch, num_patches, d_model)) * 0.02
+            ).astype(np.float32)
+
+
+def audio_frame_embeds(batch: int, num_frames: int, frontend_dim: int,
+                       seed: int = 0) -> np.ndarray:
+    """HuBERT conv-feature-extractor stand-in: (B, T, frontend_dim) frames."""
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((batch, num_frames, frontend_dim)) * 0.1
+            ).astype(np.float32)

@@ -1,0 +1,139 @@
+"""Parameter declarations + elementary layers (pure JAX, framework-free).
+
+A model is declared as a pytree of ``ParamDecl`` leaves.  From that single
+declaration we derive:
+  * materialized parameters  (``materialize`` — per-leaf folded RNG)
+  * ShapeDtypeStructs        (``shape_tree`` — for .lower() without allocation)
+  * logical-axis trees       (``logical_tree`` — consumed by distributed.sharding)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamDecl:
+    shape: tuple
+    logical: tuple          # logical axis name per dim (see distributed/sharding.py)
+    init: str = "normal"    # normal | zeros | ones | constant | uniform
+    scale: float = -1.0     # -1 -> 1/sqrt(fan_in) for "normal"
+    const: float = 0.0
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_decl(x) -> bool:
+    return isinstance(x, ParamDecl)
+
+
+def stack_decls(n: int, tree):
+    """Prepend a stacked 'layers' dim of size n to every decl in the tree."""
+    def f(d: ParamDecl) -> ParamDecl:
+        return dataclasses.replace(d, shape=(n,) + tuple(d.shape),
+                                   logical=("layers",) + tuple(d.logical))
+    return jax.tree.map(f, tree, is_leaf=is_decl)
+
+
+def _materialize_leaf(path, decl: ParamDecl, root_key):
+    key = jax.random.fold_in(root_key, _path_hash(path))
+    dtype = jnp.dtype(decl.dtype)
+    if decl.init == "zeros":
+        return jnp.zeros(decl.shape, dtype)
+    if decl.init == "ones":
+        return jnp.ones(decl.shape, dtype)
+    if decl.init == "constant":
+        return jnp.full(decl.shape, decl.const, dtype)
+    if decl.init == "uniform":
+        return jax.random.uniform(key, decl.shape, dtype, -decl.scale, decl.scale)
+    # normal, fan-in scaled by default
+    fan_in = decl.shape[0] if len(decl.shape) == 1 else int(np.prod(decl.shape[:-1]))
+    # stacked layer dim must not count toward fan-in
+    if decl.logical and decl.logical[0] == "layers" and len(decl.shape) > 2:
+        fan_in = int(np.prod(decl.shape[1:-1]))
+    scale = decl.scale if decl.scale >= 0 else 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, decl.shape, jnp.float32) * scale).astype(dtype)
+
+
+def _path_hash(path) -> int:
+    s = jax.tree_util.keystr(path)
+    return int(np.uint32(abs(hash(s)) % (2**31 - 1)))
+
+
+def materialize(decl_tree, key):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, d: _materialize_leaf(p, d, key), decl_tree,
+        is_leaf=lambda x: is_decl(x))
+
+
+def shape_tree(decl_tree):
+    return jax.tree.map(lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype)),
+                        decl_tree, is_leaf=is_decl)
+
+
+def logical_tree(decl_tree):
+    return jax.tree.map(lambda d: tuple(d.logical), decl_tree, is_leaf=is_decl)
+
+
+# ---------------------------------------------------------------------------
+# Elementary ops
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, gamma, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * gamma.astype(dt)
+
+
+def swiglu(x, w_gate, w_in, w_out):
+    """SwiGLU MLP: silu(x @ w_gate) * (x @ w_in) @ w_out."""
+    h = jax.nn.silu(x @ w_gate) * (x @ w_in)
+    return h @ w_out
+
+
+def mlp_decls(d_model: int, d_ff: int) -> dict:
+    return {
+        "w_gate": ParamDecl((d_model, d_ff), ("embed", "mlp")),
+        "w_in": ParamDecl((d_model, d_ff), ("embed", "mlp")),
+        "w_out": ParamDecl((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def norm_decl(d_model: int) -> ParamDecl:
+    return ParamDecl((d_model,), (None,), init="ones")
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    half = head_dim // 2
+    return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    sin = jnp.sin(angles)[..., None, :]                       # (..., S, 1, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy(logits, labels, vocab_size: int):
+    """Stable CE with logits possibly vocab-sharded; fp32 reductions."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse - gold

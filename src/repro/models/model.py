@@ -1,0 +1,74 @@
+"""Model facade — the single public handle over the architecture zoo.
+
+Wraps config + parameter declarations + the three transformer entry points
+behind one object so launchers, tests, and the dry-run never touch
+architecture internals:
+
+    m = Model.from_name("yi-34b")          # or Model(cfg)
+    params = m.init(key)                    # materialized
+    specs  = m.param_specs()                # ShapeDtypeStructs (dry-run)
+    shard  = m.param_shardings(mesh)        # NamedShardings from logical axes
+    loss, metrics = m.loss(params, batch, ctx)
+    logits, caches = m.prefill(params, batch, ctx, cache_size=...)
+    logits, caches = m.decode(params, tokens, caches, cache_len, ctx)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+from repro.configs import base as cfgbase
+from repro.distributed import sharding
+from repro.models import transformer as T
+from repro.models.layers import logical_tree, materialize, shape_tree
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: cfgbase.ArchConfig
+
+    @staticmethod
+    def from_name(name: str, *, reduced: bool = False) -> "Model":
+        cfg = cfgbase.get_config(name)
+        return Model(cfg.reduced() if reduced else cfg)
+
+    # -- parameters ------------------------------------------------------
+    @property
+    def decls(self):
+        return T.model_decls(self.cfg)
+
+    def init(self, key):
+        return materialize(self.decls, key)
+
+    def param_specs(self):
+        return shape_tree(self.decls)
+
+    def param_logical(self):
+        return logical_tree(self.decls)
+
+    def param_shardings(self, mesh, rules=sharding.DEFAULT_RULES):
+        return sharding.tree_specs_checked(self.param_logical(),
+                                           self.param_specs(), mesh, rules)
+
+    def param_count(self) -> int:
+        return self.cfg.param_count()
+
+    # -- entry points ------------------------------------------------------
+    def loss(self, params, batch, ctx: T.Context):
+        return T.forward_train(params, self.cfg, batch, ctx)
+
+    def prefill(self, params, batch, ctx: T.Context, cache_size=None):
+        return T.forward_prefill(params, self.cfg, batch, ctx,
+                                 cache_size=cache_size)
+
+    def decode(self, params, tokens, caches, cache_len, ctx: T.Context):
+        return T.forward_decode(params, self.cfg, tokens, caches, cache_len,
+                                ctx)
+
+    # -- caches ------------------------------------------------------------
+    def cache_decls(self, batch: int, cache_size: int):
+        return T.cache_decls(self.cfg, batch, cache_size)
+
+    def input_specs(self, shape_name: str) -> dict:
+        return cfgbase.input_specs(self.cfg, shape_name)

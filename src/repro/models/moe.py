@@ -1,0 +1,155 @@
+"""Mixture-of-Experts with explicit expert parallelism (shard_map).
+
+Design (see DESIGN.md §5):
+  * experts are sharded over the ``model`` mesh axis (EP); expert FFN weights
+    are additionally FSDP-sharded over ``data`` and all-gathered on entry —
+    the gather is the FSDP "unshard" and XLA overlaps it across scan steps;
+  * activations are replicated over ``model`` on entry, so no token all_to_all
+    is required: each model shard selects the tokens routed to *its* experts
+    from the replicated token block, runs the expert FFN at static capacity,
+    scatters back, and a single psum over ``model`` combines routed AND
+    shared-expert partial outputs (one fused all-reduce per MoE layer, same
+    collective volume as a row-parallel TP MLP);
+  * token->expert assignment is sort-based (argsort of the routing mask) at a
+    static capacity C = ceil(T_local * top_k / E * capacity_factor); overflow
+    tokens are dropped (standard capacity-drop semantics) and the dropped
+    fraction is reported in aux.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import ParamDecl
+
+
+def moe_decls(cfg) -> dict:
+    d, E, f = cfg.d_model, cfg.num_experts, cfg.d_ff_expert
+    decls = {
+        "router": ParamDecl((d, E), (None, None), scale=0.02),
+        "w_gate": ParamDecl((E, d, f), ("expert", None, "expert_mlp")),
+        "w_in": ParamDecl((E, d, f), ("expert", None, "expert_mlp")),
+        "w_out": ParamDecl((E, f, d), ("expert", "expert_mlp", None)),
+    }
+    if cfg.num_shared_experts:
+        fs = cfg.num_shared_experts * f
+        decls.update({
+            "sh_gate": ParamDecl((d, fs), ("embed", "mlp")),
+            "sh_in": ParamDecl((d, fs), ("embed", "mlp")),
+            "sh_out": ParamDecl((fs, d), ("mlp", "embed")),
+        })
+    return decls
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _capacity(t_local: int, cfg) -> int:
+    c = int(t_local * cfg.moe_top_k / cfg.num_experts * cfg.capacity_factor)
+    return max(8, _round_up(c, 8))
+
+
+def moe_apply(params, x, cfg, mesh, data_axes: tuple, model_axis: str):
+    """x: (B, S, d) sharded over data_axes on B.  Returns (out, aux)."""
+    if mesh is None or model_axis is None:
+        out, aux = _moe_local(params["router"], params["w_gate"], params["w_in"],
+                              params["w_out"],
+                              params.get("sh_gate"), params.get("sh_in"),
+                              params.get("sh_out"), x, cfg=cfg, e0=0,
+                              n_model=1)
+        return out, {"lb_loss": aux[0], "drop_frac": aux[1]}
+
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh.shape[a]
+    n_model = mesh.shape[model_axis]
+    assert cfg.num_experts % n_model == 0, (cfg.num_experts, n_model)
+
+    bspec = P(data_axes if len(data_axes) > 1 else data_axes[0], None, None)
+    espec_in = P(model_axis, None, "data" if "data" in mesh.axis_names else None)
+    espec_out = P(model_axis, "data" if "data" in mesh.axis_names else None, None)
+    has_shared = cfg.num_shared_experts > 0
+    shspec_a = P(None, model_axis) if has_shared else P(None, None)
+    shspec_b = P(model_axis, None) if has_shared else P(None, None)
+
+    def fn(router, w_gate, w_in, w_out, sh_gate, sh_in, sh_out, xb):
+        # FSDP unshard of expert weights over 'data'
+        if "data" in mesh.axis_names:
+            w_gate = _regather(w_gate, "data", axis=2)
+            w_in = _regather(w_in, "data", axis=2)
+            w_out = _regather(w_out, "data", axis=1)
+        e0 = jax.lax.axis_index(model_axis) * (cfg.num_experts // n_model)
+        out, aux = _moe_local(router, w_gate, w_in, w_out, sh_gate, sh_in,
+                              sh_out, xb, cfg=cfg, e0=e0, n_model=n_model)
+        out = jax.lax.psum(out, model_axis)
+        return out, aux[None]  # (1, 2) per data shard
+
+    in_specs = (P(None, None), espec_in, espec_in, espec_out,
+                shspec_a, shspec_a, shspec_b, bspec)
+    out_specs = (bspec, P(data_axes if len(data_axes) > 1 else data_axes[0], None))
+    sh = (params["sh_gate"], params["sh_in"], params["sh_out"]) if has_shared \
+        else (_dummy(), _dummy(), _dummy())
+    out, aux = jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)(
+        params["router"], params["w_gate"], params["w_in"], params["w_out"],
+        *sh, x)
+    aux = aux.mean(0)
+    return out, {"lb_loss": aux[0], "drop_frac": aux[1]}
+
+
+def _dummy():
+    return jnp.zeros((1, 1), jnp.bfloat16)
+
+
+def _regather(w, axis_name, axis):
+    full = jax.lax.all_gather(w, axis_name, axis=axis, tiled=True)
+    return full
+
+
+def _moe_local(router, w_gate, w_in, w_out, sh_gate, sh_in, sh_out, xb, *,
+               cfg, e0, n_model):
+    """Per-shard MoE body.  xb: (B_loc, S, d) (token-replicated over model)."""
+    Bl, S, d = xb.shape
+    T = Bl * S
+    k = cfg.moe_top_k
+    E = cfg.num_experts
+    E_loc = E // n_model
+    C = _capacity(T, cfg)
+    dt = xb.dtype
+    xf = xb.reshape(T, d)
+
+    logits = (xf.astype(jnp.float32) @ router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # (T, E)
+    top_p, top_idx = jax.lax.top_k(probs, k)                    # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    def one_expert(le, wg, wi, wo):
+        eid = e0 + le
+        w_tok = jnp.where(top_idx == eid, top_p, 0.0).sum(-1)   # (T,)
+        m = w_tok > 0
+        order = jnp.argsort(~m)                                 # matched first, stable
+        ids = order[:C]
+        valid = m[ids]
+        xe = xf[ids] * valid[:, None].astype(dt)
+        h = jax.nn.silu(xe @ wg) * (xe @ wi)
+        h = h @ wo
+        h = h * (w_tok[ids] * valid).astype(dt)[:, None]
+        return ids, h, m.sum() - valid.sum()                    # dropped count
+
+    ids, hs, dropped = jax.vmap(one_expert)(
+        jnp.arange(E_loc), w_gate.astype(dt), w_in.astype(dt), w_out.astype(dt))
+    out = jnp.zeros((T, d), dt).at[ids.reshape(-1)].add(hs.reshape(-1, d))
+
+    if sh_gate is not None and sh_gate.shape[0] == d:
+        h = jax.nn.silu(xf @ sh_gate.astype(dt)) * (xf @ sh_in.astype(dt))
+        out = out + h @ sh_out.astype(dt)                       # partial over model
+
+    # aux: load-balance loss (Switch) + dropped fraction (local estimates)
+    density = jnp.zeros((E,)).at[top_idx.reshape(-1)].add(1.0) / (T * k)
+    lb = E * jnp.sum(density * probs.mean(0))
+    drop = dropped.sum() / jnp.maximum(T * k / n_model, 1.0)
+    return out.reshape(Bl, S, d), jnp.stack([lb, drop])

@@ -1,0 +1,398 @@
+"""Model assembly: scan-over-layers transformer supporting every assigned
+architecture family (dense / swa-global mix / moe / rwkv6 / mamba2-hybrid /
+vlm / audio-encoder) with three entry points:
+
+    forward_train   tokens -> logits           (also used by encoder archs)
+    forward_prefill tokens -> (logits, caches)
+    forward_decode  (token, caches, cache_len) -> (logits, caches)
+
+Layer stacks are built from ``cfg.stack()`` segments; each segment is a
+``lax.scan`` over ``repeat`` iterations whose body applies the segment's
+layer specs in order (keeps HLO size O(#segments), not O(#layers)).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cfgbase
+from repro.configs.base import ATTN, SWA, RWKV6, MAMBA2, SHARED_ATTN, DENSE, MOE, NONE
+from repro.distributed import sharding
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.layers import (ParamDecl, mlp_decls, norm_decl, rms_norm,
+                                 swiglu, cross_entropy)
+
+
+@dataclass(frozen=True)
+class Context:
+    mesh: Any = None
+    rules: sharding.ShardingRules = sharding.DEFAULT_RULES
+    remat: bool = True
+    # Unroll the layer scans (cost-accounting lowering: XLA's cost analysis
+    # counts while-loop bodies once, so the scanned form under-reports
+    # FLOPs/collectives by the trip count; the dry-run lowers both forms).
+    unroll: bool = False
+
+    def constrain(self, x, logical):
+        if self.mesh is None:
+            return x
+        spec = sharding.logical_to_spec(logical, self.mesh, self.rules)
+        # drop mesh axes that do not divide the dim
+        fixed = []
+        for dim, ax in zip(x.shape, spec):
+            if ax is None:
+                fixed.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in axes:
+                size *= self.mesh.shape[a]
+            fixed.append(ax if dim % size == 0 else None)
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, P(*fixed)))
+
+    @property
+    def data_axes(self):
+        if self.mesh is None:
+            return ("data",)
+        return sharding.data_axes(self.mesh)
+
+    @property
+    def model_axis(self):
+        if self.mesh is None:
+            return None
+        return sharding.model_axis(self.mesh)
+
+
+# ---------------------------------------------------------------------------
+# Declarations
+# ---------------------------------------------------------------------------
+
+def block_decls(cfg, spec) -> dict:
+    d = {"norm1": norm_decl(cfg.d_model)}
+    if spec.mixer == ATTN or spec.mixer == SWA:
+        d["mixer"] = attn.attn_decls(cfg)
+    elif spec.mixer == RWKV6:
+        d["mixer"] = ssm.rwkv6_decls(cfg)
+    elif spec.mixer == MAMBA2:
+        d["mixer"] = ssm.mamba2_decls(cfg)
+    elif spec.mixer == SHARED_ATTN:
+        pass  # weights shared, held outside the scan
+    else:
+        raise ValueError(spec.mixer)
+    if spec.mlp == DENSE:
+        d["norm2"] = norm_decl(cfg.d_model)
+        d["mlp"] = mlp_decls(cfg.d_model, _dense_ff(cfg))
+    elif spec.mlp == MOE:
+        d["norm2"] = norm_decl(cfg.d_model)
+        d["mlp"] = moe_mod.moe_decls(cfg)
+    elif spec.mlp == NONE and spec.mixer == RWKV6:
+        d["norm2"] = norm_decl(cfg.d_model)  # channel-mix prenorm
+    return d
+
+
+def _dense_ff(cfg) -> int:
+    if cfg.num_experts > 0 and cfg.first_k_dense > 0:
+        return cfg.d_ff_expert * 8  # deepseek-moe dense layer0 width
+    return cfg.d_ff
+
+
+def model_decls(cfg) -> dict:
+    from repro.models.layers import stack_decls
+    decls = {
+        "embed": ParamDecl((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                           scale=0.02),
+        "final_norm": norm_decl(cfg.d_model),
+        "segments": [],
+    }
+    for seg in cfg.stack():
+        body = {f"L{i}": block_decls(cfg, s) for i, s in enumerate(seg.layers)}
+        decls["segments"].append(stack_decls(seg.repeat, body))
+    if any(s.mixer == SHARED_ATTN for seg in cfg.stack() for s in seg.layers):
+        decls["shared_attn"] = {"norm": norm_decl(cfg.d_model),
+                                **attn.attn_decls(cfg)}
+    if cfg.frontend == "audio_stub":
+        decls["frontend"] = ParamDecl((cfg.frontend_dim, cfg.d_model),
+                                      ("frontend_in", "embed"))
+    return decls
+
+
+# ---------------------------------------------------------------------------
+# Cache declarations (dtype rides on ParamDecl so shape_tree/logical_tree work)
+# ---------------------------------------------------------------------------
+
+def _mixer_cache_decls(cfg, spec, B: int, cache_size: int):
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    H, K = cfg.num_heads, cfg.head_dim
+    if spec.mixer in (ATTN, SHARED_ATTN):
+        sh = (B, cache_size, KV, hd)
+        logical = ("batch", "kv_seq", None, None)
+        if cfg.kv_cache_dtype == "int8":
+            # int8 values + bf16 per-(token, head) absmax scales
+            return {"k": ParamDecl(sh, logical, dtype="int8"),
+                    "v": ParamDecl(sh, logical, dtype="int8"),
+                    "k_s": ParamDecl(sh[:3], logical[:3], dtype="bfloat16"),
+                    "v_s": ParamDecl(sh[:3], logical[:3], dtype="bfloat16")}
+        return {"k": ParamDecl(sh, logical, dtype="bfloat16"),
+                "v": ParamDecl(sh, logical, dtype="bfloat16")}
+    if spec.mixer == SWA:
+        W = min(cfg.swa_window, cache_size)
+        sh = (B, W, KV, hd)
+        return {"k": ParamDecl(sh, ("batch", "kv_seq", None, None), dtype="bfloat16"),
+                "v": ParamDecl(sh, ("batch", "kv_seq", None, None), dtype="bfloat16")}
+    if spec.mixer == RWKV6:
+        return {"shift_tm": ParamDecl((B, cfg.d_model), ("batch", None), dtype="bfloat16"),
+                "shift_cm": ParamDecl((B, cfg.d_model), ("batch", None), dtype="bfloat16"),
+                "wkv": ParamDecl((B, H, K, K), ("batch", "heads_act", None, None))}
+    if spec.mixer == MAMBA2:
+        d_in = cfg.ssm_expand * cfg.d_model
+        n = cfg.ssm_state
+        P_ = d_in // cfg.num_heads
+        taps = cfg.ssm_conv - 1
+        return {"conv_x": ParamDecl((B, taps, d_in), ("batch", None, "mlp_act"), dtype="bfloat16"),
+                "conv_b": ParamDecl((B, taps, n), ("batch", None, None), dtype="bfloat16"),
+                "conv_c": ParamDecl((B, taps, n), ("batch", None, None), dtype="bfloat16"),
+                "ssd": ParamDecl((B, cfg.num_heads, n, P_), ("batch", "heads_act", None, None))}
+    raise ValueError(spec.mixer)
+
+
+def cache_decls(cfg, B: int, cache_size: int) -> list:
+    from repro.models.layers import stack_decls
+    out = []
+    for seg in cfg.stack():
+        body = {f"L{i}": _mixer_cache_decls(cfg, s, B, cache_size)
+                for i, s in enumerate(seg.layers)}
+        out.append(stack_decls(seg.repeat, body))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+def _apply_mixer(spec, p, shared_p, x, cfg, ctx, positions, mode, cache, cache_len,
+                 cache_size=None):
+    """Returns (mixer_out, new_cache_for_this_mixer)."""
+    cons = ctx.constrain
+    if spec.mixer in (ATTN, SWA, SHARED_ATTN):
+        params = shared_p if spec.mixer == SHARED_ATTN else p["mixer"]
+        window = cfg.swa_window if spec.mixer == SWA else 0
+        if mode == "decode":
+            if spec.mixer == SWA:
+                return attn.attn_decode_apply_ring(params, x, cfg, cache,
+                                                   cache_len, cfg.swa_window,
+                                                   constrain=cons)
+            return attn.attn_decode_apply(params, x, cfg, cache, cache_len,
+                                          constrain=cons)
+        out, (k, v) = attn.attn_apply(params, x, cfg, positions=positions,
+                                      window=window, constrain=cons)
+        new_cache = None
+        if mode == "prefill":
+            S = k.shape[1]
+            cs = cache_size if cache_size else S
+            if spec.mixer == SWA:
+                # ring layout: slot of position p is p % W
+                W = min(cfg.swa_window, cs)
+                if S < W:
+                    k = jnp.pad(k, ((0, 0), (0, W - S), (0, 0), (0, 0)))
+                    v = jnp.pad(v, ((0, 0), (0, W - S), (0, 0), (0, 0)))
+                else:
+                    k = jnp.roll(k[:, -W:], S % W, axis=1)
+                    v = jnp.roll(v[:, -W:], S % W, axis=1)
+            elif cs > S:
+                k = jnp.pad(k, ((0, 0), (0, cs - S), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, cs - S), (0, 0), (0, 0)))
+            if cfg.kv_cache_dtype == "int8" and spec.mixer != SWA:
+                k_q, k_s = attn.quantize_kv(k)
+                v_q, v_s = attn.quantize_kv(v)
+                new_cache = {"k": k_q, "v": v_q, "k_s": k_s, "v_s": v_s}
+            else:
+                new_cache = {"k": k.astype(jnp.bfloat16),
+                             "v": v.astype(jnp.bfloat16)}
+        return out, new_cache
+    if spec.mixer == RWKV6:
+        st = cache if mode == "decode" else None
+        out, new_st = ssm.rwkv6_apply(p["mixer"], x, cfg, st, constrain=cons)
+        if mode == "decode":
+            new_st["shift_cm"] = cache["shift_cm"]  # updated by channel mix
+        return out, (new_st if mode != "train" else None)
+    if spec.mixer == MAMBA2:
+        st = cache if mode == "decode" else None
+        out, new_st = ssm.mamba2_apply(p["mixer"], x, cfg, st, constrain=cons)
+        return out, (new_st if mode != "train" else None)
+    raise ValueError(spec.mixer)
+
+
+def _apply_block(spec, p, shared_p, x, cfg, ctx, positions, mode, cache, cache_len,
+                 cache_size=None):
+    """Pre-norm residual block.  Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((2,), jnp.float32)  # (moe lb loss, drop frac)
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    mix, new_cache = _apply_mixer(spec, p, shared_p, h, cfg, ctx, positions,
+                                  mode, cache, cache_len, cache_size)
+    x = x + mix
+    x = ctx.constrain(x, ("batch", "seq", None))
+    if spec.mlp == DENSE:
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + swiglu(h, p["mlp"]["w_gate"].astype(x.dtype),
+                       p["mlp"]["w_in"].astype(x.dtype),
+                       p["mlp"]["w_out"].astype(x.dtype))
+    elif spec.mlp == MOE:
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        out, moe_aux = moe_mod.moe_apply(p["mlp"], h, cfg, ctx.mesh,
+                                         ctx.data_axes, ctx.model_axis)
+        x = x + out
+        aux = aux + jnp.stack([moe_aux["lb_loss"], moe_aux["drop_frac"]])
+    elif spec.mlp == NONE and spec.mixer == RWKV6:
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        st = cache if mode == "decode" else None
+        out, cm_state = ssm.rwkv6_channel_mix(p["mixer"], h, cfg, st)
+        x = x + out
+        if new_cache is not None:
+            new_cache["shift_cm"] = cm_state["shift_cm"]
+    x = ctx.constrain(x, ("batch", "seq", None))
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg, batch, ctx):
+    """Returns (x (B,S,d) bf16, positions (S,), labels-or-None)."""
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "audio_stub":
+        x = batch["frames"].astype(dt) @ params["frontend"].astype(dt)
+        S = x.shape[1]
+        return x, jnp.arange(S), batch.get("labels")
+    tok = batch["tokens"]
+    x = jnp.take(params["embed"], tok, axis=0).astype(dt)
+    labels = batch.get("labels")
+    if cfg.frontend == "vision_stub" and "vision_embeds" in batch:
+        v = batch["vision_embeds"].astype(dt)
+        x = jnp.concatenate([v, x], axis=1)
+        if labels is not None:  # don't train on image positions
+            pad = jnp.full(v.shape[:2], -1, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+    S = x.shape[1]
+    return x, jnp.arange(S), labels
+
+
+def _run_stack(params, cfg, x, positions, ctx, mode, caches=None, cache_len=None,
+               cache_size=None):
+    """Apply all segments.  Returns (x, new_caches (or None), aux_sum)."""
+    specs_per_seg = [seg.layers for seg in cfg.stack()]
+    shared_p = params.get("shared_attn")
+    aux_total = jnp.zeros((2,), jnp.float32)
+    new_caches = [] if mode != "train" else None
+
+    for si, (seg, specs) in enumerate(zip(cfg.stack(), specs_per_seg)):
+        seg_params = params["segments"][si]
+        seg_cache = caches[si] if caches is not None else None
+
+        def body(x, slice_in, _specs=specs):
+            p_sl, c_sl = slice_in
+            aux = jnp.zeros((2,), jnp.float32)
+            out_c = {}
+            for i, spec in enumerate(_specs):
+                li = f"L{i}"
+                x, nc, a = _apply_block(spec, p_sl[li], shared_p, x, cfg, ctx,
+                                        positions, mode,
+                                        None if c_sl is None else c_sl[li],
+                                        cache_len, cache_size)
+                if nc is not None:
+                    out_c[li] = nc
+                aux = aux + a
+            return x, (out_c if out_c else None, aux)
+
+        if ctx.remat and mode == "train":
+            body = jax.checkpoint(body)
+
+        if mode == "train":
+            xs = (seg_params, None)
+            x, (_, auxs) = _scan_seg(body, x, xs, seg.repeat, ctx.unroll)
+            aux_total = aux_total + auxs.sum(0)
+        elif mode == "prefill":
+            xs = (seg_params, None)
+            x, (cs, auxs) = _scan_seg(body, x, xs, seg.repeat, ctx.unroll)
+            new_caches.append(cs)
+            aux_total = aux_total + auxs.sum(0)
+        else:  # decode
+            xs = (seg_params, seg_cache)
+            x, (cs, auxs) = _scan_seg(body, x, xs, seg.repeat, ctx.unroll)
+            new_caches.append(cs)
+            aux_total = aux_total + auxs.sum(0)
+    return x, new_caches, aux_total
+
+
+def _scan_seg(body, x, xs, repeat, unroll=False):
+    def f(carry, sl):
+        return body(carry, sl)
+    if repeat == 1:
+        # avoid degenerate scan; apply directly on the unstacked slice
+        sl = jax.tree.map(lambda a: a[0], xs[0]) if xs[0] is not None else None
+        cl = jax.tree.map(lambda a: a[0], xs[1]) if xs[1] is not None else None
+        x, (c, aux) = body(x, (sl, cl))
+        c = jax.tree.map(lambda a: a[None], c) if c is not None else None
+        return x, (c, aux[None])
+    return jax.lax.scan(f, x, xs, length=repeat, unroll=repeat if unroll else 1)
+
+
+def forward_train(params, cfg, batch, ctx: Context):
+    """Returns (loss, metrics)."""
+    x, positions, labels = _embed_inputs(params, cfg, batch, ctx)
+    x, _, aux = _run_stack(params, cfg, x, positions, ctx, "train")
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    logits = ctx.constrain(logits, ("batch", "seq", "vocab_act"))
+    if cfg.causal:
+        shift_logits = logits[:, :-1]
+        shift_labels = labels[:, 1:]
+    else:
+        shift_logits, shift_labels = logits, labels
+    valid = shift_labels >= 0
+    ce = cross_entropy(shift_logits, jnp.maximum(shift_labels, 0), cfg.vocab_size)
+    loss = jnp.sum(ce * valid) / jnp.maximum(valid.sum(), 1)
+    lb_loss, drop = aux[0], aux[1]
+    total = loss + 0.01 * lb_loss
+    return total, {"ce_loss": loss, "lb_loss": lb_loss, "drop_frac": drop}
+
+
+def forward_encode(params, cfg, batch, ctx: Context):
+    """Encoder-only inference: full-sequence logits, no caches (used for
+    the prefill_32k cell of encoder archs like hubert-xlarge)."""
+    x, positions, _ = _embed_inputs(params, cfg, batch, ctx)
+    x, _, _ = _run_stack(params, cfg, x, positions, ctx, "train")
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    return ctx.constrain(logits, ("batch", "seq", "vocab_act"))
+
+
+def forward_prefill(params, cfg, batch, ctx: Context, cache_size=None):
+    """Returns (last_token_logits, caches).  cache_size reserves decode slots."""
+    x, positions, _ = _embed_inputs(params, cfg, batch, ctx)
+    x, caches, _ = _run_stack(params, cfg, x, positions, ctx, "prefill",
+                              cache_size=cache_size)
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    return logits, caches
+
+
+def forward_decode(params, cfg, tokens, caches, cache_len, ctx: Context):
+    """tokens: (B,1).  Returns (logits (B,1,V), new_caches)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    positions = None  # decode uses cache_len internally
+    x, caches, _ = _run_stack(params, cfg, x, positions, ctx, "decode",
+                              caches=caches, cache_len=cache_len)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    logits = ctx.constrain(logits, ("batch", "seq", "vocab_act"))
+    return logits, caches

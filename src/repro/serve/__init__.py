@@ -1,0 +1,4 @@
+from repro.serve.kv_cache import (init_caches, cache_specs,  # noqa: F401
+                                  cache_shardings, cache_nbytes)
+from repro.serve.serve_step import build_prefill_step, build_decode_step  # noqa: F401
+from repro.serve.engine import ServeEngine, Request  # noqa: F401

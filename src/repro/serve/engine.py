@@ -1,0 +1,132 @@
+"""Batched serving engine: request queue -> bucketed batches -> prefill ->
+decode loop -> responses.
+
+Requests with equal prompt length share a batch (log-analytics prompts are
+fixed-width, so bucketing is the natural fit); each batch prefills once and
+decodes synchronously until every member hits EOS or ``max_new_tokens``.
+Serving telemetry (latency records per request) is emitted as log-schema
+records so the FluxSieve ingestion path can enrich and store it — the
+paper's "recurrent dashboards over serving telemetry" loop (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.records import RecordBatch, encode_texts
+from repro.models.model import Model
+from repro.serve.serve_step import (build_decode_step, build_prefill_step,
+                                    greedy_sample)
+
+
+@dataclass
+class Request:
+    request_id: int
+    tokens: np.ndarray           # (S,) int32 prompt
+    max_new_tokens: int = 16
+
+
+@dataclass
+class Response:
+    request_id: int
+    tokens: np.ndarray           # generated ids
+    prefill_ms: float
+    decode_ms: float
+    new_tokens: int
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, batch_size: int = 8,
+                 max_cache: int = 512, eos_id: int = 2, mesh=None):
+        self.model = model
+        self.params = params
+        self.batch_size = batch_size
+        self.max_cache = max_cache
+        self.eos_id = eos_id
+        self._prefill = build_prefill_step(model, mesh, cache_size=max_cache)
+        self._decode = build_decode_step(model, mesh)
+        self._queues: dict = {}          # prompt_len -> list[Request]
+        self.telemetry: list = []        # log-schema dict rows
+
+    # -- intake ------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self._queues.setdefault(len(req.tokens), []).append(req)
+
+    def pending(self) -> int:
+        return sum(len(v) for v in self._queues.values())
+
+    # -- execution ---------------------------------------------------------
+    def run(self, *, flush: bool = True) -> list:
+        """Serve all full buckets (and stragglers when ``flush``)."""
+        out = []
+        for plen in sorted(self._queues):
+            q = self._queues[plen]
+            while len(q) >= self.batch_size or (flush and q):
+                batch, q = q[:self.batch_size], q[self.batch_size:]
+                self._queues[plen] = q
+                out.extend(self._serve_batch(batch, plen))
+        self._queues = {k: v for k, v in self._queues.items() if v}
+        return out
+
+    def _serve_batch(self, requests, plen: int) -> list:
+        B = len(requests)
+        pad = self.batch_size - B
+        toks = np.stack([r.tokens for r in requests] +
+                        [np.zeros(plen, np.int32)] * pad)
+        t0 = time.perf_counter()
+        logits, caches = self._prefill(self.params,
+                                       {"tokens": jnp.asarray(toks)})
+        next_tok = np.asarray(greedy_sample(logits))
+        t1 = time.perf_counter()
+        max_new = max(r.max_new_tokens for r in requests)
+        budget = min(max_new, self.max_cache - plen)
+        generated = [next_tok[:, 0]]
+        done = np.zeros(self.batch_size, bool)
+        cache_len = jnp.int32(plen)
+        cur = jnp.asarray(next_tok)
+        steps = 1
+        for i in range(budget - 1):
+            done |= np.asarray(cur)[:, 0] == self.eos_id
+            if done[:B].all():
+                break
+            logits, caches = self._decode(self.params, cur, caches,
+                                          cache_len + i)
+            cur = greedy_sample(logits)
+            generated.append(np.asarray(cur)[:, 0])
+            steps += 1
+        t2 = time.perf_counter()
+        gen = np.stack(generated, axis=1)       # (batch, steps)
+        responses = []
+        for j, r in enumerate(requests):
+            row = gen[j]
+            stop = np.flatnonzero(row == self.eos_id)
+            row = row[:stop[0]] if len(stop) else row
+            resp = Response(request_id=r.request_id, tokens=row,
+                            prefill_ms=(t1 - t0) * 1e3 / B,
+                            decode_ms=(t2 - t1) * 1e3 / B,
+                            new_tokens=len(row))
+            responses.append(resp)
+            self.telemetry.append({
+                "timestamp": int(time.time() * 1000),
+                "status": 0, "event_type": 1,
+                "content1": (f"serve request={r.request_id} arch={self.model.cfg.name} "
+                             f"prompt_len={plen} new_tokens={resp.new_tokens} "
+                             f"prefill_ms={resp.prefill_ms:.2f} "
+                             f"decode_ms={resp.decode_ms:.2f}"),
+            })
+        return responses
+
+    # -- telemetry -> log records (FluxSieve ingestion input) --------------
+    def telemetry_batch(self, width: int = 256) -> RecordBatch:
+        rows = self.telemetry
+        if not rows:
+            return RecordBatch({})
+        return RecordBatch({
+            "timestamp": np.asarray([r["timestamp"] for r in rows], np.int64),
+            "status": np.asarray([r["status"] for r in rows], np.int32),
+            "event_type": np.asarray([r["event_type"] for r in rows], np.int32),
+            "content1": encode_texts([r["content1"] for r in rows], width),
+        })

@@ -1,0 +1,62 @@
+"""KV/SSM cache construction + sharding.
+
+Cache layouts come from ``transformer.cache_decls`` (per-mixer: full KV,
+sliding-window ring, RWKV wkv state, Mamba SSD state).  The decode-time
+distribution shards the cache **sequence** dim over the ``model`` axis
+(logical ``kv_seq``), giving distributed flash-decode attention: each model
+shard scores its KV slice and the softmax combines via GSPMD-inserted
+collectives (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import sharding
+from repro.models.layers import is_decl, logical_tree, shape_tree
+from repro.models.model import Model
+
+
+def _decls(model: Model, batch: int, cache_size: int):
+    return model.cache_decls(batch, cache_size)
+
+
+def init_caches(model: Model, batch: int, cache_size: int, mesh=None,
+                rules=sharding.DEFAULT_RULES):
+    """Zero-initialized cache pytree (optionally sharded)."""
+    decls = _decls(model, batch, cache_size)
+    caches = jax.tree.map(
+        lambda d: jnp.zeros(d.shape, jnp.dtype(d.dtype)), decls,
+        is_leaf=is_decl)
+    if mesh is not None:
+        caches = jax.device_put(caches,
+                                cache_shardings(model, batch, cache_size,
+                                                mesh, rules))
+    return caches
+
+
+def cache_specs(model: Model, batch: int, cache_size: int, mesh=None,
+                rules=sharding.DEFAULT_RULES):
+    """ShapeDtypeStructs for the dry-run (no allocation).  With a mesh the
+    shardings ride on the structs so .lower() sees the production layout."""
+    specs = shape_tree(_decls(model, batch, cache_size))
+    if mesh is None:
+        return specs
+    sh = cache_shardings(model, batch, cache_size, mesh, rules)
+    return jax.tree.map(
+        lambda s, ns: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=ns),
+        specs, sh)
+
+
+def cache_shardings(model: Model, batch: int, cache_size: int, mesh,
+                    rules=sharding.DEFAULT_RULES):
+    decls = _decls(model, batch, cache_size)
+    return sharding.tree_specs_checked(logical_tree(decls),
+                                       shape_tree(decls), mesh, rules)
+
+
+def cache_nbytes(model: Model, batch: int, cache_size: int) -> int:
+    specs = shape_tree(_decls(model, batch, cache_size))
+    return sum(int(np.prod(s.shape)) * s.dtype.itemsize
+               for s in jax.tree.leaves(specs))

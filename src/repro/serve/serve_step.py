@@ -1,0 +1,70 @@
+"""serve_step construction: jitted prefill + decode with production
+shardings.  ``decode_32k``/``long_500k`` dry-run cells lower the decode step
+(one new token against a seq_len KV cache), exactly per the assignment.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding
+from repro.models import transformer as T
+from repro.models.model import Model
+from repro.serve import kv_cache
+
+
+def batch_sharding(mesh, rules=sharding.DEFAULT_RULES):
+    return NamedSharding(mesh,
+                         sharding.logical_to_spec(("batch", "seq"), mesh,
+                                                  rules))
+
+
+def build_prefill_step(model: Model, mesh=None,
+                       rules=sharding.DEFAULT_RULES, cache_size=None,
+                       unroll: bool = False):
+    """-> jitted prefill(params, batch) -> (last_logits, caches)."""
+    ctx = T.Context(mesh=mesh, rules=rules, remat=False, unroll=unroll)
+
+    def prefill(params, batch):
+        return model.prefill(params, batch, ctx, cache_size=cache_size)
+
+    if mesh is None:
+        return jax.jit(prefill)
+    p_sh = model.param_shardings(mesh, rules)
+    return jax.jit(prefill, in_shardings=(p_sh, None), out_shardings=None)
+
+
+def build_encode_step(model: Model, mesh=None, rules=sharding.DEFAULT_RULES,
+                      unroll: bool = False):
+    """Encoder-only archs: full-sequence forward, no caches."""
+    ctx = T.Context(mesh=mesh, rules=rules, remat=False, unroll=unroll)
+
+    def encode(params, batch):
+        return T.forward_encode(params, model.cfg, batch, ctx)
+
+    if mesh is None:
+        return jax.jit(encode)
+    p_sh = model.param_shardings(mesh, rules)
+    return jax.jit(encode, in_shardings=(p_sh, None))
+
+
+def build_decode_step(model: Model, mesh=None, rules=sharding.DEFAULT_RULES,
+                      donate: bool = True, unroll: bool = False):
+    """-> jitted decode(params, tokens, caches, cache_len)
+    -> (logits, new_caches).  Caches are donated (updated in place)."""
+    ctx = T.Context(mesh=mesh, rules=rules, remat=False, unroll=unroll)
+
+    def decode(params, tokens, caches, cache_len):
+        return model.decode(params, tokens, caches, cache_len, ctx)
+
+    if mesh is None:
+        return jax.jit(decode, donate_argnums=(2,) if donate else ())
+    p_sh = model.param_shardings(mesh, rules)
+    return jax.jit(decode, in_shardings=(p_sh, None, None, None),
+                   donate_argnums=(2,) if donate else ())
+
+
+def greedy_sample(logits) -> jnp.ndarray:
+    """(B, 1, V) -> (B, 1) argmax token ids."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,4 @@
+from repro.train.optimizer import OptimizerConfig, adamw_init, adamw_update, lr_at  # noqa: F401
+from repro.train.train_step import TrainStepConfig, build_train_step  # noqa: F401
+from repro.train.checkpoint import (save_checkpoint, restore_checkpoint,  # noqa: F401
+                                    latest_step, AsyncCheckpointer)

@@ -1,0 +1,154 @@
+"""Fault tolerance for 1000+-node posture: restart-from-checkpoint, elastic
+mesh selection, and straggler detection.
+
+``RestartManager`` wraps the training loop: on any step failure it restores
+the newest *valid* checkpoint (corrupt/partial ones are skipped by the
+integrity check) and replays.  ``ElasticMesh`` picks the best mesh for the
+devices that are actually healthy — a checkpoint taken on the full mesh
+restores onto the survivor mesh because leaves are saved unsharded
+(checkpoint.py).  ``StragglerMonitor`` keeps per-host EWMA step times and
+flags hosts slower than k x median — the hook a scheduler uses to evict and
+re-spawn (mitigation at the framework layer is restart-on-smaller-mesh).
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+
+import jax
+
+from repro.train import checkpoint as ckpt
+
+
+# ---------------------------------------------------------------------------
+# Elastic mesh selection
+# ---------------------------------------------------------------------------
+
+def largest_mesh_shape(n_devices: int, *, model_parallel: int,
+                       pods: int = 1) -> tuple:
+    """Largest (pod, data, model) grid that fits `n_devices` devices while
+    preserving the model-parallel degree (params must still fit)."""
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"{n_devices} devices cannot host model_parallel={model_parallel}")
+    per_pod = n_devices // pods
+    data = per_pod // model_parallel
+    if data < 1:
+        raise ValueError("not enough devices per pod for the model axis")
+    if pods > 1:
+        return (pods, data, model_parallel)
+    return (data, model_parallel)
+
+
+def make_elastic_mesh(devices, *, model_parallel: int, pods: int = 1):
+    """Build the largest valid mesh from the (possibly reduced) device set."""
+    shape = largest_mesh_shape(len(devices), model_parallel=model_parallel,
+                               pods=pods)
+    axes = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
+    n = math.prod(shape)
+    import numpy as np
+    dev_grid = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_grid, axes)
+
+
+# ---------------------------------------------------------------------------
+# Straggler detection
+# ---------------------------------------------------------------------------
+
+@dataclass
+class HostStats:
+    ewma_s: float = 0.0
+    samples: int = 0
+
+
+class StragglerMonitor:
+    """Per-host EWMA of step wall time; flags hosts > k x median EWMA."""
+
+    def __init__(self, *, alpha: float = 0.3, threshold: float = 1.5,
+                 min_samples: int = 3):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.min_samples = min_samples
+        self.hosts: dict = {}
+
+    def report(self, host: str, step_seconds: float) -> None:
+        st = self.hosts.setdefault(host, HostStats())
+        if st.samples == 0:
+            st.ewma_s = step_seconds
+        else:
+            st.ewma_s = (1 - self.alpha) * st.ewma_s + self.alpha * step_seconds
+        st.samples += 1
+
+    def stragglers(self) -> list:
+        ready = {h: s for h, s in self.hosts.items()
+                 if s.samples >= self.min_samples}
+        if len(ready) < 2:
+            return []
+        ewmas = sorted(s.ewma_s for s in ready.values())
+        median = ewmas[len(ewmas) // 2]
+        return sorted(h for h, s in ready.items()
+                      if s.ewma_s > self.threshold * median)
+
+
+# ---------------------------------------------------------------------------
+# Restart orchestration
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RunReport:
+    final_step: int
+    restarts: int
+    failures: list = field(default_factory=list)
+
+
+class RestartManager:
+    """Run a step function with checkpoint/restart semantics.
+
+    ``step_fn(state, step) -> state`` may raise; the manager restores the
+    newest valid checkpoint and resumes.  ``save_every`` controls the
+    checkpoint cadence; ``max_restarts`` bounds the retry budget."""
+
+    def __init__(self, ckpt_root, *, save_every: int = 10,
+                 max_restarts: int = 3, keep: int = 3):
+        self.root = ckpt_root
+        self.save_every = save_every
+        self.max_restarts = max_restarts
+        self.saver = ckpt.AsyncCheckpointer(ckpt_root, keep=keep)
+
+    def run(self, init_state, step_fn, num_steps: int, *,
+            state_like=None, shardings=None, meta: dict = None) -> tuple:
+        """-> (final state, RunReport)."""
+        report = RunReport(final_step=0, restarts=0)
+        state = init_state
+        like = state_like if state_like is not None else init_state
+        start = 0
+        restored = ckpt.latest_step(self.root)
+        if restored is not None:
+            state, m = ckpt.restore_checkpoint(self.root, restored, like,
+                                               shardings)
+            start = restored
+        step = start
+        while step < num_steps:
+            try:
+                state = step_fn(state, step)
+                step += 1
+                if step % self.save_every == 0 or step == num_steps:
+                    self.saver.save(step, state, {**(meta or {}),
+                                                  "step": step})
+            except Exception as e:  # noqa: BLE001 — any step failure
+                report.failures.append((step, f"{type(e).__name__}: {e}"))
+                if report.restarts >= self.max_restarts:
+                    raise
+                report.restarts += 1
+                self.saver.wait()
+                restored = ckpt.latest_step(self.root)
+                if restored is None:
+                    state, step = init_state, 0
+                else:
+                    state, _ = ckpt.restore_checkpoint(self.root, restored,
+                                                       like, shardings)
+                    step = restored
+        self.saver.wait()
+        report.final_step = step
+        return state, report

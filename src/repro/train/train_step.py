@@ -1,0 +1,169 @@
+"""Train-step construction: value_and_grad + microbatch accumulation +
+remat + optional compressed cross-pod gradient reduction, jitted with
+in/out shardings derived from the logical axis trees.
+
+Distribution posture (DESIGN.md §5):
+  * batch sharded over ``(pod, data)``;
+  * params FSDP-sharded over ``data`` (gathered per-layer inside the scan);
+  * TP/EP over ``model`` via logical rules + shard_map MoE;
+  * gradient reduction over ``pod`` is GSPMD's hierarchical all-reduce, or —
+    with ``grad_compression='int8'`` — an explicit error-feedback int8
+    psum inside a shard_map manual over the pod axis only (params are
+    pod-replicated, so their pod-manual view is P(); the batch splits its
+    leading dim over 'pod'; 'data'/'model' stay under GSPMD inside).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding
+from repro.models import transformer as T
+from repro.models.model import Model
+from repro.train import compression
+from repro.train.optimizer import OptimizerConfig, adamw_init, adamw_update
+
+_BATCH_LOGICAL = ("batch", "seq")
+
+
+@dataclass(frozen=True)
+class TrainStepConfig:
+    microbatches: int = 1
+    remat: bool = True
+    unroll: bool = False                # cost-accounting lowering (dry-run)
+    grad_compression: str = "none"      # none | int8
+    optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
+
+
+def batch_sharding(mesh, rules=sharding.DEFAULT_RULES):
+    return NamedSharding(mesh,
+                         sharding.logical_to_spec(_BATCH_LOGICAL, mesh, rules))
+
+
+def state_shardings(model: Model, ts_cfg: TrainStepConfig, mesh,
+                    rules=sharding.DEFAULT_RULES):
+    p_sh = model.param_shardings(mesh, rules)
+    rep = NamedSharding(mesh, P())
+    out = {"params": p_sh,
+           "opt": {"mu": p_sh, "nu": p_sh, "count": rep},
+           "step": rep}
+    if ts_cfg.grad_compression == "int8":
+        out["grad_err"] = p_sh
+    return out
+
+
+def init_state(model: Model, key, ts_cfg: TrainStepConfig, mesh=None,
+               rules=sharding.DEFAULT_RULES):
+    """Materialize params + optimizer state (host init; production restores
+    from a checkpoint — see train/checkpoint.py)."""
+    params = model.init(key)
+    opt = adamw_init(params)
+    state = {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}
+    if ts_cfg.grad_compression == "int8":
+        state["grad_err"] = compression.zeros_like_err(params)
+    if mesh is not None:
+        state = jax.device_put(state, state_shardings(model, ts_cfg, mesh,
+                                                      rules))
+    return state
+
+
+def _split_microbatches(batch, n):
+    return jax.tree.map(lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]),
+                        batch)
+
+
+def build_train_step(model: Model, ts_cfg: TrainStepConfig, mesh=None,
+                     rules=sharding.DEFAULT_RULES, donate: bool = True):
+    """-> jitted train_step(state, batch) -> (new_state, metrics)."""
+
+    def grads_of(params, batch, ctx):
+        def loss_fn(p, mb):
+            return model.loss(p, mb, ctx)
+
+        if ts_cfg.microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+        mbs = _split_microbatches(batch, ts_cfg.microbatches)
+
+        def acc_body(carry, mb):
+            g_acc, l_acc = carry
+            (loss, metrics), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            return (g_acc, l_acc + loss), metrics
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        n = ts_cfg.microbatches
+        if ts_cfg.unroll:
+            # cost-accounting lowering: python-unroll the accumulation so
+            # XLA's cost analysis sees every microbatch (see launch/dryrun)
+            carry = (g0, 0.0)
+            for i in range(n):
+                mb = jax.tree.map(lambda x: x[i], mbs)
+                carry, metrics = acc_body(carry, mb)
+            g_sum, l_sum = carry
+        else:
+            (g_sum, l_sum), ms = jax.lax.scan(acc_body, (g0, 0.0), mbs)
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+        grads = jax.tree.map(lambda g: g / n, g_sum)
+        return l_sum / n, metrics, grads
+
+    def apply_updates(state, loss, metrics, grads, new_err=None):
+        new_params, new_opt, opt_m = adamw_update(
+            ts_cfg.optimizer, grads, state["opt"], state["params"])
+        out = {"params": new_params, "opt": new_opt,
+               "step": state["step"] + 1}
+        if new_err is not None:
+            out["grad_err"] = new_err
+        return out, {**metrics, **opt_m, "loss": loss}
+
+    compressed = (ts_cfg.grad_compression == "int8" and mesh is not None
+                  and "pod" in mesh.axis_names)
+
+    if not compressed:
+        ctx = T.Context(mesh=mesh, rules=rules, remat=ts_cfg.remat,
+                        unroll=ts_cfg.unroll)
+
+        def train_step(state, batch):
+            loss, metrics, grads = grads_of(state["params"], batch, ctx)
+            return apply_updates(state, loss, metrics, grads)
+    else:
+        # inside the pod-manual region, 'pod' must not appear in constraints
+        inner_rules = rules.replace(batch=("data",))
+        ctx = T.Context(mesh=mesh, rules=inner_rules, remat=ts_cfg.remat,
+                        unroll=ts_cfg.unroll)
+        METRIC_KEYS = ("ce_loss", "lb_loss", "drop_frac")
+
+        def train_step(state, batch):
+            params, err = state["params"], state["grad_err"]
+            p_zero = jax.tree.map(lambda _: P(), params)
+            b_pod = jax.tree.map(lambda _: P("pod"), batch)
+            m_zero = {k: P() for k in METRIC_KEYS}
+
+            def pod_local(p, e, b):
+                loss, metrics, grads = grads_of(p, b, ctx)
+                grads, new_err = compression.compressed_psum(grads, "pod", e)
+                loss = jax.lax.pmean(loss, "pod")
+                metrics = {k: jax.lax.pmean(metrics[k], "pod")
+                           for k in METRIC_KEYS}
+                return loss, metrics, grads, new_err
+
+            loss, metrics, grads, new_err = jax.shard_map(
+                pod_local, mesh=mesh, axis_names={"pod"},
+                in_specs=(p_zero, p_zero, b_pod),
+                out_specs=(P(), m_zero, p_zero, p_zero),
+                check_vma=False)(params, err, batch)
+            return apply_updates(state, loss, metrics, grads, new_err)
+
+    if mesh is None:
+        return jax.jit(train_step, donate_argnums=(0,) if donate else ())
+    shardings = state_shardings(model, ts_cfg, mesh, rules)
+    return jax.jit(train_step,
+                   in_shardings=(shardings, None),
+                   out_shardings=(shardings, None),
+                   donate_argnums=(0,) if donate else ())

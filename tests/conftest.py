@@ -1,0 +1,27 @@
+import numpy as np
+import pytest
+
+from repro.core.patterns import Rule, RuleSet
+from repro.core.records import RecordBatch, encode_texts
+
+
+@pytest.fixture
+def small_ruleset() -> RuleSet:
+    return RuleSet((
+        Rule(0, "err", "ERROR", fields=("content1",)),
+        Rule(1, "panic", "panic|fatal", fields=("*",)),
+        Rule(2, "user", "usr[0-9]", fields=("content2",)),
+    ))
+
+
+@pytest.fixture
+def small_batch() -> RecordBatch:
+    return RecordBatch({
+        "timestamp": np.arange(6, dtype=np.int64),
+        "status": np.zeros(6, np.int32),
+        "content1": encode_texts([
+            "an ERROR occurred", "all good here", "panic in module a",
+            "quiet", "fatal usr3 problem", "usr5 normal"], 64),
+        "content2": encode_texts([
+            "x", "usr2 activity", "y", "calm trace", "z", "usr7 login"], 64),
+    })

@@ -1,0 +1,90 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.automaton import (CLASS_BUCKETS, CompiledEngine, compile_rules,
+                                  match_oracle, words_for_rules)
+from repro.core.patterns import Rule, RuleSet
+from repro.core.records import encode_texts
+
+word_st = st.text(alphabet="abcXYZ019 _", min_size=1, max_size=10)
+
+
+def _engine(patterns, **kw):
+    rs = RuleSet(tuple(Rule(i, f"r{i}", p) for i, p in enumerate(patterns)))
+    return rs, compile_rules(rs, **kw)
+
+
+def test_basic_match():
+    rs, eng = _engine(["ERROR", "fatal|panic", "usr[0-9]"])
+    data = encode_texts(["xx ERROR", "a panic", "usr7!", "none"], 32)
+    bm = match_oracle(eng, data)
+    assert bm[:, 0].tolist() == [1, 2, 4, 0]
+
+
+def test_overlapping_patterns():
+    rs, eng = _engine(["abc", "bcd", "c"])
+    bm = match_oracle(eng, encode_texts(["xabcdx"], 16))
+    assert bm[0, 0] == 0b111  # all three fire on one pass
+
+
+def test_word_bucket_stability():
+    # growing the rule set within a bucket keeps shapes identical
+    _, e1 = _engine(["a"])
+    _, e2 = _engine(["a", "b", "c"])
+    assert e1.emit.shape[1] == e2.emit.shape[1] == words_for_rules(3)
+    assert e1.delta.shape[0] == e2.delta.shape[0]       # state bucket
+    assert e1.delta.shape[1] in CLASS_BUCKETS
+
+
+def test_case_insensitive_routing():
+    rs, eng = _engine(["error"])
+    rs_ci = RuleSet((Rule(0, "e", "error", case_insensitive=True),))
+    eng_ci = compile_rules(rs_ci)
+    data = encode_texts(["big ERROR here"], 32)
+    assert match_oracle(eng, data)[0, 0] == 0
+    assert match_oracle(eng_ci, data)[0, 0] == 1
+
+
+def test_serialize_round_trip():
+    _, eng = _engine(["foo", "bar|baz"])
+    eng2 = CompiledEngine.deserialize(eng.serialize())
+    np.testing.assert_array_equal(eng.delta, eng2.delta)
+    np.testing.assert_array_equal(eng.emit, eng2.emit)
+    assert eng2.checksum() == eng.checksum()
+
+
+def test_corrupt_artifact_rejected():
+    _, eng = _engine(["foo"])
+    blob = bytearray(eng.serialize())
+    # flip bytes; either the npz container or the sha256 check must trip
+    for i in range(60, len(blob), 97):
+        blob[i] ^= 0xFF
+    with pytest.raises(ValueError):
+        CompiledEngine.deserialize(bytes(blob))
+
+
+@given(pats=st.lists(word_st, min_size=1, max_size=8, unique=True),
+       texts=st.lists(st.text(alphabet="abcXYZ019 _", max_size=40),
+                      min_size=1, max_size=8))
+@settings(max_examples=40, deadline=None)
+def test_oracle_matches_python_substring(pats, texts):
+    rs = RuleSet(tuple(Rule(i, f"r{i}", p) for i, p in enumerate(pats)))
+    eng = compile_rules(rs)
+    data = encode_texts(texts, 64)
+    bm = match_oracle(eng, data)
+    for ti, text in enumerate(texts):
+        raw = data[ti].tobytes().rstrip(b"\x00").decode()
+        for ri, p in enumerate(pats):
+            expect = p in raw
+            got = bool((bm[ti, ri // 32] >> np.uint32(ri % 32)) & 1)
+            assert got == expect, (p, text)
+
+
+def test_field_scoped_compile():
+    rs = RuleSet((Rule(0, "a", "xx", fields=("content1",)),
+                  Rule(1, "b", "yy", fields=("content2",))))
+    e1 = compile_rules(rs, "content1")
+    data = encode_texts(["xx yy"], 16)
+    bm = match_oracle(e1, data)
+    assert bm[0, 0] == 1  # only rule 0 lives in the content1 engine

@@ -1,0 +1,55 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import enrichment as E
+
+
+@given(st.integers(1, 200), st.integers(0, 2**32 - 1))
+@settings(max_examples=40, deadline=None)
+def test_bool_round_trip(num_rules, seed):
+    rng = np.random.default_rng(seed)
+    W = E.words_for_rules(num_rules)
+    bm = rng.integers(0, 2**32, size=(7, W), dtype=np.uint32)
+    # mask out bits beyond num_rules so round trip is exact
+    cols = E.to_bool_columns(bm, num_rules)
+    bm2 = E.from_bool_columns(cols)
+    np.testing.assert_array_equal(E.to_bool_columns(bm2, num_rules), cols)
+
+
+@given(st.integers(1, 100), st.integers(0, 2**32 - 1))
+@settings(max_examples=40, deadline=None)
+def test_sparse_round_trip(num_rules, seed):
+    rng = np.random.default_rng(seed)
+    W = E.words_for_rules(num_rules)
+    cols = rng.random((9, num_rules)) < 0.05
+    bm = E.from_bool_columns(cols)
+    ids = E.to_sparse_ids(bm, max_matches=num_rules)
+    bm2 = E.from_sparse_ids(ids, num_rules)
+    np.testing.assert_array_equal(bm, bm2)
+
+
+def test_rule_mask():
+    m = E.rule_mask([0, 33], 64)
+    assert m[0] == 1 and m[1] == 2
+    with pytest.raises(ValueError):
+        E.rule_mask([64], 64)
+
+
+def test_bitmap_get_and_popcount():
+    bm = E.from_bool_columns(np.asarray([[1, 0, 1], [0, 0, 0]], bool))
+    assert E.bitmap_get(bm, 0).tolist() == [True, False]
+    assert E.bitmap_get(bm, 2).tolist() == [True, False]
+    assert E.popcount(bm).tolist() == [2, 0]
+    assert E.any_match(bm).tolist() == [True, False]
+
+
+def test_storage_nbytes_ordering():
+    """Sparse < bitmap < bools under high selectivity (paper's rationale)."""
+    cols = np.zeros((1000, 1000), bool)
+    cols[::200, 3] = True
+    bm = E.from_bool_columns(cols)
+    s = E.storage_nbytes(bm, "sparse", 1000)
+    b = E.storage_nbytes(bm, "bitmap", 1000)
+    f = E.storage_nbytes(bm, "bools", 1000)
+    assert s < b < f

@@ -1,0 +1,97 @@
+import re
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.patterns import Rule, RuleSet
+
+literal_st = st.text(alphabet=st.characters(min_codepoint=33,
+                                            max_codepoint=126,
+                                            exclude_characters="|[].\\"),
+                     min_size=1, max_size=12)
+
+
+def test_rule_literals_alternation():
+    r = Rule(0, "alt", "foo|bar|baz")
+    assert set(r.literals()) == {"foo", "bar", "baz"}
+
+
+def test_rule_literals_class():
+    r = Rule(0, "cls", "usr[0-3]")
+    assert set(r.literals()) == {"usr0", "usr1", "usr2", "usr3"}
+
+
+def test_rule_literals_dot_and_nested():
+    r = Rule(0, "d", "a[bc]d")
+    assert set(r.literals()) == {"abd", "acd"}
+
+
+def test_rule_case_insensitive():
+    r = Rule(0, "ci", "Error", case_insensitive=True)
+    assert r.matches("AN ERROR HERE")
+    assert r.matches("an error here")
+
+
+def test_rule_validation():
+    with pytest.raises(ValueError):
+        Rule(0, "empty", "")
+    with pytest.raises(ValueError):
+        Rule(-1, "neg", "x")
+    with pytest.raises(ValueError):
+        Rule(0, "emptybranch", "a||b")
+    with pytest.raises(ValueError):
+        Rule(0, "wide", "[ -~][ -~]")  # 95^2 expansion > cap
+
+
+@given(lit=literal_st, hay=st.text(max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_rule_matches_agrees_with_python(lit, hay):
+    r = Rule(0, "p", lit)
+    assert r.matches(hay) == (lit in hay)
+
+
+def test_ruleset_duplicate_ids():
+    with pytest.raises(ValueError):
+        RuleSet((Rule(0, "a", "x"), Rule(0, "b", "y")))
+
+
+def test_ruleset_diff():
+    rs1 = RuleSet((Rule(0, "a", "x"), Rule(1, "b", "y")))
+    rs2 = RuleSet((Rule(0, "a", "x2"), Rule(2, "c", "z")))
+    d = rs1.diff(rs2)
+    assert [r.rule_id for r in d["added"]] == [2]
+    assert [r.rule_id for r in d["removed"]] == [1]
+    assert [r.rule_id for r in d["changed"]] == [0]
+
+
+def test_ruleset_diff_noop():
+    rs = RuleSet((Rule(0, "a", "x"),))
+    d = rs.diff(rs)
+    assert not (d["added"] or d["removed"] or d["changed"])
+
+
+def test_version_hash_stable_and_sensitive():
+    rs1 = RuleSet((Rule(0, "a", "x"), Rule(1, "b", "y")))
+    rs2 = RuleSet((Rule(1, "b", "y"), Rule(0, "a", "x")))  # order-insensitive
+    assert rs1.version_hash() == rs2.version_hash()
+    rs3 = rs1.with_rules([Rule(2, "c", "z")])
+    assert rs3.version_hash() != rs1.version_hash()
+
+
+def test_json_round_trip():
+    rs = RuleSet((Rule(0, "a", "x|y", fields=("content1",)),
+                  Rule(3, "b", "q", case_insensitive=True)))
+    rs2 = RuleSet.from_json(rs.to_json())
+    assert rs2 == rs
+
+
+def test_rules_for_field():
+    rs = RuleSet((Rule(0, "a", "x", fields=("content1",)),
+                  Rule(1, "b", "y", fields=("*",))))
+    assert [r.rule_id for r in rs.rules_for_field("content1")] == [0, 1]
+    assert [r.rule_id for r in rs.rules_for_field("content2")] == [1]
+
+
+def test_num_rules_uses_max_id():
+    rs = RuleSet((Rule(5, "a", "x"),))
+    assert rs.num_rules == 6

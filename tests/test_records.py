@@ -1,0 +1,49 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.records import RecordBatch, decode_texts, encode_texts
+
+
+def test_encode_decode_round_trip():
+    texts = ["hello world", "", "x" * 600, "unicode ✓ stripped"]
+    data = encode_texts(texts, 64)
+    assert data.shape == (4, 64)
+    out = decode_texts(data)
+    assert out[0] == "hello world"
+    assert out[1] == ""
+    assert out[2] == "x" * 64          # truncated to width
+
+
+@given(st.lists(st.text(alphabet=st.characters(min_codepoint=32,
+                                               max_codepoint=126),
+                        max_size=40), min_size=1, max_size=8))
+@settings(max_examples=40, deadline=None)
+def test_encode_decode_property(texts):
+    out = decode_texts(encode_texts(texts, 64))
+    for t, o in zip(texts, out):
+        assert o == t[:64].rstrip("\x00")
+
+
+def test_batch_invariants(small_batch):
+    assert len(small_batch) == 6
+    assert small_batch.text_fields == ("content1", "content2")
+    assert "timestamp" in small_batch.scalar_fields
+    with pytest.raises(ValueError):
+        RecordBatch({"a": np.zeros(3), "b": np.zeros(4)})
+
+
+def test_batch_select_slice_concat(small_batch):
+    sel = small_batch.select(np.asarray([0, 2]))
+    assert len(sel) == 2
+    sl = small_batch.slice(1, 4)
+    assert len(sl) == 3
+    cat = RecordBatch.concat([sel, sl])
+    assert len(cat) == 5
+    assert cat.columns["timestamp"].tolist() == [0, 2, 1, 2, 3]
+
+
+def test_with_column(small_batch):
+    b2 = small_batch.with_column("extra", np.ones(6, np.int32))
+    assert "extra" in b2.columns
+    assert "extra" not in small_batch.columns

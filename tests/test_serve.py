@@ -1,0 +1,138 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.model import Model
+from repro.serve import kv_cache
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.serve_step import (build_decode_step, build_encode_step,
+                                    build_prefill_step, greedy_sample)
+
+
+@pytest.fixture(scope="module")
+def served():
+    model = Model.from_name("yi-34b", reduced=True)
+    params = model.init(jax.random.key(0))
+    return model, params
+
+
+def test_prefill_decode_pipeline(served):
+    model, params = served
+    prefill = build_prefill_step(model, cache_size=32)
+    decode = build_decode_step(model, donate=False)
+    toks = jnp.asarray(np.random.default_rng(0).integers(3, 400, (2, 8)),
+                       dtype=jnp.int32)
+    logits, caches = prefill(params, {"tokens": toks})
+    assert logits.shape == (2, 1, model.cfg.vocab_size)
+    nxt = greedy_sample(logits)
+    logits2, caches = decode(params, nxt, caches, jnp.int32(8))
+    assert logits2.shape == (2, 1, model.cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+
+def test_greedy_deterministic(served):
+    model, params = served
+    eng1 = ServeEngine(model, params, batch_size=2, max_cache=48)
+    eng2 = ServeEngine(model, params, batch_size=2, max_cache=48)
+    prompt = np.arange(3, 3 + 12, dtype=np.int32)
+    for eng in (eng1, eng2):
+        eng.submit(Request(0, prompt, max_new_tokens=6))
+        eng.submit(Request(1, prompt, max_new_tokens=6))
+    r1 = {r.request_id: r.tokens.tolist() for r in eng1.run()}
+    r2 = {r.request_id: r.tokens.tolist() for r in eng2.run()}
+    assert r1 == r2
+    assert r1[0] == r1[1]                        # same prompt -> same output
+
+
+def test_bucketing_mixed_lengths(served):
+    model, params = served
+    eng = ServeEngine(model, params, batch_size=2, max_cache=64)
+    for i, L in enumerate((8, 8, 16, 16, 8)):
+        eng.submit(Request(i, np.arange(3, 3 + L, dtype=np.int32),
+                           max_new_tokens=4))
+    resp = eng.run()
+    assert len(resp) == 5
+    assert eng.pending() == 0
+    assert len(eng.telemetry) == 5
+
+
+def test_batch_padding_isolation(served):
+    """A padded slot (engine fills short batches) must not change results."""
+    model, params = served
+    prompt = np.arange(3, 3 + 10, dtype=np.int32)
+    eng_full = ServeEngine(model, params, batch_size=2, max_cache=32)
+    eng_full.submit(Request(0, prompt, max_new_tokens=4))
+    eng_full.submit(Request(1, prompt, max_new_tokens=4))
+    out_full = {r.request_id: r.tokens.tolist() for r in eng_full.run()}
+    eng_half = ServeEngine(model, params, batch_size=2, max_cache=32)
+    eng_half.submit(Request(0, prompt, max_new_tokens=4))
+    out_half = {r.request_id: r.tokens.tolist() for r in eng_half.run()}
+    assert out_half[0] == out_full[0]
+
+
+def test_encode_step_encoder_only():
+    model = Model.from_name("hubert-xlarge", reduced=True)
+    params = model.init(jax.random.key(0))
+    encode = build_encode_step(model)
+    frames = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (2, 16, model.cfg.frontend_dim)), jnp.bfloat16)
+    logits = encode(params, {"frames": frames})
+    assert logits.shape == (2, 16, model.cfg.vocab_size)
+
+
+def test_int8_kv_cache_matches_bf16():
+    """§Perf hillclimb C: quantized decode tracks the bf16 cache closely."""
+    import dataclasses
+    base = Model.from_name("yi-34b", reduced=True)
+    q8 = Model(dataclasses.replace(base.cfg, kv_cache_dtype="int8"))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(3, 400, (2, 12)), dtype=jnp.int32)
+    outs = {}
+    for model in (base, q8):
+        params = model.init(jax.random.key(0))      # same weights
+        prefill = build_prefill_step(model, cache_size=16)
+        decode = build_decode_step(model, donate=False)
+        logits, caches = prefill(params, {"tokens": toks[:, :10]})
+        for i in range(2):
+            logits, caches = decode(params, toks[:, 10 + i:11 + i], caches,
+                                    jnp.int32(10 + i))
+        outs[model.cfg.kv_cache_dtype] = np.asarray(logits, np.float32)
+    err = np.abs(outs["int8"] - outs["bfloat16"]).max()
+    assert err < 0.05, err
+    # and the cache footprint halves (+ small scale overhead)
+    b_bytes = kv_cache.cache_nbytes(base, 2, 16)
+    q_bytes = kv_cache.cache_nbytes(q8, 2, 16)
+    assert q_bytes < 0.56 * b_bytes
+
+
+def test_cache_specs_and_sizes():
+    model = Model.from_name("yi-34b", reduced=True)
+    specs = kv_cache.cache_specs(model, batch=2, cache_size=64)
+    leaves = jax.tree.leaves(specs)
+    assert all(isinstance(x, jax.ShapeDtypeStruct) for x in leaves)
+    nbytes = kv_cache.cache_nbytes(model, 2, 64)
+    assert nbytes == sum(int(np.prod(s.shape)) * s.dtype.itemsize
+                         for s in leaves)
+    caches = kv_cache.init_caches(model, 2, 64)
+    for s, c in zip(leaves, jax.tree.leaves(caches)):
+        assert s.shape == c.shape and s.dtype == c.dtype
+        assert float(jnp.abs(c).max()) == 0.0
+
+
+def test_telemetry_feeds_ingestion(served):
+    model, params = served
+    eng = ServeEngine(model, params, batch_size=2, max_cache=32)
+    eng.submit(Request(0, np.arange(3, 13, dtype=np.int32), max_new_tokens=3))
+    eng.run()
+    tb = eng.telemetry_batch()
+    assert len(tb) == 1
+    assert tb.text_fields == ("content1",)
+    from repro.core.matcher import compile_bundle
+    from repro.core.patterns import Rule, RuleSet
+    from repro.core.stream_processor import StreamProcessor
+    rs = RuleSet((Rule(0, "s", "serve request", fields=("content1",)),))
+    proc = StreamProcessor(compile_bundle(rs, ("content1",)))
+    out = proc.process(tb)
+    from repro.core import enrichment
+    assert enrichment.any_match(out.columns["rule_bitmap"]).all()

@@ -1,0 +1,76 @@
+import numpy as np
+import pytest
+
+from repro.core import enrichment
+from repro.core.matcher import EngineBundle, build_matchers, compile_bundle
+from repro.core.stream_processor import (ENGINE_VERSION_COLUMN,
+                                         ENRICH_COLUMN, StreamProcessor)
+
+
+@pytest.fixture
+def bundle(small_ruleset):
+    return compile_bundle(small_ruleset, fields=("content1", "content2"))
+
+
+def test_enrich_mode(bundle, small_batch):
+    proc = StreamProcessor(bundle)
+    out = proc.process(small_batch)
+    assert len(out) == len(small_batch)
+    bm = out.columns[ENRICH_COLUMN]
+    # rule 0 (ERROR @content1): record 0; rule 1 (panic|fatal @*): 2, 4;
+    # rule 2 (usr[0-9] @content2): 1, 5 — record 3 matches nothing
+    assert enrichment.bitmap_get(bm, 0).tolist() == [1, 0, 0, 0, 0, 0]
+    assert enrichment.bitmap_get(bm, 1).tolist() == [0, 0, 1, 0, 1, 0]
+    assert enrichment.bitmap_get(bm, 2).tolist() == [0, 1, 0, 0, 0, 1]
+    assert (out.columns[ENGINE_VERSION_COLUMN] == 0).all()
+
+
+def test_filter_mode(bundle, small_batch):
+    proc = StreamProcessor(bundle, mode="filter")
+    out = proc.process(small_batch)
+    assert len(out) == 5                      # record 3 ('quiet'/'calm') drops
+    assert out.columns["timestamp"].tolist() == [0, 1, 2, 4, 5]
+
+
+def test_field_scoping(bundle, small_batch):
+    """Rule 0 is content1-only: 'ERROR' in content2 must NOT fire it."""
+    batch = small_batch.with_column(
+        "content2", small_batch.columns["content1"])
+    proc = StreamProcessor(bundle)
+    bm = proc.process(batch).columns[ENRICH_COLUMN]
+    assert enrichment.bitmap_get(bm, 0).tolist() == [1, 0, 0, 0, 0, 0]
+
+
+def test_swap_without_retrace(bundle, small_ruleset, small_batch):
+    from repro.core.patterns import Rule
+    proc = StreamProcessor(bundle)
+    proc.process(small_batch)
+    rs2 = small_ruleset.with_rules([Rule(3, "quiet", "quiet",
+                                         fields=("content1",))])
+    proc.swap(compile_bundle(rs2, ("content1", "content2")))
+    out = proc.process(small_batch)
+    bm = out.columns[ENRICH_COLUMN]
+    assert enrichment.bitmap_get(bm, 3).tolist() == [0, 0, 0, 1, 0, 0]
+    assert proc.active_version_id == 1
+    assert (out.columns[ENGINE_VERSION_COLUMN] == 1).all()
+    assert proc.stats.swaps == 1
+
+
+def test_backends_agree(bundle, small_batch, small_ruleset):
+    outs = {}
+    for backend in ("dfa_ref", "dfa", "dfa_selective", "shift_or"):
+        # shift_or needs literal-only patterns <= 32B: our set qualifies
+        proc = StreamProcessor(bundle, backend=backend, block_n=8)
+        outs[backend] = np.asarray(
+            proc.process(small_batch).columns[ENRICH_COLUMN])
+    for backend in ("dfa", "dfa_selective", "shift_or"):
+        np.testing.assert_array_equal(outs["dfa_ref"], outs[backend])
+
+
+def test_stats(bundle, small_batch):
+    proc = StreamProcessor(bundle)
+    proc.process(small_batch)
+    proc.process(small_batch)
+    assert proc.stats.records_in == 12
+    assert proc.stats.batches == 2
+    assert proc.stats.records_matched == 10   # 5 matching records x 2 batches

@@ -1,0 +1,35 @@
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.records import encode_texts
+from repro.data import tokenizer
+
+
+def test_round_trip():
+    data = encode_texts(["hello", "log line 42"], 32)
+    toks = tokenizer.encode_bytes(data)
+    assert toks.shape == (2, 33)                 # +BOS
+    assert (toks[:, 0] == tokenizer.BOS).all()
+    out = tokenizer.decode_tokens(toks)
+    assert out == ["hello", "log line 42"]
+
+
+def test_pack_sequences_shapes_and_labels():
+    data = encode_texts(["abcdefgh" * 4] * 10, 64)
+    rows = tokenizer.encode_bytes(data)
+    tokens, labels = tokenizer.pack_sequences(rows, seq_len=16, batch=4)
+    assert tokens.shape == labels.shape == (4, 16)
+    # labels are the next-token shift of tokens within the packed stream
+    flat_t = tokens.reshape(-1)
+    flat_l = labels.reshape(-1)
+    np.testing.assert_array_equal(flat_l[:15], flat_t[1:16])
+
+
+@given(st.integers(1, 8), st.integers(4, 64))
+@settings(max_examples=20, deadline=None)
+def test_pack_sequences_always_fills(batch, seq_len):
+    data = encode_texts(["xy"], 8)               # tiny corpus tiles
+    rows = tokenizer.encode_bytes(data)
+    tokens, labels = tokenizer.pack_sequences(rows, seq_len, batch)
+    assert tokens.shape == (batch, seq_len)
+    assert (tokens != tokenizer.PAD).all()

@@ -1,0 +1,204 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.model import Model
+from repro.train import checkpoint as ckpt
+from repro.train.compression import compressed_psum, zeros_like_err
+from repro.train.fault_tolerance import (RestartManager, StragglerMonitor,
+                                         largest_mesh_shape)
+from repro.train.optimizer import (OptimizerConfig, adamw_init, adamw_update,
+                                   global_norm, lr_at)
+from repro.train.train_step import TrainStepConfig, build_train_step, init_state
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    model = Model.from_name("phi3-mini-3.8b", reduced=True)
+    ts = TrainStepConfig(optimizer=OptimizerConfig(
+        lr=1e-3, warmup_steps=2, total_steps=50))
+    state = init_state(model, jax.random.key(0), ts)
+    return model, ts, state
+
+
+def _batch(B=4, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    t = rng.integers(3, 500, (B, S)).astype(np.int32)
+    return {"tokens": jnp.asarray(t), "labels": jnp.asarray(t)}
+
+
+def test_lr_schedule():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_frac=0.1)
+    assert float(lr_at(cfg, 0)) == 0.0
+    assert float(lr_at(cfg, 10)) == pytest.approx(1.0, abs=1e-6)
+    assert float(lr_at(cfg, 100)) == pytest.approx(0.1, abs=1e-6)
+    assert float(lr_at(cfg, 55)) == pytest.approx(0.55, abs=0.01)
+
+
+def test_adamw_moves_params():
+    params = {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}
+    st = adamw_init(params)
+    grads = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+    cfg = OptimizerConfig(lr=0.1, warmup_steps=0, total_steps=10)
+    p2, st2, m = adamw_update(cfg, grads, st, params)
+    assert float(jnp.abs(p2["w"] - params["w"]).max()) > 0
+    assert int(st2["count"]) == 1
+    assert float(m["grad_norm"]) == pytest.approx(
+        float(global_norm(grads)), rel=1e-5)
+
+
+def test_loss_decreases(tiny):
+    model, ts, state0 = tiny
+    step = build_train_step(model, ts, donate=False)
+    state = state0
+    batch = _batch()
+    losses = []
+    for _ in range(5):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_microbatch_equivalence():
+    """Grad accumulation over 4 microbatches == single big batch (f32
+    activations so the comparison is not dominated by bf16 noise)."""
+    import dataclasses
+    cfg = Model.from_name("phi3-mini-3.8b", reduced=True).cfg
+    model = Model(dataclasses.replace(cfg, dtype="float32"))
+    batch = _batch(B=8, S=16)
+    outs = {}
+    for n in (1, 4):
+        ts = TrainStepConfig(microbatches=n, optimizer=OptimizerConfig(
+            lr=1e-2, warmup_steps=0, total_steps=10))
+        state = init_state(model, jax.random.key(0), ts)
+        step = build_train_step(model, ts, donate=False)
+        new_state, m = step(state, batch)
+        outs[n] = (new_state["params"], float(m["grad_norm"]))
+    assert outs[1][1] == pytest.approx(outs[4][1], rel=1e-4)
+    # Adam normalizes by sqrt(v), amplifying float-associativity noise where
+    # v ~ 0 — require near-exact agreement for 99.99% of elements and bound
+    # the stragglers by one optimizer step (lr).
+    for a, b in zip(jax.tree.leaves(outs[1][0]), jax.tree.leaves(outs[4][0])):
+        a, b = np.asarray(a), np.asarray(b)
+        close = np.isclose(a, b, rtol=1e-3, atol=1e-5)
+        assert close.mean() > 0.9999, close.mean()
+        np.testing.assert_allclose(a, b, atol=2.5e-2)  # <= one lr step
+
+
+def test_remat_equivalence():
+    model = Model.from_name("phi3-mini-3.8b", reduced=True)
+    batch = _batch(B=2, S=16)
+    outs = {}
+    for remat in (True, False):
+        ts = TrainStepConfig(remat=remat, optimizer=OptimizerConfig(
+            lr=1e-2, warmup_steps=0, total_steps=10))
+        state = init_state(model, jax.random.key(0), ts)
+        step = build_train_step(model, ts, donate=False)
+        _, metrics = step(state, batch)
+        outs[remat] = float(metrics["loss"])
+    assert outs[True] == pytest.approx(outs[False], rel=1e-5)
+
+
+def test_compression_error_feedback():
+    """int8 psum with error feedback: quantization residual is carried, so
+    the running sum converges to the true sum (bias-free)."""
+    mesh = jax.make_mesh((1,), ("pod",), devices=jax.devices()[:1])
+    g = {"w": jnp.asarray(np.random.default_rng(0).standard_normal((64, 64)),
+                          jnp.float32) * 1e-3}
+    err = zeros_like_err(g)
+    from functools import partial
+    from jax.sharding import PartitionSpec as P
+
+    @partial(jax.shard_map, mesh=mesh, in_specs=(P(), P()),
+             out_specs=(P(), P()), axis_names={"pod"}, check_vma=False)
+    def run(gg, ee):
+        return compressed_psum(gg, "pod", ee)
+
+    total = jnp.zeros_like(g["w"])
+    acc_true = jnp.zeros_like(g["w"])
+    for i in range(20):
+        out, err = run(g, err)
+        total = total + out["w"]
+        acc_true = acc_true + g["w"]
+    # cumulative compressed sum tracks the true sum within quantization noise
+    denom = float(jnp.abs(acc_true).max())
+    rel = float(jnp.abs(total - acc_true).max()) / denom
+    assert rel < 0.01, rel
+
+
+def test_checkpoint_async_and_prune(tmp_path, tiny):
+    model, ts, state = tiny
+    saver = ckpt.AsyncCheckpointer(tmp_path, keep=2)
+    for s in (1, 2, 3):
+        saver.save(s, state, {"s": s})
+    saver.wait()
+    assert ckpt.list_steps(tmp_path) == [2, 3]
+    restored, meta = ckpt.restore_checkpoint(tmp_path, 3, state)
+    assert meta["s"] == 3
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restart_manager_survives_failures(tmp_path, tiny):
+    model, ts, state0 = tiny
+    step_fn_inner = build_train_step(model, ts, donate=False)
+    batch = _batch()
+    fail_at = {7}
+
+    def step_fn(state, step):
+        if step in fail_at:
+            fail_at.discard(step)                # fail once, then succeed
+            raise RuntimeError("injected node failure")
+        state, _ = step_fn_inner(state, batch)
+        return state
+
+    mgr = RestartManager(tmp_path, save_every=2, max_restarts=2)
+    final, report = mgr.run(state0, step_fn, num_steps=10)
+    assert report.final_step == 10
+    assert report.restarts == 1
+    assert int(final["step"]) == 10
+    assert len(report.failures) == 1
+
+
+def test_restart_manager_gives_up(tmp_path, tiny):
+    model, ts, state0 = tiny
+
+    def always_fail(state, step):
+        raise RuntimeError("dead node")
+
+    mgr = RestartManager(tmp_path, save_every=2, max_restarts=1)
+    with pytest.raises(RuntimeError):
+        mgr.run(state0, always_fail, num_steps=5)
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(threshold=1.5, min_samples=2)
+    for _ in range(4):
+        for h in ("h0", "h1", "h2", "h3"):
+            mon.report(h, 1.0)
+        mon.report("slow", 3.0)
+    assert mon.stragglers() == ["slow"]
+
+
+def test_elastic_mesh_shapes():
+    assert largest_mesh_shape(256, model_parallel=16) == (16, 16)
+    assert largest_mesh_shape(192, model_parallel=16) == (12, 16)
+    assert largest_mesh_shape(512, model_parallel=16, pods=2) == (2, 16, 16)
+    assert largest_mesh_shape(480, model_parallel=16, pods=2) == (2, 15, 16)
+    with pytest.raises(ValueError):
+        largest_mesh_shape(8, model_parallel=16)
+
+
+def test_elastic_restore_across_meshes(tmp_path, tiny):
+    """Checkpoint saved unsharded restores under different shardings."""
+    model, ts, state = tiny
+    ckpt.save_checkpoint(tmp_path, 1, state)
+    from repro.launch.mesh import make_smoke_mesh
+    mesh = make_smoke_mesh((1, 1), ("data", "model"))
+    from repro.train.train_step import state_shardings
+    sh = state_shardings(model, ts, mesh)
+    restored, _ = ckpt.restore_checkpoint(tmp_path, 1, state, sh)
+    leaf = jax.tree.leaves(restored)[0]
+    assert leaf.sharding.mesh.shape == {"data": 1, "model": 1}

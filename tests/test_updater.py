@@ -1,0 +1,128 @@
+"""Update-protocol tests: delta -> compile -> upload -> notify -> fetch ->
+validate -> swap -> ack (paper §3.4.2 steps 1-6), plus rollback and the
+failure paths (corrupt artifact, missing instance)."""
+import numpy as np
+import pytest
+
+from repro.core.control_plane import ControlBus, MATCHER_UPDATES
+from repro.core.matcher import compile_bundle
+from repro.core.object_store import IntegrityError, ObjectStore
+from repro.core.patterns import Rule, RuleSet
+from repro.core.stream_processor import StreamProcessor
+from repro.core.updater import ENGINE_KEY, MatcherUpdater
+
+
+@pytest.fixture
+def world(small_ruleset):
+    store, bus = ObjectStore(), ControlBus()
+    bundle = compile_bundle(small_ruleset, ("content1", "content2"))
+    procs = [StreamProcessor(bundle, instance_id=f"proc-{i}", bus=bus,
+                             store=store) for i in range(3)]
+    upd = MatcherUpdater(store, bus, ("content1", "content2"),
+                         initial=small_ruleset)
+    return store, bus, procs, upd
+
+
+def test_full_rollout(world, small_ruleset):
+    store, bus, procs, upd = world
+    rs2 = small_ruleset.with_rules([Rule(3, "new", "needle")])
+    h = upd.submit(rs2)
+    assert h.wait(10) and h.published, h.error
+    for p in procs:
+        assert p.poll_updates() == 1
+    status = upd.await_rollout(h.version, [p.instance_id for p in procs],
+                               timeout=5)
+    assert status.complete
+    assert all(p.num_rules == 4 for p in procs)
+    assert all(p.active_version == rs2.version_hash() for p in procs)
+
+
+def test_noop_delta(world, small_ruleset):
+    _, _, _, upd = world
+    h = upd.submit(small_ruleset)
+    assert h.wait(5)
+    assert "no-op" in h.error
+
+
+def test_missing_instance_detected(world, small_ruleset):
+    _, _, procs, upd = world
+    rs2 = small_ruleset.with_rules([Rule(3, "new", "needle")])
+    h = upd.submit(rs2)
+    h.wait(10)
+    procs[0].poll_updates()                      # only one instance fetches
+    status = upd.await_rollout(h.version, ["proc-0", "proc-1", "proc-2"],
+                               timeout=0.3)
+    assert not status.complete
+    assert status.acked == ("proc-0",)
+    assert set(status.missing) == {"proc-1", "proc-2"}
+
+
+def test_corrupt_artifact_nacked(world, small_ruleset):
+    store, bus, procs, upd = world
+    rs2 = small_ruleset.with_rules([Rule(3, "new", "needle")])
+    h = upd.submit(rs2)
+    h.wait(10)
+    # tamper with the stored artifact AFTER upload
+    key = (ENGINE_KEY, h.ref.version)
+    data, meta = store._mem[key]
+    store._mem[key] = (data[:-40] + b"x" * 40, meta)
+    procs[0].poll_updates()
+    status = upd.await_rollout(h.version, ["proc-0"], timeout=0.5)
+    assert not status.complete
+    assert "proc-0" in status.failed
+    # processor keeps serving on the old engine
+    assert procs[0].num_rules == 3
+
+
+def test_rollback(world, small_ruleset):
+    _, _, procs, upd = world
+    rs2 = small_ruleset.with_rules([Rule(3, "new", "needle")])
+    rs3 = rs2.with_rules([Rule(4, "newer", "pin")])
+    for rs in (rs2, rs3):
+        h = upd.submit(rs)
+        h.wait(10)
+        for p in procs:
+            p.poll_updates()
+    assert all(p.num_rules == 5 for p in procs)
+    rb = upd.rollback()
+    assert rb.published, rb.error
+    for p in procs:
+        p.poll_updates()
+    assert all(p.num_rules == 4 for p in procs)
+    assert upd.current_version == rs2.version_hash()
+
+
+def test_object_store_versioning_and_integrity():
+    store = ObjectStore()
+    r1 = store.put("k", b"v1")
+    r2 = store.put("k", b"v2")
+    assert (r1.version, r2.version) == (1, 2)
+    assert store.get(r1) == b"v1"                # old versions immutable
+    data, latest = store.get_latest("k")
+    assert data == b"v2" and latest.version == 2
+    bad = type(r1)(key="k", version=1, sha256="0" * 64, size=2)
+    with pytest.raises(IntegrityError):
+        store.get(bad)
+    assert store.expire_versions("k", keep_latest=1) == 1
+    assert store.list_versions("k") == [2]
+
+
+def test_object_store_on_disk(tmp_path):
+    store = ObjectStore(tmp_path)
+    ref = store.put("engines/matcher", b"payload")
+    store2 = ObjectStore(tmp_path)               # new process view
+    assert store2.get(ref) == b"payload"
+
+
+def test_control_bus_at_least_once():
+    bus = ControlBus()
+    bus.publish(MATCHER_UPDATES, {"v": 1})
+    bus.publish(MATCHER_UPDATES, {"v": 2})
+    msgs = bus.poll(MATCHER_UPDATES, "g1")
+    assert [m.value["v"] for m in msgs] == [1, 2]
+    # not committed -> redelivered
+    assert len(bus.poll(MATCHER_UPDATES, "g1")) == 2
+    bus.commit(MATCHER_UPDATES, "g1", msgs[0].offset)
+    assert [m.value["v"] for m in bus.poll(MATCHER_UPDATES, "g1")] == [2]
+    # independent groups
+    assert len(bus.poll(MATCHER_UPDATES, "g2")) == 2
