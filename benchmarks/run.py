@@ -19,9 +19,9 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_layout_grid, bench_matcher, bench_overhead,
-                            bench_scale, bench_speedup, bench_storage,
-                            bench_update)
+    from benchmarks import (bench_backfill, bench_layout_grid, bench_matcher,
+                            bench_overhead, bench_scale, bench_speedup,
+                            bench_storage, bench_update)
     from benchmarks.common import print_rows
 
     suite = {
@@ -44,6 +44,10 @@ def main(argv=None) -> int:
             runs=3 if args.quick else 5),
         "speedup_high": lambda: bench_speedup.run(
             "high", num_records=40_000 if args.quick else 150_000,
+            runs=3 if args.quick else 5),
+        "backfill": lambda: bench_backfill.run(
+            num_records=20_000 if args.quick else 60_000,
+            segment_size=2_000 if args.quick else 5_000,
             runs=3 if args.quick else 5),
     }
     failures = 0

@@ -13,6 +13,11 @@ from dataclasses import dataclass, field
 
 MATCHER_UPDATES = "matcher-updates"
 MATCHER_ACKS = "matcher-acks"
+# maintenance plane: engine updates fan out to backfill workers on their own
+# topic (independent consumer-group offsets from the stream processors), and
+# workers ack once historical segments are re-enriched for a version
+SEGMENT_MAINTENANCE = "segment-maintenance"
+MAINTENANCE_ACKS = "maintenance-acks"
 
 
 @dataclass(frozen=True)

@@ -1,0 +1,21 @@
+"""Segment maintenance plane — background upkeep of the analytical plane.
+
+Three cooperating pieces, all off the ingest path:
+
+  * :class:`BackfillWorker` — retroactive re-enrichment: matches newly
+    activated rules against historical (sealed) segments so the fluxsieve
+    fast path stops falling back to full scans on pre-rule data;
+  * :class:`Compactor` — merges small sealed segments into right-sized
+    ones, re-deriving zone maps and indexes;
+  * :class:`MaintenanceScheduler` — orders work by profiler-observed query
+    heat and enforces a bytes/records budget per cycle.
+"""
+from repro.core.maintenance.backfill import BackfillReport, BackfillWorker
+from repro.core.maintenance.compactor import CompactionReport, Compactor
+from repro.core.maintenance.scheduler import (MaintenancePolicy,
+                                              MaintenanceScheduler)
+
+__all__ = [
+    "BackfillReport", "BackfillWorker", "CompactionReport", "Compactor",
+    "MaintenancePolicy", "MaintenanceScheduler",
+]

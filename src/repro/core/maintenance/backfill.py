@@ -1,0 +1,370 @@
+"""BackfillWorker — retroactive re-enrichment of sealed segments.
+
+FluxSieve's consistency rule (paper §3.4 step 4) makes enrichment safe but
+pessimistic: a segment sealed before a rule activated serves that rule via
+full scan forever.  The backfill worker closes the gap off the ingest path
+(Shared Arrangements' shared index maintenance / Fluid ETL's incremental
+backfill, applied to the enrichment column):
+
+  1. it consumes engine-update notifications on its OWN control-bus topic
+     (``SEGMENT_MAINTENANCE``) with its own consumer-group offsets, fetching
+     and validating the compiled artifact exactly like a stream processor;
+  2. per sealed segment it diffs the activated ruleset against the segment's
+     ``rule_idents`` (rule *content* identities, so changed patterns are
+     re-matched, not trusted) and matches only the **delta** rules against
+     the segment's text columns, reusing the compiled-matcher stack;
+  3. it atomically rewrites the segment's ``rule_bitmap`` column plus every
+     derived artifact — ``rule_bitmap_any`` zone map, ``rule_counts``, rule
+     postings, ``rules_known`` — via ``Segment.apply_update``, so concurrent
+     queries see either the fully-old or fully-new enrichment;
+  4. once no sealed segment lags the active version it publishes an ack on
+     ``MAINTENANCE_ACKS`` (the updater's ``await_maintenance`` watches it).
+
+Invariant: a query result is byte-identical whether a segment is served via
+backfilled bitmap, postings, metadata counts, or full-scan fallback.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.automaton import words_for_rules
+from repro.core.control_plane import (ControlBus, MAINTENANCE_ACKS,
+                                      SEGMENT_MAINTENANCE)
+from repro.core.enrichment import rule_mask
+from repro.core.matcher import EngineBundle, build_matchers, compile_bundle
+from repro.core.object_store import ObjectRef, ObjectStore
+from repro.core.patterns import RuleSet, ruleset_idents
+from repro.core.query.store import (SegmentStore, derive_enrichment_meta,
+                                    pack_known_bitmap)
+from repro.core.stream_processor import ENRICH_COLUMN
+
+
+@dataclass(frozen=True)
+class _Target:
+    """Latest activated ruleset the store should converge to."""
+    version: str
+    ruleset: RuleSet
+    idents: dict            # str(rule_id) -> content identity
+
+
+@dataclass
+class BackfillReport:
+    version: str = ""
+    messages: int = 0
+    segments_backfilled: int = 0
+    segments_skipped: int = 0   # sealed w/o enrichment column (gauge): can
+                                # never converge, served by scan paths only
+    segments_failed: int = 0    # raised during backfill; retried next cycle
+    errors: list = field(default_factory=list)   # (segment_id, error) pairs
+    records: int = 0
+    bytes_rewritten: int = 0
+    seconds: float = 0.0
+    pending_after: int = 0
+    acked: bool = False
+
+
+class BackfillWorker:
+    """One maintenance-plane worker (``run_cycle`` is its poll loop body)."""
+
+    def __init__(self, store: SegmentStore, bus: ControlBus,
+                 object_store: ObjectStore, *, worker_id: str = "maint-0",
+                 scheduler=None, backend: str = "dfa_ref",
+                 block_n: int = 256, interpret: bool = True):
+        self.store = store
+        self.bus = bus
+        self.object_store = object_store
+        self.worker_id = worker_id
+        self.scheduler = scheduler
+        self.backend = backend
+        self.block_n = block_n
+        self.interpret = interpret
+        self._target: _Target = None
+        # each installed target owes exactly one convergence ack — keyed on
+        # installation, not version string, so rolling BACK to a previously
+        # acked version still acks once re-converged
+        self._ack_pending = False
+        self._nacked: set = set()       # offsets already nacked (no spam)
+        self._seen_upto = 0             # poll high-water mark (retries are
+                                        # not "new" messages to callers)
+        self._failed_ids: set = set()   # segments whose last backfill raised
+                                        # (deprioritized, retried when idle)
+        # incremental pending tracking (single maintenance writer): a full
+        # O(segments x rules) ident rescan happens only on target change;
+        # steady-state cycles diff just the newly sealed segments
+        self._pending_ids: set = None   # None = needs full rescan
+        self._scanned_upto = 0          # segment-id high-water mark
+        self._matchers: dict = {}       # (version, delta ids, fields) -> dict
+
+    # -- control topology --------------------------------------------------
+    def poll_target(self) -> int:
+        """Consume engine-update notifications; keep the newest valid target.
+
+        Each notification supersedes the last — backfill converges to the
+        latest ruleset, intermediate versions need no historical pass — so
+        the backlog is walked newest-first and only the first message whose
+        artifact fetches and validates is deserialized; older (superseded)
+        messages are committed without touching the object store.  A fresh
+        worker group replaying a long topic history therefore does one
+        fetch, not one per historical version.
+
+        At-least-once on the NEWEST message: its offset is committed only
+        after successful install, so a transient object-store failure is
+        retried next cycle instead of silently regressing the worker to an
+        older target forever.  (Older messages are superseded either way
+        and are always committed.)"""
+        group = f"maintenance/{self.worker_id}"
+        msgs = self.bus.poll(SEGMENT_MAINTENANCE, group,
+                             max_messages=1_000_000)
+        if not msgs:
+            return 0
+        installed_offset = None
+        for msg in reversed(msgs):
+            try:
+                ref = ObjectRef.from_dict(msg.value["object_ref"])
+                data = self.object_store.get(ref, verify=True)
+                bundle = EngineBundle.deserialize(data, verify=True)
+                if bundle.version != msg.value["engine_version"]:
+                    raise ValueError("version mismatch")
+                if bundle.checksum() != msg.value["checksum"]:
+                    raise ValueError("bundle checksum != notification checksum")
+                ruleset = bundle.ruleset()
+                self._target = _Target(version=bundle.version, ruleset=ruleset,
+                                       idents=ruleset_idents(ruleset))
+                self._matchers.clear()
+                self._ack_pending = True
+                self._pending_ids = None    # target moved: full rescan
+                installed_offset = msg.offset
+                break
+            except Exception as e:  # noqa: BLE001 — nack, try the next-newest
+                if msg.offset not in self._nacked:
+                    self._nacked.add(msg.offset)
+                    self.bus.publish(MAINTENANCE_ACKS, {
+                        "worker": self.worker_id,
+                        "engine_version": msg.value.get("engine_version"),
+                        "ok": False, "error": str(e),
+                        "object_ref": msg.value.get("object_ref"),
+                    })
+        newest = msgs[-1].offset
+        if installed_offset == newest:
+            self.bus.commit(SEGMENT_MAINTENANCE, group, newest)
+        elif len(msgs) > 1:
+            # superseded history is done with; the failed newest is retried
+            self.bus.commit(SEGMENT_MAINTENANCE, group, msgs[-2].offset)
+        seen = sum(1 for m in msgs if m.offset >= self._seen_upto)
+        self._seen_upto = newest + 1
+        return seen
+
+    def set_target(self, ruleset: RuleSet) -> None:
+        """Direct (bus-less) targeting, for embedded/offline use."""
+        self._target = _Target(version=ruleset.version_hash(), ruleset=ruleset,
+                               idents=ruleset_idents(ruleset))
+        self._matchers.clear()
+        self._ack_pending = True
+        self._pending_ids = None
+
+    # -- delta computation -------------------------------------------------
+    def segment_delta(self, seg) -> tuple:
+        """-> (delta_ids, removed_ids): rules to (re-)match vs rules whose
+        bits/idents must be cleared.  Empty + empty == segment converged."""
+        t = self._target
+        seg_idents = seg.meta.get("rule_idents") or {}
+        delta = [int(rid) for rid, ident in t.idents.items()
+                 if seg_idents.get(rid) != ident]
+        removed = [int(rid) for rid in seg_idents if rid not in t.idents]
+        return sorted(delta), sorted(removed)
+
+    def pending_segments(self) -> list:
+        """Sealed, enrichment-bearing segments not yet at the target
+        (exact, full rescan)."""
+        if self._target is None:
+            return []
+        return [seg for seg in list(self.store.segments)
+                if self._segment_pending(seg)]
+
+    def _segment_pending(self, seg) -> bool:
+        if ENRICH_COLUMN not in seg.meta["columns"]:
+            return False
+        delta, removed = self.segment_delta(seg)
+        return bool(delta or removed)
+
+    def _refresh_pending(self) -> list:
+        """Incrementally maintained pending list: exact under the single
+        maintenance-writer assumption, O(new segments) per steady-state
+        cycle instead of O(all segments)."""
+        segs = list(self.store.segments)
+        ids = {s.segment_id for s in segs}
+        if self._pending_ids is None:
+            self._pending_ids = {s.segment_id for s in segs
+                                 if self._segment_pending(s)}
+        else:
+            for s in segs:
+                if (s.segment_id >= self._scanned_upto
+                        and self._segment_pending(s)):
+                    self._pending_ids.add(s.segment_id)
+            self._pending_ids &= ids       # compacted-away segments
+        self._scanned_upto = max((i + 1 for i in ids), default=0)
+        return [s for s in segs if s.segment_id in self._pending_ids]
+
+    # -- data plane --------------------------------------------------------
+    def run_cycle(self, *, max_segments: int = None) -> BackfillReport:
+        """One maintenance cycle: poll control topic, backfill up to the
+        scheduler budget (hottest segments first), ack when converged."""
+        rep = BackfillReport()
+        t0 = time.perf_counter()
+        rep.messages = self.poll_target()
+        if self._target is None:
+            rep.seconds = time.perf_counter() - t0
+            return rep
+        rep.version = self._target.version
+        candidates = self._refresh_pending()
+        # a permanently failing segment must not starve healthy ones under a
+        # tight budget: previously-failed segments only get budget once
+        # everything else has converged
+        fresh = [s for s in candidates
+                 if s.segment_id not in self._failed_ids]
+        todo = fresh or candidates
+        if self.scheduler is not None:
+            todo = self.scheduler.plan_cycle(todo)
+        if max_segments is not None:
+            todo = todo[:max_segments]
+        for seg in todo:
+            # per-segment isolation: one bad segment (corrupt spill file,
+            # truncated column) must not crash the worker or stall the rest.
+            # A failed segment stays in the pending set — so no ack happens
+            # while it lags — and is retried next cycle; a half-applied
+            # phase-1 withdraw is safe (queries fall back to scanning).
+            try:
+                done = self.backfill_segment(seg)
+            except Exception as e:  # noqa: BLE001
+                rep.segments_failed += 1
+                self._failed_ids.add(seg.segment_id)
+                if len(rep.errors) < 8:
+                    rep.errors.append((seg.segment_id, str(e)))
+                continue
+            if done:
+                rep.segments_backfilled += 1
+                rep.records += seg.num_records
+                rep.bytes_rewritten += seg.nbytes([ENRICH_COLUMN])
+                self._failed_ids.discard(seg.segment_id)
+                self._pending_ids.discard(seg.segment_id)
+        # sealed segments with no enrichment column can never converge —
+        # surface them instead of silently treating them as done
+        rep.segments_skipped = sum(
+            1 for seg in list(self.store.segments)
+            if ENRICH_COLUMN not in seg.meta["columns"])
+        rep.pending_after = len(self._pending_ids)
+        if rep.pending_after == 0 and self._ack_pending:
+            self.bus.publish(MAINTENANCE_ACKS, {
+                "worker": self.worker_id,
+                "engine_version": self._target.version,
+                "ok": True,
+                "segments": len(self.store.segments),
+            })
+            self._ack_pending = False
+            rep.acked = True
+        rep.seconds = time.perf_counter() - t0
+        return rep
+
+    def run_until_converged(self, *, max_cycles: int = 1000) -> BackfillReport:
+        """Drain: cycle until no sealed segment lags the target.  Returns
+        the totals across all cycles run."""
+        total = BackfillReport()
+        for _ in range(max_cycles):
+            rep = self.run_cycle()
+            total.version = rep.version
+            total.messages += rep.messages
+            total.segments_backfilled += rep.segments_backfilled
+            total.segments_skipped = rep.segments_skipped
+            total.segments_failed += rep.segments_failed
+            total.errors.extend(rep.errors[:8 - len(total.errors)])
+            total.records += rep.records
+            total.bytes_rewritten += rep.bytes_rewritten
+            total.seconds += rep.seconds
+            total.pending_after = rep.pending_after
+            total.acked = total.acked or rep.acked
+            if rep.messages == 0 and (rep.pending_after == 0
+                                      or rep.segments_backfilled == 0):
+                # converged — or stuck (every remaining segment failing);
+                # don't spin max_cycles on a permanently bad segment
+                break
+        return total
+
+    def backfill_segment(self, seg) -> bool:
+        """Re-enrich one sealed segment to the target ruleset.  Matches only
+        the delta rules, then atomically swaps bitmap + zone maps + counts +
+        postings + coverage metadata.  Returns False when the segment has no
+        enrichment column to rewrite.
+
+        Two-phase when a previously-claimed rule's bits are REINTERPRETED
+        (pattern changed or rule removed): first a meta-only update
+        withdraws those coverage claims — concurrent readers fall back to
+        scanning for them — and only then is the new data installed and
+        claimed.  A reader therefore never pairs an old claim with new bits
+        (or vice versa); pure additions skip the extra phase because no old
+        plan can reference a rule the old metadata never claimed."""
+        t = self._target
+        if ENRICH_COLUMN not in seg.meta["columns"]:
+            return False
+        delta_ids, removed_ids = self.segment_delta(seg)
+        seg_idents = seg.meta.get("rule_idents") or {}
+        reinterpreted = ([r for r in delta_ids if str(r) in seg_idents]
+                         + removed_ids)
+        if reinterpreted and seg.meta.get("rules_known") is not None:
+            drop = {str(r) for r in reinterpreted}
+            kept = {rid: ident for rid, ident in seg_idents.items()
+                    if rid not in drop}
+            seg.apply_update(meta_updates={
+                "rule_idents": kept,
+                "rules_known": pack_known_bitmap(
+                    kept, seg.meta["columns"][ENRICH_COLUMN][1][1]),
+            })
+        num_rules = t.ruleset.num_rules
+        W = max(words_for_rules(max(num_rules, 1)),
+                seg.meta["columns"][ENRICH_COLUMN][1][1])
+        # cache=False: a maintenance pass streams each column once — it must
+        # not pin the whole spilled dataset in RAM
+        old = np.asarray(seg.column(ENRICH_COLUMN, cache=False))
+        bm = np.zeros((seg.num_records, W), np.uint32)
+        bm[:, :old.shape[1]] = old
+        # clear every bit we are about to recompute or retire
+        stale = [r for r in delta_ids + removed_ids if r < W * 32]
+        if stale:
+            bm &= ~rule_mask(stale, W * 32)
+        if delta_ids:
+            delta_rules = tuple(r for r in t.ruleset.rules
+                                if r.rule_id in set(delta_ids))
+            matchers = self._matchers_for(delta_rules, seg)
+            for fieldname, engine in matchers.items():
+                if fieldname not in seg.meta["columns"]:
+                    continue
+                sub = np.asarray(engine.match(
+                    seg.column(fieldname, cache=False)))
+                bm[:, :sub.shape[1]] |= sub
+        enrich_meta, postings = derive_enrichment_meta(bm)
+        meta_updates = {
+            **enrich_meta,
+            "rule_idents": dict(t.idents),
+            "rules_known": pack_known_bitmap(t.idents, W),
+        }
+        seg.apply_update(columns={ENRICH_COLUMN: bm},
+                         meta_updates=meta_updates, rule_postings=postings)
+        return True
+
+    def _matchers_for(self, delta_rules: tuple, seg) -> dict:
+        """Compile (and cache) matchers for a delta sub-ruleset, keeping the
+        ORIGINAL rule ids so emitted bitmaps OR straight into the segment's
+        bitmap words."""
+        fields = tuple(sorted(
+            name for name, (dtype, shape) in seg.meta["columns"].items()
+            if dtype == "uint8" and len(shape) == 2))
+        key = (self._target.version,
+               tuple(r.rule_id for r in delta_rules), fields)
+        if key not in self._matchers:
+            bundle = compile_bundle(RuleSet(delta_rules), fields)
+            self._matchers[key] = build_matchers(
+                bundle, backend=self.backend, block_n=self.block_n,
+                interpret=self.interpret)
+        return self._matchers[key]

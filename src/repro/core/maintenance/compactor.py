@@ -1,0 +1,159 @@
+"""Compactor — merge small sealed segments into right-sized ones.
+
+Long-running ingests (frequent seals, filter-mode pipelines, restarts)
+degrade into thousands of tiny segments; per-segment overheads (zone-map
+checks, file opens, index lookups) then dominate query latency.  The
+compactor merges runs of *adjacent* undersized sealed segments into
+right-sized ones, re-deriving every artifact a seal would produce — zone
+maps, rule counts, rule postings, text indexes — via the store's own
+segment-construction path, so a compacted segment is indistinguishable from
+a natively sealed one.
+
+Coverage metadata is the intersection of the inputs' ``rule_idents`` (a rule
+is known for the merged segment only if every input knew it with the same
+content identity), preserving the consistency invariant: queries return
+byte-identical results before, during, and after compaction.
+
+The swap is atomic: the merged segment is fully built (and spilled) first;
+input columns are pre-warmed into memory so in-flight queries holding the
+old segment list keep working even after the old spill dirs are retired.
+"""
+from __future__ import annotations
+
+import shutil
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.query.store import (Segment, SegmentStore, pack_known_bitmap,
+                                    rules_known_for_versions)
+from repro.core.records import RecordBatch
+from repro.core.stream_processor import ENRICH_COLUMN
+
+
+@dataclass
+class CompactionReport:
+    merges: int = 0
+    merges_failed: int = 0      # group raised (e.g. corrupt spill file)
+    errors: list = None         # (segment ids, error) pairs, capped
+    segments_in: int = 0
+    segments_out: int = 0
+    records: int = 0
+    bytes_rewritten: int = 0
+    seconds: float = 0.0
+
+    def __post_init__(self):
+        if self.errors is None:
+            self.errors = []
+
+
+class Compactor:
+    """``min_records``: a sealed segment smaller than this is a merge
+    candidate (default: half the store's seal size).  ``target_records``:
+    stop growing a merge group at this size (default: the seal size)."""
+
+    def __init__(self, store: SegmentStore, *, min_records: int = None,
+                 target_records: int = None):
+        self.store = store
+        self.min_records = (min_records if min_records is not None
+                            else max(1, store.segment_size // 2))
+        self.target_records = (target_records if target_records is not None
+                               else store.segment_size)
+
+    def candidate_groups(self) -> list:
+        """Runs of >= 2 adjacent undersized segments with identical schemas,
+        greedily grown up to ``target_records``."""
+        groups, run, run_n = [], [], 0
+        for seg in list(self.store.segments):
+            small = seg.num_records < self.min_records
+            fits = run_n + seg.num_records <= self.target_records
+            same_schema = (not run or set(seg.meta["columns"])
+                           == set(run[0].meta["columns"]))
+            if small and fits and same_schema:
+                run.append(seg)
+                run_n += seg.num_records
+            else:
+                if len(run) >= 2:
+                    groups.append(run)
+                run, run_n = ([seg], seg.num_records) if small else ([], 0)
+        if len(run) >= 2:
+            groups.append(run)
+        return groups
+
+    def run_cycle(self, *, max_merges: int = None,
+                  max_bytes: int = None) -> CompactionReport:
+        rep = CompactionReport()
+        t0 = time.perf_counter()
+        used = 0
+        for group in self.candidate_groups():
+            if max_merges is not None and rep.merges >= max_merges:
+                break
+            cost = sum(s.nbytes() for s in group)
+            if max_bytes is not None and rep.merges and used + cost > max_bytes:
+                break
+            # per-group isolation: one corrupt spill file must not abort
+            # the cycle for the remaining groups (same contract as the
+            # BackfillWorker's per-segment isolation)
+            try:
+                ok = self._merge(group)
+            except Exception as e:  # noqa: BLE001
+                rep.merges_failed += 1
+                if len(rep.errors) < 8:
+                    rep.errors.append(
+                        ([s.segment_id for s in group], str(e)))
+                continue
+            if ok:
+                rep.merges += 1
+                rep.segments_in += len(group)
+                rep.segments_out += 1
+                rep.records += sum(s.num_records for s in group)
+                rep.bytes_rewritten += cost
+                used += cost
+        rep.seconds = time.perf_counter() - t0
+        return rep
+
+    def _merge(self, group: list) -> bool:
+        # pre-warm every input column so readers holding the old segment
+        # list stay served after the old spill dirs are retired
+        names = sorted(group[0].meta["columns"])
+        cols = {}
+        for name in names:
+            parts = [np.asarray(s.column(name, cache=True)) for s in group]
+            if name == ENRICH_COLUMN:
+                W = max(p.shape[1] for p in parts)
+                parts = [np.pad(p, ((0, 0), (0, W - p.shape[1])))
+                         for p in parts]
+            cols[name] = np.concatenate(parts)
+        merged = self.store.make_segment_from_batch(RecordBatch(cols))
+        try:
+            self._fix_coverage(merged, group)
+            swapped = self.store.replace_segments(group, merged)
+        except Exception:
+            # never leave an orphaned merged spill dir behind: load() would
+            # pick it up ALONGSIDE the un-retired inputs and double-count
+            if merged.path is not None:
+                shutil.rmtree(merged.path, ignore_errors=True)
+            raise
+        if not swapped:
+            # raced with another maintenance action — discard our artifact
+            if merged.path is not None:
+                shutil.rmtree(merged.path, ignore_errors=True)
+            return False
+        return True
+
+    def _fix_coverage(self, merged: Segment, group: list) -> None:
+        """Merged ``rules_known`` = intersection of the inputs' rule-ident
+        maps.  This keeps *backfilled* coverage (which can exceed what the
+        version registry implies) instead of re-deriving from versions."""
+        maps = [s.meta.get("rule_idents") for s in group]
+        if any(m is None for m in maps):
+            return
+        idents = rules_known_for_versions(
+            {i: m for i, m in enumerate(maps)}, range(len(maps)))
+        W = (merged.meta["columns"][ENRICH_COLUMN][1][1]
+             if ENRICH_COLUMN in merged.meta["columns"] else 0)
+        merged.apply_update(meta_updates={
+            "rule_idents": idents,
+            "rules_known": pack_known_bitmap(idents, max(W, 1)),
+        })

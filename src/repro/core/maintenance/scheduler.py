@@ -1,0 +1,62 @@
+"""MaintenanceScheduler — which sealed segments to touch, in what order,
+under what budget.
+
+The maintenance plane runs off the ingest path but shares the machine with
+it, so every cycle is bounded by a bytes/records budget (the analogue of
+compaction throttles in LSM stores).  Prioritization is *heat-aware*: the
+QueryProfiler tracks how much query time each segment burns on the
+consistency-fallback scan path (``segment_heat``), and the scheduler
+re-enriches the most queried historical segments first — closing the
+profiler -> updater -> backfill loop for historical data the same way the
+profiler -> updater -> stream-processor loop closes it for fresh data.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class MaintenancePolicy:
+    """Per-cycle budget.  ``None`` disables that bound."""
+    max_bytes_per_cycle: int = None
+    max_records_per_cycle: int = None
+    max_segments_per_cycle: int = None
+
+
+class MaintenanceScheduler:
+    def __init__(self, profiler=None, policy: MaintenancePolicy = None):
+        self.profiler = profiler
+        self.policy = policy or MaintenancePolicy()
+
+    def order(self, segments: list) -> list:
+        """Hottest (most fallback-scanned) first; ties oldest-id first so
+        cold historical segments still drain deterministically."""
+        heat = (self.profiler.segment_heat()
+                if self.profiler is not None else {})
+        return sorted(segments,
+                      key=lambda s: (-heat.get(s.segment_id, 0.0),
+                                     s.segment_id))
+
+    def plan_cycle(self, segments: list, *, cost_bytes=None) -> list:
+        """Order candidates and cut at the cycle budget.  At least one
+        segment is always admitted so a single oversized segment cannot
+        starve the plane forever."""
+        cost_bytes = cost_bytes or (lambda s: s.nbytes())
+        take, used_b, used_r = [], 0, 0
+        p = self.policy
+        for seg in self.order(segments):
+            b, r = cost_bytes(seg), seg.num_records
+            if take:
+                if p.max_segments_per_cycle is not None and \
+                        len(take) >= p.max_segments_per_cycle:
+                    break
+                if p.max_bytes_per_cycle is not None and \
+                        used_b + b > p.max_bytes_per_cycle:
+                    break
+                if p.max_records_per_cycle is not None and \
+                        used_r + r > p.max_records_per_cycle:
+                    break
+            take.append(seg)
+            used_b += b
+            used_r += r
+        return take

@@ -26,6 +26,24 @@ def escape(literal: str) -> str:
     return "".join("\\" + c if c in _META else c for c in literal)
 
 
+def rule_ident(rule: "Rule") -> str:
+    """Content identity of a rule, independent of its id.
+
+    Two rules with the same ident produce identical enrichment bits, so a
+    segment whose bitmap was computed under one is valid under the other.
+    Used by the per-segment ``rules_known`` coverage check and the
+    maintenance plane's backfill delta: a *changed* rule (same id, new
+    pattern) gets a new ident and is re-matched, not trusted.
+    """
+    payload = f"{rule.pattern}\x00{','.join(rule.fields)}\x00{rule.case_insensitive}"
+    return hashlib.sha256(payload.encode()).hexdigest()[:12]
+
+
+def ruleset_idents(ruleset: "RuleSet") -> dict:
+    """str(rule_id) -> ident for every rule (string keys: JSON-stable)."""
+    return {str(r.rule_id): rule_ident(r) for r in ruleset.rules}
+
+
 def _unescape(s: str) -> str:
     out, i = [], 0
     while i < len(s):

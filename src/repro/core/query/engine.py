@@ -59,6 +59,7 @@ class QueryResult:
     segments_pruned: int = 0
     segments_fallback: int = 0
     bytes_read: int = 0
+    fallback_ids: tuple = ()    # segment ids served via consistency fallback
 
 
 def substring_scan(data: np.ndarray, term: str) -> np.ndarray:
@@ -144,6 +145,7 @@ class QueryEngine:
             res.segments_pruned += local.segments_pruned
             res.segments_fallback += local.segments_fallback
             res.bytes_read += local.bytes_read
+            res.fallback_ids += local.fallback_ids
 
         matches = []   # (segment, ids) for copy mode
         for seg, (ids, _) in zip(segs, per_seg):
@@ -181,21 +183,49 @@ class QueryEngine:
         return ids
 
     def _seg_fluxsieve(self, seg: Segment, query: Query, plan, cache, res):
+        # snapshot-validate-retry: the maintenance plane can swap a sealed
+        # segment's enrichment (bitmap/postings + meta) between our coverage
+        # check and our data read.  Evaluate everything against ONE meta
+        # snapshot, then confirm the segment still carries that snapshot;
+        # if not, retry against the new state, and after repeated swaps fall
+        # back to the full scan, which never depends on enrichment.
+        for _ in range(3):
+            meta = seg.meta
+            attempt = QueryResult(count=0)
+            ids = self._seg_fluxsieve_snap(seg, meta, query, plan, cache,
+                                           attempt)
+            if seg.meta is meta:
+                res.segments_scanned += attempt.segments_scanned
+                res.segments_pruned += attempt.segments_pruned
+                res.segments_fallback += attempt.segments_fallback
+                res.bytes_read += attempt.bytes_read
+                res.fallback_ids += attempt.fallback_ids
+                return ids
+        res.segments_fallback += 1
+        res.fallback_ids += (seg.segment_id,)
+        return self._seg_full_scan(seg, query, cache, res)
+
+    def _seg_fluxsieve_snap(self, seg: Segment, meta: dict, query: Query,
+                            plan, cache, res):
         # consistency: records ingested before a rule existed -> fallback scan
-        if not plan.covers_segment(seg):
+        if not plan.covers_segment(seg, meta):
             res.segments_fallback += 1
+            res.fallback_ids += (seg.segment_id,)   # maintenance-plane heat
             return self._seg_full_scan(seg, query, cache, res)
         # zone-map pruning: segment-level OR of bitmaps lacks a needed bit
-        zone = seg.meta.get("rule_bitmap_any")
+        zone = meta.get("rule_bitmap_any")
         if zone is not None:
             zone = np.asarray(zone, np.uint32)
             for mask in plan.masks:
-                if not (zone & mask).any():
+                # widths may differ across engine generations; a bit beyond
+                # the segment's bitmap width cannot be set in any record
+                k = min(len(zone), len(mask))
+                if not (zone[:k] & mask[:k]).any():
                     res.segments_pruned += 1
                     return None
         # single-rule count: answered from per-segment metadata, zero I/O
         if query.mode == "count" and len(plan.rule_ids) == 1:
-            c = seg.rule_count(plan.rule_ids[0])
+            c = seg.rule_count(plan.rule_ids[0], meta)
             if c is not None:
                 res.segments_scanned += 1
                 return int(c)

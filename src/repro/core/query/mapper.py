@@ -6,11 +6,14 @@ A (field, term) predicate maps to a registered rule when the rule's pattern
 matches the term exactly and the rule covers the field.  The plan carries one
 query-time bitmap mask per predicate (AND semantics across predicates).
 
-Consistency propagation (paper §3.4 step 4): the mapper is notified of every
-activated engine version and remembers at which version id each rule first
-became active; a segment is covered only if ALL its records were enriched by
-an engine that knew every needed rule (checked against the segment's
-``engine_version_min`` zone map).
+Consistency propagation (paper §3.4 step 4): a segment is covered only if
+ALL its records were enriched by an engine that knew every needed rule.
+The primary check is **rule-aware**: segments carry a ``rules_known`` bitmap
+plus per-rule content identities (``rule_idents``), written at seal and kept
+current by the maintenance plane's backfill — so a late-added rule becomes
+servable on historical segments the moment they are re-enriched.  Segments
+sealed without that metadata fall back to the coarser version-min check
+(``engine_version_min`` zone map).
 """
 from __future__ import annotations
 
@@ -19,7 +22,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core import enrichment
-from repro.core.patterns import RuleSet, escape
+from repro.core.patterns import RuleSet, escape, rule_ident
 from repro.core.query.store import Segment
 
 
@@ -27,10 +30,29 @@ from repro.core.query.store import Segment
 class FluxSievePlan:
     masks: tuple            # one (W,) uint32 mask per query predicate
     rule_ids: tuple
+    rule_idents: tuple      # content identity per rule_id (parallel tuple)
     min_version_id: int     # newest version id any needed rule was added at
 
-    def covers_segment(self, seg: Segment) -> bool:
-        v = seg.meta.get("engine_version_min")
+    def covers_segment(self, seg: Segment, meta: dict = None) -> bool:
+        """``meta`` lets the engine evaluate coverage against a snapshot of
+        ``seg.meta`` (concurrent maintenance swaps the meta object; checking
+        a snapshot and re-validating its identity after the read makes the
+        check-then-read race detectable)."""
+        meta = seg.meta if meta is None else meta
+        known = meta.get("rules_known")
+        if known is not None:
+            # rule-aware coverage: every needed rule id must be known AND
+            # its content identity must match (a changed pattern reuses the
+            # id but yields stale bits until backfill re-matches it)
+            idents = meta.get("rule_idents") or {}
+            for rid, ident in zip(self.rule_ids, self.rule_idents):
+                w = rid // 32
+                if w >= len(known) or not (int(known[w]) >> (rid % 32)) & 1:
+                    return False
+                if idents.get(str(rid)) != ident:
+                    return False
+            return True
+        v = meta.get("engine_version_min")
         return v is not None and v >= self.min_version_id
 
 
@@ -38,6 +60,7 @@ class QueryMapper:
     def __init__(self, ruleset: RuleSet = None, *, version_id: int = 0):
         self._rules_by_key: dict = {}   # (field, pattern) -> rule_id
         self._rule_added_at: dict = {}  # rule_id -> version id
+        self._idents: dict = {}         # rule_id -> content identity
         self._num_rules = 0
         self._version_id = version_id
         if ruleset is not None:
@@ -49,13 +72,26 @@ class QueryMapper:
         self._version_id = version_id
         self._num_rules = max(self._num_rules, ruleset.num_rules)
         keys = {}
+        idents = {}
         for r in ruleset.rules:
             for f in r.fields:
                 keys[(f, r.pattern)] = r.rule_id
-            if r.rule_id not in self._rule_added_at:
+            idents[r.rule_id] = rule_ident(r)
+            if (r.rule_id not in self._rule_added_at
+                    or self._idents.get(r.rule_id) not in (None,
+                                                           idents[r.rule_id])):
+                # new rule — or same id with CHANGED content: bits enriched
+                # before this version are stale, so the version-min fallback
+                # (segments without rules_known metadata) must not trust them
                 self._rule_added_at[r.rule_id] = version_id
-        # rules removed in this version no longer map
+        # rules removed in this version no longer map; forget their added-at
+        # too, so a later RE-ADD counts as new (segments sealed during the
+        # removal window have no bits for it and must not look covered)
+        for rid in list(self._rule_added_at):
+            if rid not in idents:
+                del self._rule_added_at[rid]
         self._rules_by_key = keys
+        self._idents = idents
 
     @property
     def num_rules(self) -> int:
@@ -83,4 +119,6 @@ class QueryMapper:
             rids.append(rid)
             min_vid = max(min_vid, self._rule_added_at.get(rid, 0))
         return FluxSievePlan(masks=tuple(masks), rule_ids=tuple(rids),
+                             rule_idents=tuple(self._idents.get(r, "")
+                                               for r in rids),
                              min_version_id=min_vid)

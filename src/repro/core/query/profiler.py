@@ -34,6 +34,7 @@ class QueryProfiler:
         self.hot_count = hot_count
         self.hot_seconds = hot_seconds
         self._stats: dict = {}      # (field, term) -> PredicateStats
+        self._segment_heat: dict = {}   # segment_id -> fallback seconds
         self._lock = threading.Lock()
 
     # -- ingestion (engine calls this per query) --------------------------
@@ -47,6 +48,20 @@ class QueryProfiler:
                 if result.path != "fluxsieve":
                     st.slow_path_s += share
                 st.last_path = result.path
+            # per-segment heat: how much query time each segment burned on
+            # the consistency-fallback scan path — the MaintenanceScheduler
+            # backfills the hottest segments first
+            ids = getattr(result, "fallback_ids", ())
+            if ids:
+                share_seg = result.latency_s / len(ids)
+                for sid in ids:
+                    self._segment_heat[sid] = (
+                        self._segment_heat.get(sid, 0.0) + share_seg)
+
+    def segment_heat(self) -> dict:
+        """segment_id -> cumulative seconds spent on fallback scans."""
+        with self._lock:
+            return dict(self._segment_heat)
 
     # -- analysis ----------------------------------------------------------
     def hot_predicates(self) -> list:

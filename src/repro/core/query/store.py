@@ -22,8 +22,10 @@ Zone maps kept per segment:
 from __future__ import annotations
 
 import json
+import os
 import re
 import threading
+import warnings
 from dataclasses import dataclass, field
 from pathlib import Path
 
@@ -33,6 +35,12 @@ from repro.core.records import RecordBatch, decode_texts
 from repro.core.stream_processor import ENGINE_VERSION_COLUMN, ENRICH_COLUMN
 
 _TOKEN_RE = re.compile(r"[A-Za-z0-9_\-./:]+")
+
+# fraction of a segment above which a rule is "dense" and gets no posting list
+POSTING_DENSITY_CUT = 0.1
+
+# tombstone file marking a spill dir replaced by compaction: load() skips it
+RETIRED_MARKER = "RETIRED"
 
 
 def tokenize(text: str) -> list:
@@ -48,6 +56,56 @@ def build_text_index(data: np.ndarray) -> dict:
     return {t: np.asarray(ids, np.int32) for t, ids in postings.items()}
 
 
+def derive_enrichment_meta(bm: np.ndarray) -> tuple:
+    """(N, W) uint32 rule bitmap -> (meta_updates, rule_postings).
+
+    Shared by seal, backfill, and compaction so every producer of an
+    enrichment column derives identical zone maps / counts / postings:
+      * ``rule_bitmap_any``  — OR of all bitmaps (zone-map pruning);
+      * ``rule_counts``      — per-rule match counts (metadata-only counts);
+      * posting lists for selective rules (the bitmap's inverted index).
+    """
+    bm = np.asarray(bm)
+    bm_any = np.bitwise_or.reduce(bm, axis=0) if len(bm) else \
+        np.zeros(bm.shape[1], np.uint32)
+    meta = {"rule_bitmap_any": bm_any.tolist()}
+    bits = np.unpackbits(bm.view(np.uint8), axis=1, bitorder="little")
+    counts = bits.sum(axis=0)
+    meta["rule_counts"] = [[int(r), int(c)]
+                           for r, c in enumerate(counts) if c]
+    postings = {}
+    dense_cut = max(1, int(POSTING_DENSITY_CUT * len(bm)))
+    for r, c in meta["rule_counts"]:
+        if c <= dense_cut:
+            postings[str(r)] = np.flatnonzero(bits[:, r]).astype(np.int32)
+    return meta, postings
+
+
+def rules_known_for_versions(version_rules: dict, version_ids) -> dict:
+    """Intersect the rule-ident maps of every engine version present in a
+    segment: str(rule_id) -> ident for rules that ALL versions knew with the
+    same content identity.  A version missing from the registry contributes
+    nothing (safe: those rules fall back to scanning)."""
+    maps = [version_rules.get(int(v)) for v in version_ids]
+    if not maps or any(m is None for m in maps):
+        return {}
+    common = dict(maps[0])
+    for m in maps[1:]:
+        common = {rid: ident for rid, ident in common.items()
+                  if m.get(rid) == ident}
+    return common
+
+
+def pack_known_bitmap(idents: dict, words: int) -> list:
+    """{str(rule_id): ident} -> packed uint32 words (list, JSON-able)."""
+    known = np.zeros(words, np.uint32)
+    for rid in idents:
+        r = int(rid)
+        if r < words * 32:
+            known[r // 32] |= np.uint32(1 << (r % 32))
+    return known.tolist()
+
+
 @dataclass
 class Segment:
     segment_id: int
@@ -56,7 +114,13 @@ class Segment:
     _columns: dict = field(default_factory=dict)     # name -> array (may be empty when spilled)
     _text_index: dict = field(default_factory=dict)  # field -> {token: ids}
     _rule_postings: dict = None     # str(rule_id) -> int32 ids (None = absent)
+    _rule_counts: tuple = None      # (source object, {int id: count}) cache
     path: Path = None               # spill directory (None = memory only)
+    # serializes cold-load cache fills against apply_update: without it a
+    # reader could np.load the OLD file, get descheduled across a swap, and
+    # install the stale array under the NEW metadata — permanently.  The
+    # in-cache fast paths stay lock-free (install happens-before meta flip).
+    _io_lock: object = field(default_factory=threading.Lock)
 
     # -- column access ---------------------------------------------------
     @property
@@ -71,9 +135,12 @@ class Segment:
         if self.path is None:
             raise KeyError(f"segment {self.segment_id}: column {name} dropped "
                            "with no spill path")
-        arr = np.load(self.path / f"{name}.npy")
-        if cache:
-            self._columns[name] = arr
+        with self._io_lock:
+            if name in self._columns:
+                return self._columns[name]
+            arr = np.load(self.path / f"{name}.npy")
+            if cache:
+                self._columns[name] = arr
         return arr
 
     def column_rows(self, name: str, ids: np.ndarray,
@@ -85,10 +152,13 @@ class Segment:
             return self._columns[name][ids]
         if self.path is None:
             raise KeyError(f"segment {self.segment_id}: column {name}")
-        arr = np.load(self.path / f"{name}.npy", mmap_mode="r")
-        out = np.array(arr[ids])
-        if cache:  # hot mode retains the full column for later queries
-            self._columns[name] = np.array(arr)
+        with self._io_lock:
+            if name in self._columns:
+                return self._columns[name][ids]
+            arr = np.load(self.path / f"{name}.npy", mmap_mode="r")
+            out = np.array(arr[ids])
+            if cache:  # hot mode retains the full column for later queries
+                self._columns[name] = np.array(arr)
         return out
 
     def text_index(self, fieldname: str, *, cache: bool = True) -> dict:
@@ -97,9 +167,12 @@ class Segment:
         if self.path is None:
             raise KeyError(f"segment {self.segment_id}: no text index for "
                            f"{fieldname}")
-        idx = _load_index(self.path / f"{fieldname}.fts.npz")
-        if cache:
-            self._text_index[fieldname] = idx
+        with self._io_lock:
+            if fieldname in self._text_index:
+                return self._text_index[fieldname]
+            idx = _load_index(self.path / f"{fieldname}.fts.npz")
+            if cache:
+                self._text_index[fieldname] = idx
         return idx
 
     def has_text_index(self, fieldname: str) -> bool:
@@ -115,21 +188,85 @@ class Segment:
         if self._rule_postings is None:
             if self.path is None or not (self.path / "rule_postings.npz").exists():
                 return None
-            idx = _load_index(self.path / "rule_postings.npz")
-            if cache:
-                self._rule_postings = idx
+            with self._io_lock:
+                if self._rule_postings is not None:
+                    return self._rule_postings.get(str(rule_id))
+                idx = _load_index(self.path / "rule_postings.npz")
+                if cache:
+                    self._rule_postings = idx
             return idx.get(str(rule_id))
         return self._rule_postings.get(str(rule_id))
 
-    def rule_count(self, rule_id: int):
-        """Per-segment precomputed match count (None when unavailable)."""
-        rc = self.meta.get("rule_counts")
+    def rule_count(self, rule_id: int, meta: dict = None):
+        """Per-segment precomputed match count (None when unavailable).
+        ``meta`` reads from a caller-held snapshot of ``self.meta``."""
+        rc = (self.meta if meta is None else meta).get("rule_counts")
         if rc is None:
             return None
-        if not isinstance(rc, dict):
-            rc = {int(r): int(c) for r, c in rc}
-            self.meta["rule_counts"] = rc
-        return rc.get(int(rule_id), 0)
+        # normalized lookup lives OUTSIDE meta (meta must stay JSON-shaped:
+        # mutating it in place leaks {int: int} keys into meta.json as
+        # strings, which a reload would then silently miss).  Keyed on the
+        # source object so an apply_update meta swap invalidates it.
+        if self._rule_counts is None or self._rule_counts[0] is not rc:
+            pairs = rc.items() if isinstance(rc, dict) else rc
+            self._rule_counts = (rc, {int(r): int(c) for r, c in pairs})
+        return self._rule_counts[1].get(int(rule_id), 0)
+
+    # -- maintenance -------------------------------------------------------
+    def apply_update(self, *, columns: dict = None, meta_updates: dict = None,
+                     rule_postings: dict = None,
+                     text_index: dict = None) -> None:
+        """Atomically swap enrichment artifacts of a sealed segment.
+
+        Maintenance-plane entry point (backfill rewrites ``rule_bitmap`` +
+        zone maps + postings).  Safe against concurrent readers:
+
+          * spilled files are written to a temp name and ``os.replace``d, so
+            a cold read sees either the old or the new file, never a torn
+            one;
+          * in-memory columns/postings/indexes are installed *before* the
+            metadata flips, and ``self.meta`` is replaced by a single
+            attribute assignment — a reader that still sees the old meta
+            takes the old (fallback/scan) path, which stays byte-identical.
+
+        Safe on its own only when the new data is a pure *extension* (old
+        claims still hold over the new bits).  When previously-claimed bits
+        are reinterpreted, the caller must first withdraw those claims with
+        a meta-only update — see ``BackfillWorker.backfill_segment``.
+        """
+        columns = columns or {}
+        meta_updates = dict(meta_updates or {})
+        for name, arr in columns.items():
+            meta_updates.setdefault("columns", dict(self.meta["columns"]))
+            meta_updates["columns"][name] = (str(arr.dtype), list(arr.shape))
+        # the io lock excludes in-flight cold cache fills: without it a
+        # reader could have loaded the OLD file and install it as the cache
+        # entry AFTER the swap below, poisoning every later query
+        with self._io_lock:
+            if self.path is not None:
+                for name, arr in columns.items():
+                    _atomic_save_npy(self.path / f"{name}.npy", arr)
+                if rule_postings is not None:
+                    _save_index(self.path / "rule_postings.npz", rule_postings)
+                if text_index is not None:
+                    for fieldname, idx in text_index.items():
+                        _save_index(self.path / f"{fieldname}.fts.npz", idx)
+            # install data before metadata: a concurrent reader either sees
+            # the old meta (-> old path, old semantics) or the new meta with
+            # the new data already in place
+            for name, arr in columns.items():
+                if self.path is None or name in self._columns:
+                    self._columns[name] = arr
+            if rule_postings is not None:
+                self._rule_postings = dict(rule_postings)
+            if text_index is not None:
+                self._text_index.update(text_index)
+            self.meta = {**self.meta, **meta_updates}
+            if self.path is not None:
+                _atomic_write_text(self.path / "meta.json", json.dumps(
+                    {**self.meta, "segment_id": self.segment_id,
+                     "num_records": self.num_records},
+                    default=_json_np))
 
     # -- lifecycle ---------------------------------------------------------
     def spill(self, root: Path) -> None:
@@ -152,9 +289,10 @@ class Segment:
         """Free in-memory columns/indexes (requires a spill path)."""
         if self.path is None:
             raise RuntimeError("cannot drop caches before spill()")
-        self._columns = {}
-        self._text_index = {}
-        self._rule_postings = None
+        with self._io_lock:
+            self._columns = {}
+            self._text_index = {}
+            self._rule_postings = None
 
     def nbytes(self, names=None) -> int:
         names = names or self.column_names
@@ -187,8 +325,24 @@ def _save_index(path: Path, idx: dict) -> None:
     lengths = np.asarray([len(idx[t]) for t in tokens], np.int64)
     flat = (np.concatenate([idx[t] for t in tokens]) if tokens
             else np.zeros(0, np.int32))
-    np.savez_compressed(path, tokens=np.asarray(tokens), lengths=lengths,
-                        flat=flat)
+    tmp = path.with_name(path.name + ".tmp")
+    with open(tmp, "wb") as f:
+        np.savez_compressed(f, tokens=np.asarray(tokens), lengths=lengths,
+                            flat=flat)
+    os.replace(tmp, path)
+
+
+def _atomic_save_npy(path: Path, arr: np.ndarray) -> None:
+    tmp = path.with_name(path.name + ".tmp")
+    with open(tmp, "wb") as f:
+        np.save(f, arr)
+    os.replace(tmp, path)
+
+
+def _atomic_write_text(path: Path, text: str) -> None:
+    tmp = path.with_name(path.name + ".tmp")
+    tmp.write_text(text)
+    os.replace(tmp, path)
 
 
 def _load_index(path: Path) -> dict:
@@ -203,13 +357,20 @@ class SegmentStore:
     """Append-only columnar store with sealing + spilling."""
 
     def __init__(self, *, segment_size: int = 100_000, root=None,
-                 index_fields: tuple = ()):
+                 index_fields: tuple = (), version_rules: dict = None):
         self.segment_size = segment_size
         self.root = Path(root) if root is not None else None
         self.index_fields = tuple(index_fields)
+        # engine version_id -> {str(rule_id): ident} — normally the live
+        # ``StreamProcessor.version_rules`` dict (IngestPipeline wires it).
+        # Lets seal derive the per-segment ``rules_known`` coverage bitmap;
+        # without it segments carry no rules_known and the mapper falls back
+        # to the coarser version-min check.
+        self.version_rules = version_rules
         self.segments: list = []
         self._active: list = []     # pending RecordBatches
         self._active_count = 0
+        self._next_id = 0           # monotonic (compaction retires ids)
         self._lock = threading.RLock()
 
     # -- ingestion ---------------------------------------------------------
@@ -234,7 +395,8 @@ class SegmentStore:
         self.segments.append(self._make_segment(head))
 
     def _make_segment(self, batch: RecordBatch) -> Segment:
-        sid = len(self.segments)
+        sid = self._next_id
+        self._next_id += 1
         meta = {"columns": {k: (str(v.dtype), list(v.shape))
                             for k, v in batch.columns.items()}}
         seg_postings = None
@@ -243,29 +405,23 @@ class SegmentStore:
             meta["ts_min"], meta["ts_max"] = int(ts.min()), int(ts.max())
         if ENRICH_COLUMN in batch.columns:
             bm = batch.columns[ENRICH_COLUMN]
-            bm_any = np.bitwise_or.reduce(bm, axis=0)
-            meta["rule_bitmap_any"] = bm_any.tolist()
-            # per-rule match counts (sparse): count queries on a single rule
-            # are answered from segment METADATA, no column I/O — the
-            # columnar-engine move of keeping per-segment aggregates
-            bits = np.unpackbits(bm.view(np.uint8), axis=1, bitorder="little")
-            counts = bits.sum(axis=0)
-            meta["rule_counts"] = [[int(r), int(c)]
-                                   for r, c in enumerate(counts) if c]
-            # sparse per-rule posting lists (selective rules only): the
-            # enrichment column's inverted index, built once at seal — copy
-            # queries touch postings + matched rows, never the full column
-            postings = {}
-            dense_cut = max(1, int(0.1 * len(batch)))
-            for r, c in meta["rule_counts"]:
-                if c <= dense_cut:
-                    postings[str(r)] = np.flatnonzero(bits[:, r]).astype(
-                        np.int32)
-            seg_postings = postings
+            # zone map + per-rule counts (metadata-only count queries) +
+            # sparse posting lists — the enrichment column's inverted index,
+            # built once at seal; copy queries touch postings + matched rows
+            enrich_meta, seg_postings = derive_enrichment_meta(bm)
+            meta.update(enrich_meta)
         if ENGINE_VERSION_COLUMN in batch.columns:
             ev = batch.columns[ENGINE_VERSION_COLUMN]
             meta["engine_version_min"] = int(ev.min())
             meta["engine_version_max"] = int(ev.max())
+            if self.version_rules is not None and ENRICH_COLUMN in batch.columns:
+                # rule-aware coverage (maintenance plane): exactly which rule
+                # identities every record's enriching engine knew
+                idents = rules_known_for_versions(self.version_rules,
+                                                  np.unique(ev))
+                meta["rule_idents"] = idents
+                meta["rules_known"] = pack_known_bitmap(
+                    idents, batch.columns[ENRICH_COLUMN].shape[1])
         seg = Segment(segment_id=sid, num_records=len(batch), meta=meta,
                       _columns=dict(batch.columns),
                       _rule_postings=seg_postings)
@@ -275,6 +431,54 @@ class SegmentStore:
         if self.root is not None:
             seg.spill(self.root)
         return seg
+
+    # -- maintenance -------------------------------------------------------
+    def make_segment_from_batch(self, batch: RecordBatch) -> Segment:
+        """Build (and spill) a sealed segment outside the append path — the
+        Compactor uses this to materialize a merged segment before swapping
+        it into the segment list."""
+        with self._lock:
+            return self._make_segment(batch)
+
+    def replace_segments(self, old: list, new: Segment) -> bool:
+        """Atomically substitute a contiguous run of sealed segments with
+        one merged segment.  Returns False (no-op) if any of ``old`` is no
+        longer present or the run is not contiguous — the caller simply
+        retries next cycle.  Readers that grabbed the previous list keep
+        querying the old segment objects, which stay fully valid."""
+        with self._lock:
+            try:
+                idx = [self.segments.index(s) for s in old]
+            except ValueError:
+                return False
+            if idx != list(range(idx[0], idx[0] + len(idx))):
+                return False
+            self.segments = (self.segments[:idx[0]] + [new]
+                             + self.segments[idx[0] + len(idx):])
+        failed = [s.segment_id for s in old if not self._retire_spill(s)]
+        if failed:
+            # a live un-tombstoned input would be double-loaded (and its
+            # records double-counted) by the next SegmentStore.load — this
+            # must not pass silently
+            warnings.warn(
+                f"segments {failed}: failed to tombstone replaced spill "
+                f"dirs; SegmentStore.load would double-count their records",
+                RuntimeWarning, stacklevel=2)
+        return True
+
+    def _retire_spill(self, seg: Segment) -> bool:
+        """Tombstone a replaced segment's spill dir so ``load`` skips it.
+        The files are NOT moved: in-flight cold readers holding the old
+        segment object keep reading them at the same paths (renaming the
+        dir would make their next ``np.load`` crash).  A future GC pass
+        deletes tombstoned dirs once no reader can hold the old list."""
+        if seg.path is None:
+            return True
+        try:
+            (seg.path / RETIRED_MARKER).touch()
+            return True
+        except OSError:
+            return False
 
     # -- bookkeeping ---------------------------------------------------------
     @property
@@ -294,5 +498,9 @@ class SegmentStore:
     def load(root) -> "SegmentStore":
         store = SegmentStore(root=root)
         for d in sorted(Path(root).glob("segment-*")):
+            if (d / RETIRED_MARKER).exists():
+                continue        # replaced by compaction, kept for readers
             store.segments.append(Segment.load(d))
+        store._next_id = 1 + max(
+            (s.segment_id for s in store.segments), default=-1)
         return store

@@ -29,6 +29,7 @@ from repro.core.control_plane import (ControlBus, MATCHER_ACKS,
                                       MATCHER_UPDATES)
 from repro.core.matcher import EngineBundle, MatchEngine, build_matchers
 from repro.core.object_store import ObjectRef, ObjectStore
+from repro.core.patterns import ruleset_idents
 from repro.core.records import RecordBatch
 
 ENRICH_COLUMN = "rule_bitmap"
@@ -77,6 +78,11 @@ class StreamProcessor:
         self._lock = threading.RLock()
         self._pending: dict = {}          # version -> ObjectRef (fetch queued)
         self._swap_lock = threading.Lock()
+        # version_id -> {str(rule_id): ident}: which rules (by content
+        # identity) each activated engine knew.  The SegmentStore reads this
+        # at seal time to derive the per-segment ``rules_known`` coverage
+        # metadata (consistency propagation, paper §3.4 step 4).
+        self.version_rules: dict = {}
         self._install(bundle, version_id=0)
 
     # -- data topology ---------------------------------------------------
@@ -121,6 +127,7 @@ class StreamProcessor:
         swaps = 0
         for msg in self.bus.poll(MATCHER_UPDATES, group):
             ok = False
+            err = ""
             try:
                 ref = ObjectRef.from_dict(msg.value["object_ref"])
                 expect_version = msg.value["engine_version"]
@@ -144,6 +151,9 @@ class StreamProcessor:
                    "ok": ok}
             if not ok:
                 ack["error"] = err
+                # echo the artifact reference so operators can tell WHICH
+                # object failed fetch/validation from the ack alone
+                ack["object_ref"] = msg.value.get("object_ref")
             self.bus.publish(MATCHER_ACKS, ack)
         return swaps
 
@@ -172,6 +182,9 @@ class StreamProcessor:
         matchers = build_matchers(bundle, backend=self.backend,
                                   block_n=self.block_n,
                                   interpret=self.interpret)
+        idents = (ruleset_idents(bundle.ruleset()) if bundle.ruleset_json
+                  else {})
+        self.version_rules[version_id] = idents
         self._active = _Active(bundle=bundle, matchers=matchers,
                                version_id=version_id,
                                activated_at=time.time())

@@ -20,8 +20,9 @@ import threading
 import time
 from dataclasses import dataclass, field
 
-from repro.core.control_plane import (ControlBus, MATCHER_ACKS,
-                                      MATCHER_UPDATES)
+from repro.core.control_plane import (ControlBus, MAINTENANCE_ACKS,
+                                      MATCHER_ACKS, MATCHER_UPDATES,
+                                      SEGMENT_MAINTENANCE)
 from repro.core.matcher import EngineBundle, compile_bundle
 from repro.core.object_store import ObjectRef, ObjectStore
 from repro.core.patterns import RuleSet
@@ -68,6 +69,7 @@ class MatcherUpdater:
         self._history: list = [(self._current.version_hash(), None, "",
                                 self._current)]
         self._ack_cursor = 0
+        self._maint_cursor = 0
 
     @property
     def current_ruleset(self) -> RuleSet:
@@ -97,13 +99,17 @@ class MatcherUpdater:
                 bundle = compile_bundle(ruleset, self.fields)
                 ref = self.store.put(ENGINE_KEY, bundle.serialize())
                 checksum = bundle.checksum()
-                self.bus.publish(MATCHER_UPDATES, {
+                notification = {
                     "engine_version": bundle.version,
                     "object_ref": ref.to_dict(),
                     "checksum": checksum,
                     "num_rules": bundle.num_rules,
                     "delta": {k: [r.name for r in v] for k, v in delta.items()},
-                })
+                }
+                self.bus.publish(MATCHER_UPDATES, notification)
+                # fan out to the maintenance plane: backfill workers
+                # re-enrich historical (sealed) segments off the ingest path
+                self.bus.publish(SEGMENT_MAINTENANCE, notification)
                 with self._lock:
                     self._current = ruleset
                     self._history.append((bundle.version, ref, checksum,
@@ -126,16 +132,30 @@ class MatcherUpdater:
                       poll_interval: float = 0.02) -> RolloutStatus:
         """Watch the ack topic until every instance confirms `version` (or
         the timeout elapses — the paper's failure-detection window)."""
-        want = set(instances)
+        return self._watch_acks(MATCHER_ACKS, "_ack_cursor", "instance",
+                                version, instances, timeout, poll_interval)
+
+    def await_maintenance(self, version: str, workers, *,
+                          timeout: float = 30.0,
+                          poll_interval: float = 0.02) -> RolloutStatus:
+        """Watch the maintenance-ack topic until every backfill worker
+        confirms it has re-enriched the sealed segments for ``version``."""
+        return self._watch_acks(MAINTENANCE_ACKS, "_maint_cursor", "worker",
+                                version, workers, timeout, poll_interval)
+
+    def _watch_acks(self, topic: str, cursor_attr: str, sender_key: str,
+                    version: str, senders, timeout: float,
+                    poll_interval: float) -> RolloutStatus:
+        want = set(senders)
         acked: set = set()
         failed: dict = {}
         deadline = time.time() + timeout
         while time.time() < deadline:
-            for msg in self.bus.messages(MATCHER_ACKS, self._ack_cursor):
-                self._ack_cursor = msg.offset + 1
+            for msg in self.bus.messages(topic, getattr(self, cursor_attr)):
+                setattr(self, cursor_attr, msg.offset + 1)
                 if msg.value.get("engine_version") != version:
                     continue
-                inst = msg.value["instance"]
+                inst = msg.value[sender_key]
                 if msg.value.get("ok"):
                     acked.add(inst)
                     failed.pop(inst, None)
@@ -168,11 +188,13 @@ class MatcherUpdater:
             self._current = ruleset
         handle = UpdateHandle(version=version,
                               delta={"added": [], "removed": [], "changed": []})
-        self.bus.publish(MATCHER_UPDATES, {
+        notification = {
             "engine_version": version, "object_ref": ref.to_dict(),
             "checksum": checksum, "num_rules": ruleset.num_rules,
             "delta": "rollback",
-        })
+        }
+        self.bus.publish(MATCHER_UPDATES, notification)
+        self.bus.publish(SEGMENT_MAINTENANCE, notification)
         handle.ref, handle.checksum = ref, checksum
         handle._done.set()
         return handle

@@ -57,6 +57,11 @@ class IngestPipeline:
         self.generator = generator
         self.store = store
         self.processor = processor
+        if processor is not None and store.version_rules is None:
+            # share the processor's live version->rules registry so seals
+            # stamp rule-aware coverage metadata (``rules_known``) that the
+            # mapper and the maintenance plane consume
+            store.version_rules = processor.version_rules
         self.times = StageTimes()
 
     def run(self, *, batch_size: int = 4096, limit: int = None,

@@ -13,6 +13,8 @@ import time
 import numpy as np
 
 from repro.core.control_plane import ControlBus
+from repro.core.maintenance import (BackfillWorker, Compactor,
+                                    MaintenancePolicy, MaintenanceScheduler)
 from repro.core.matcher import compile_bundle
 from repro.core.object_store import ObjectStore
 from repro.core.patterns import Rule, RuleSet
@@ -48,12 +50,24 @@ def main(argv=None) -> int:
     ap.add_argument("--segment-size", type=int, default=50_000)
     ap.add_argument("--batch-size", type=int, default=4096)
     ap.add_argument("--fields", type=int, default=2)
+    ap.add_argument("--maintenance", action="store_true",
+                    help="run the segment maintenance plane after ingest: "
+                         "hold back one rule, activate it late, backfill "
+                         "sealed segments (plus a compaction pass)")
     args = ap.parse_args(argv)
 
     spec = WorkloadSpec(num_records=args.records,
                         num_content_fields=args.fields)
     gen = LogGenerator(spec)
-    ruleset = synth_ruleset(spec, args.rules)
+    full_ruleset = synth_ruleset(spec, args.rules)
+    late_rule = None
+    if args.maintenance:
+        # hold one planted rule back so historical segments need backfill
+        late_rule = next(r for r in full_ruleset.rules
+                         if r.rule_id == len(spec.planted) - 1)
+        ruleset = full_ruleset.without_ids([late_rule.rule_id])
+    else:
+        ruleset = full_ruleset
     t0 = time.perf_counter()
     bundle = compile_bundle(ruleset, spec.content_fields)
     print(f"compiled {ruleset.num_rules} rules in "
@@ -86,6 +100,50 @@ def main(argv=None) -> int:
     print(f"query[{term.term}] path={res.path} count={res.count} "
           f"(truth {truth}) in {res.latency_s * 1e3:.2f} ms")
     assert res.count == truth
+
+    if args.maintenance:
+        # late rule activation: historical segments fall back until the
+        # maintenance plane re-enriches them
+        planted = spec.planted[late_rule.rule_id]
+        q = Query(terms=((planted.fieldname, planted.term),), mode="count")
+        # the invariant is store-level: fluxsieve == full scan over what was
+        # ingested.  (In filter mode records matching ONLY the late rule were
+        # dropped before it existed — backfill cannot resurrect them, so the
+        # generator's ground truth is not the reference.)
+        late_truth = qe.execute(q, path="full_scan").count
+        if args.mode == "enrich":
+            assert late_truth == gen.true_count(planted)
+        handle = updater.submit(full_ruleset, asynchronous=False)
+        assert handle.published, handle.error
+        proc.poll_updates()
+        mapper.notify(full_ruleset, version_id=proc.active_version_id)
+        r_pre = qe.execute(q, path="fluxsieve")
+        print(f"maintenance: late rule {late_rule.name!r} pre-backfill "
+              f"count={r_pre.count} (truth {late_truth}) "
+              f"fallback_segments={r_pre.segments_fallback} "
+              f"{r_pre.latency_s * 1e3:.2f} ms")
+        scheduler = MaintenanceScheduler(
+            profiler, MaintenancePolicy(max_records_per_cycle=args.segment_size))
+        worker = BackfillWorker(store, bus, ostore, scheduler=scheduler,
+                                backend=args.backend)
+        rep = worker.run_until_converged()
+        print(f"maintenance: backfilled {rep.segments_backfilled} segments "
+              f"({rep.records} records, {rep.bytes_rewritten / 1e6:.1f} MB) "
+              f"in {rep.seconds:.2f}s; acked={rep.acked}")
+        status = updater.await_maintenance(rep.version, [worker.worker_id])
+        r_post = qe.execute(q, path="fluxsieve")
+        print(f"maintenance: post-backfill count={r_post.count} "
+              f"fallback_segments={r_post.segments_fallback} "
+              f"{r_post.latency_s * 1e3:.2f} ms "
+              f"(rollout complete={status.complete})")
+        assert r_post.count == r_pre.count == late_truth
+        assert r_post.segments_fallback == 0
+        crep = Compactor(store).run_cycle()
+        print(f"maintenance: compaction merged {crep.segments_in} -> "
+              f"{crep.segments_out} segments "
+              f"({len(store.segments)} total now)")
+        r_c = qe.execute(q)
+        assert r_c.count == late_truth
     return 0
 
 

@@ -1,5 +1,6 @@
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep; suite must collect without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core import enrichment as E

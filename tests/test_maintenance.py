@@ -1,0 +1,524 @@
+"""Maintenance-plane tests: retroactive re-enrichment (backfill), compaction,
+rule-aware coverage, the scheduler's heat/budget policy, and the rollout edge
+cases (rollback to the initial version, rule removal, mixed-coverage stores).
+
+The invariant under test throughout: a query's result set is byte-identical
+whether a segment is served via backfilled bitmap, postings, metadata counts,
+or full-scan fallback — before, during, and after maintenance."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.control_plane import ControlBus, SEGMENT_MAINTENANCE
+from repro.core.maintenance import (BackfillWorker, Compactor,
+                                    MaintenancePolicy, MaintenanceScheduler)
+from repro.core.matcher import compile_bundle
+from repro.core.object_store import ObjectStore
+from repro.core.patterns import Rule, RuleSet
+from repro.core.query.engine import Query, QueryEngine
+from repro.core.query.mapper import QueryMapper
+from repro.core.query.profiler import QueryProfiler
+from repro.core.query.store import SegmentStore
+from repro.core.records import RecordBatch, decode_texts, encode_texts
+from repro.core.stream_processor import StreamProcessor
+from repro.core.updater import MatcherUpdater
+from repro.data.generator import LogGenerator, WorkloadSpec
+from repro.data.pipeline import IngestPipeline
+
+ALL_PATHS = ("full_scan", "text_index", "fluxsieve")
+
+
+def make_world(tmp_path, *, num_records=6000, segment_size=1500, seed=13,
+               hold_back=0):
+    """Ingest a planted workload with rule ``hold_back`` NOT yet active —
+    the late rule the maintenance plane must backfill."""
+    spec = WorkloadSpec(num_records=num_records, ultra_rate=1e-3,
+                        high_rate=1e-2, seed=seed, text_width=256)
+    gen = LogGenerator(spec)
+    full = RuleSet(tuple(Rule(i, t.term, t.term, fields=(t.fieldname,))
+                         for i, t in enumerate(spec.planted)))
+    initial = full.without_ids([hold_back])
+    bus, ostore = ControlBus(), ObjectStore()
+    proc = StreamProcessor(compile_bundle(initial, spec.content_fields),
+                           bus=bus, store=ostore)
+    store = SegmentStore(segment_size=segment_size, root=tmp_path,
+                         index_fields=spec.content_fields)
+    updater = MatcherUpdater(ostore, bus, spec.content_fields,
+                             initial=initial)
+    IngestPipeline(gen, store, proc).run(batch_size=1000)
+    mapper = QueryMapper(initial, version_id=0)
+    profiler = QueryProfiler(hot_count=2, hot_seconds=1e-6)
+    engine = QueryEngine(store, mapper=mapper, profiler=profiler)
+    return dict(spec=spec, gen=gen, full=full, initial=initial, bus=bus,
+                ostore=ostore, proc=proc, store=store, updater=updater,
+                mapper=mapper, profiler=profiler, engine=engine,
+                late=spec.planted[hold_back])
+
+
+def activate_late_rule(w):
+    """Roll the full ruleset out to the stream plane + mapper (the late rule
+    becomes active, historical segments still predate it)."""
+    h = w["updater"].submit(w["full"], asynchronous=False)
+    assert h.published, h.error
+    w["proc"].poll_updates()
+    w["mapper"].notify(w["full"], version_id=w["proc"].active_version_id)
+    return h
+
+
+def assert_paths_agree(engine, q, expect=None):
+    counts = {p: engine.execute(q, path=p).count for p in ALL_PATHS}
+    assert len(set(counts.values())) == 1, counts
+    if expect is not None:
+        assert counts["fluxsieve"] == expect, counts
+    return counts["fluxsieve"]
+
+
+# ---------------------------------------------------------------------------
+# Backfill
+# ---------------------------------------------------------------------------
+
+def test_backfill_late_rule_end_to_end(tmp_path):
+    w = make_world(tmp_path)
+    late = w["late"]
+    truth = w["gen"].true_count(late)
+    assert truth > 0
+    q = Query(terms=((late.fieldname, late.term),), mode="count")
+    activate_late_rule(w)
+
+    # pre-backfill: correct via consistency fallback on every segment
+    r_pre = w["engine"].execute(q, path="fluxsieve")
+    assert r_pre.count == truth
+    assert r_pre.segments_fallback == len(w["store"].segments)
+
+    worker = BackfillWorker(w["store"], w["bus"], w["ostore"],
+                            scheduler=MaintenanceScheduler(w["profiler"]))
+    rep = worker.run_until_converged()
+    assert rep.segments_backfilled == len(w["store"].segments)
+    assert rep.pending_after == 0 and rep.acked
+
+    # post-backfill: served from enrichment, zero fallback, same bytes
+    r_post = w["engine"].execute(q, path="fluxsieve")
+    assert r_post.count == truth
+    assert r_post.segments_fallback == 0
+    assert_paths_agree(w["engine"], q, expect=truth)
+
+    # copy mode returns the same physical records
+    qc = Query(terms=((late.fieldname, late.term),), mode="copy")
+    recs = {p: w["engine"].execute(qc, path=p).records for p in ALL_PATHS}
+    texts = {p: sorted(decode_texts(r.columns[late.fieldname]))
+             for p, r in recs.items()}
+    assert texts["fluxsieve"] == texts["full_scan"] == texts["text_index"]
+
+    # ack flow: updater sees the maintenance rollout as complete
+    status = w["updater"].await_maintenance(rep.version,
+                                            [worker.worker_id], timeout=2)
+    assert status.complete
+
+
+def test_backfill_survives_spill_reload(tmp_path):
+    """Backfilled artifacts are durable: a cold store reloaded from disk
+    serves the late rule from enrichment with no fallback."""
+    w = make_world(tmp_path)
+    late = w["late"]
+    truth = w["gen"].true_count(late)
+    activate_late_rule(w)
+    BackfillWorker(w["store"], w["bus"], w["ostore"]).run_until_converged()
+
+    reloaded = SegmentStore.load(tmp_path)
+    engine = QueryEngine(reloaded, mapper=w["mapper"])
+    q = Query(terms=((late.fieldname, late.term),), mode="count")
+    r = engine.execute(q, path="fluxsieve", cold=True)
+    assert r.count == truth and r.segments_fallback == 0
+
+
+def test_mixed_store_partial_backfill(tmp_path):
+    """Budgeted cycle: some segments backfilled, the rest on fallback —
+    every path still returns identical counts (the acceptance invariant)."""
+    w = make_world(tmp_path)
+    late = w["late"]
+    truth = w["gen"].true_count(late)
+    q = Query(terms=((late.fieldname, late.term),), mode="count")
+    activate_late_rule(w)
+
+    sched = MaintenanceScheduler(
+        w["profiler"], MaintenancePolicy(max_segments_per_cycle=1))
+    worker = BackfillWorker(w["store"], w["bus"], w["ostore"],
+                            scheduler=sched)
+    rep = worker.run_cycle()
+    assert rep.segments_backfilled == 1
+    r = w["engine"].execute(q, path="fluxsieve")
+    assert 0 < r.segments_fallback < len(w["store"].segments)
+    assert_paths_agree(w["engine"], q, expect=truth)
+
+
+def test_backfill_concurrent_with_ingest_and_queries(tmp_path):
+    """Acceptance: ingest + BackfillWorker.run_cycle() + queries interleave
+    with no pauses; fluxsieve and full_scan agree at every step."""
+    w = make_world(tmp_path, num_records=6000, segment_size=800)
+    late = w["late"]
+    q = Query(terms=((late.fieldname, late.term),), mode="count")
+    activate_late_rule(w)
+    worker = BackfillWorker(
+        w["store"], w["bus"], w["ostore"],
+        scheduler=MaintenanceScheduler(
+            w["profiler"], MaintenancePolicy(max_segments_per_cycle=2)))
+
+    gen2 = LogGenerator(WorkloadSpec(num_records=4000, ultra_rate=1e-3,
+                                     high_rate=1e-2, seed=99, text_width=256))
+    start = 0
+    while start < 4000:
+        batch = gen2.batch(start, 500)
+        w["store"].append(w["proc"].process(batch))   # ingest continues
+        worker.run_cycle()                            # maintenance continues
+        # queries stay consistent at every interleaving point
+        c_flux = w["engine"].execute(q, path="fluxsieve").count
+        c_scan = w["engine"].execute(q, path="full_scan").count
+        assert c_flux == c_scan, (start, c_flux, c_scan)
+        start += 500
+    w["store"].seal()
+    worker.run_until_converged()
+    r = w["engine"].execute(q, path="fluxsieve")
+    assert r.segments_fallback == 0
+    assert r.count == w["engine"].execute(q, path="full_scan").count
+
+
+def test_backfill_thread_safe_against_queries(tmp_path):
+    """Atomic swap under a real thread race: one thread backfills while the
+    main thread hammers the query; the count never deviates from truth."""
+    w = make_world(tmp_path, num_records=4000, segment_size=500)
+    late = w["late"]
+    truth = w["gen"].true_count(late)
+    q = Query(terms=((late.fieldname, late.term),), mode="count")
+    activate_late_rule(w)
+    worker = BackfillWorker(w["store"], w["bus"], w["ostore"])
+    errors = []
+
+    def drain():
+        try:
+            worker.run_until_converged()
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    t = threading.Thread(target=drain)
+    t.start()
+    while t.is_alive():
+        assert w["engine"].execute(q, path="fluxsieve").count == truth
+    t.join()
+    assert not errors, errors
+    assert w["engine"].execute(q, path="fluxsieve").segments_fallback == 0
+
+
+def test_backfill_handles_corrupt_artifact(tmp_path):
+    """A tampered maintenance artifact is nacked (with the object ref), the
+    worker keeps serving its previous target, and the notification is
+    RETRIED — a transient failure must not permanently drop the newest
+    version (nor regress the worker to an older one)."""
+    w = make_world(tmp_path, num_records=2000, segment_size=1000)
+    h = activate_late_rule(w)
+    key = ("engines/matcher", h.ref.version)
+    data, meta = w["ostore"]._mem[key]
+    w["ostore"]._mem[key] = (data[:-40] + b"x" * 40, meta)
+    worker = BackfillWorker(w["store"], w["bus"], w["ostore"])
+    rep = worker.run_cycle()
+    assert rep.segments_backfilled == 0
+    status = w["updater"].await_maintenance(h.version, [worker.worker_id],
+                                            timeout=0.5)
+    assert worker.worker_id in status.failed
+
+    # the fault heals (e.g. transient object-store corruption): the next
+    # cycle re-fetches the same uncommitted notification and converges
+    w["ostore"]._mem[key] = (data, meta)
+    rep2 = worker.run_until_converged()
+    assert rep2.segments_backfilled == len(w["store"].segments)
+    assert rep2.pending_after == 0 and rep2.acked
+
+
+def test_compactor_isolates_failing_group(tmp_path):
+    """One corrupt spill file fails only its own merge group; other groups
+    still compact, and no orphaned merged dir is left for load() to
+    double-count."""
+    w = make_world(tmp_path, num_records=6000, segment_size=600)
+    victim = w["store"].segments[0]
+    victim.drop_caches()
+    (victim.path / "content1.npy").write_bytes(b"corrupt")
+    comp = Compactor(w["store"], min_records=1000, target_records=3000)
+    rep = comp.run_cycle()
+    assert rep.merges_failed == 1 and rep.errors
+    assert rep.merges >= 1                       # healthy group still merged
+    reloaded = SegmentStore.load(tmp_path)
+    assert sum(s.num_records for s in reloaded.segments) == 6000
+
+
+def test_backfill_isolates_failing_segment(tmp_path):
+    """One corrupt segment must not crash the worker, block the healthy
+    segments, or trigger a premature ack — and queries on the corrupt
+    segment stay correct via the fallback scan path."""
+    w = make_world(tmp_path, num_records=3000, segment_size=1000)
+    activate_late_rule(w)
+    victim = w["store"].segments[1]
+    victim.drop_caches()
+    (victim.path / "rule_bitmap.npy").write_bytes(b"corrupt")
+    worker = BackfillWorker(w["store"], w["bus"], w["ostore"])
+    rep = worker.run_until_converged()
+    assert rep.segments_failed >= 1 and rep.errors
+    assert rep.segments_backfilled == 2          # healthy segments done
+    assert rep.pending_after == 1 and not rep.acked
+    late = w["late"]
+    q = Query(terms=((late.fieldname, late.term),), mode="count")
+    r = w["engine"].execute(q, path="fluxsieve")
+    assert r.count == w["engine"].execute(q, path="full_scan").count
+    assert r.segments_fallback == 1              # corrupt one scans
+
+
+def test_budgeted_backfill_not_starved_by_failing_segment(tmp_path):
+    """Budget of one segment per cycle + the first-scheduled segment
+    permanently failing: the healthy segments must still converge (failed
+    segments are deprioritized, not re-picked every cycle)."""
+    w = make_world(tmp_path, num_records=3000, segment_size=1000)
+    activate_late_rule(w)
+    victim = w["store"].segments[0]              # lowest id schedules first
+    victim.drop_caches()
+    (victim.path / "rule_bitmap.npy").write_bytes(b"corrupt")
+    worker = BackfillWorker(
+        w["store"], w["bus"], w["ostore"],
+        scheduler=MaintenanceScheduler(
+            None, MaintenancePolicy(max_segments_per_cycle=1)))
+    rep = worker.run_until_converged()
+    assert rep.segments_backfilled == 2          # both healthy segments
+    assert rep.pending_after == 1 and not rep.acked
+
+
+def test_rule_count_survives_meta_swap_and_reload(tmp_path):
+    """Metadata-count path after a meta-only apply_update + disk reload:
+    rule_count normalization must never leak int keys into meta.json."""
+    w = make_world(tmp_path, num_records=2000, segment_size=1000)
+    t = w["spec"].planted[1]
+    truth = w["gen"].true_count(t)
+    q = Query(terms=((t.fieldname, t.term),), mode="count")
+    assert w["engine"].execute(q, path="fluxsieve").count == truth
+    for seg in w["store"].segments:
+        seg.rule_count(1)                        # populate the lookup cache
+        seg.apply_update(meta_updates={"touched": True})   # persists meta
+    reloaded = SegmentStore.load(tmp_path)
+    assert sum(s.rule_count(1) for s in reloaded.segments) == truth
+
+
+def test_version_min_fallback_distrusts_changed_pattern(tmp_path):
+    """Legacy segments (no rules_known metadata) use the version-min check;
+    a changed pattern must bump the rule's added-at version so stale bits
+    are never served."""
+    rs1 = RuleSet((Rule(0, "r0", "alpha", fields=("content1",)),))
+    rs2 = RuleSet((Rule(0, "r0", "beta", fields=("content1",)),))
+    proc = StreamProcessor(compile_bundle(rs1, ("content1",)))
+    store = SegmentStore(segment_size=2)         # no version_rules wiring
+    b1 = RecordBatch({"timestamp": np.arange(2, dtype=np.int64),
+                      "content1": encode_texts(["has alpha", "has beta"], 64)})
+    store.append(proc.process(b1))
+    proc.swap(compile_bundle(rs2, ("content1",)))
+    b2 = RecordBatch({"timestamp": np.arange(2, 4, dtype=np.int64),
+                      "content1": encode_texts(["more beta", "none"], 64)})
+    store.append(proc.process(b2))
+    store.seal()
+    assert store.segments[0].meta.get("rules_known") is None
+    mapper = QueryMapper(rs1, version_id=0)
+    mapper.notify(rs2, version_id=1)
+    engine = QueryEngine(store, mapper=mapper)
+    r = engine.execute(Query(terms=(("content1", "beta"),), mode="count"),
+                       path="fluxsieve")
+    assert r.count == 2                          # "has beta" + "more beta"
+    assert r.segments_fallback == 1              # pre-change segment scanned
+
+
+def test_version_min_fallback_removed_then_readded_rule():
+    """A rule removed and later re-added is NEW from the coverage
+    perspective: segments sealed during the removal window have no bits
+    for it and must not look covered."""
+    rs = RuleSet((Rule(0, "r0", "alpha", fields=("content1",)),))
+    mapper = QueryMapper(rs, version_id=1)
+    mapper.notify(RuleSet(()), version_id=2)     # removal window
+    mapper.notify(rs, version_id=3)              # re-add, same id + pattern
+    plan = mapper.map(Query(terms=(("content1", "alpha"),), mode="count"))
+    assert plan.min_version_id == 3
+
+
+# ---------------------------------------------------------------------------
+# Rule-aware coverage: removal, change, rollback
+# ---------------------------------------------------------------------------
+
+def test_coverage_after_rule_removal(tmp_path):
+    """Removing a rule: the mapper stops planning it (queries fall back to
+    scan paths with identical counts), and backfill retires its bits."""
+    w = make_world(tmp_path, num_records=3000, segment_size=1000,
+                   hold_back=0)
+    activate_late_rule(w)
+    BackfillWorker(w["store"], w["bus"], w["ostore"]).run_until_converged()
+
+    victim = w["spec"].planted[1]
+    removed = w["full"].without_ids([1])
+    h = w["updater"].submit(removed, asynchronous=False)
+    assert h.published, h.error
+    w["proc"].poll_updates()
+    w["mapper"].notify(removed, version_id=w["proc"].active_version_id)
+
+    q = Query(terms=((victim.fieldname, victim.term),), mode="count")
+    assert w["mapper"].map(q) is None            # no longer a planned rule
+    r = w["engine"].execute(q, path="auto")
+    assert r.path != "fluxsieve"
+    assert r.count == w["gen"].true_count(victim)
+
+    worker = BackfillWorker(w["store"], w["bus"], w["ostore"])
+    worker.run_until_converged()
+    for seg in w["store"].segments:
+        assert "1" not in seg.meta["rule_idents"]
+
+
+def test_coverage_rule_changed_pattern_not_trusted(tmp_path):
+    """Reusing a rule id with a new pattern must NOT serve stale bits:
+    coverage is by content identity, so pre-change segments fall back until
+    backfill re-matches them."""
+    rs1 = RuleSet((Rule(0, "r0", "alpha", fields=("content1",)),))
+    rs2 = RuleSet((Rule(0, "r0", "beta", fields=("content1",)),))
+    bus, ostore = ControlBus(), ObjectStore()
+    proc = StreamProcessor(compile_bundle(rs1, ("content1",)),
+                           bus=bus, store=ostore)
+    store = SegmentStore(segment_size=2, version_rules=proc.version_rules)
+    updater = MatcherUpdater(ostore, bus, ("content1",), initial=rs1)
+    b1 = RecordBatch({"timestamp": np.arange(2, dtype=np.int64),
+                      "content1": encode_texts(["has alpha", "has beta"], 64)})
+    store.append(proc.process(b1))
+
+    h = updater.submit(rs2, asynchronous=False)
+    assert h.published, h.error
+    proc.poll_updates()
+    b2 = RecordBatch({"timestamp": np.arange(2, 4, dtype=np.int64),
+                      "content1": encode_texts(["more beta", "none"], 64)})
+    store.append(proc.process(b2))
+    store.seal()
+
+    mapper = QueryMapper(rs1, version_id=0)
+    mapper.notify(rs2, version_id=proc.active_version_id)
+    engine = QueryEngine(store, mapper=mapper)
+    q = Query(terms=(("content1", "beta"),), mode="count")
+    r = engine.execute(q, path="fluxsieve")
+    assert r.count == 2                          # stale bits NOT trusted
+    assert r.segments_fallback == 1              # pre-change segment scanned
+
+    BackfillWorker(store, bus, ostore).run_until_converged()
+    r2 = engine.execute(q, path="fluxsieve")
+    assert r2.count == 2 and r2.segments_fallback == 0
+
+
+def test_rollback_to_initial_version(tmp_path):
+    """Rolling back to the initial (artifact-less) version recompiles it,
+    redistributes it, and the maintenance plane converges segments back to
+    the initial coverage."""
+    w = make_world(tmp_path, num_records=2000, segment_size=1000)
+    h = activate_late_rule(w)
+    worker = BackfillWorker(w["store"], w["bus"], w["ostore"])
+    worker.run_until_converged()
+    assert w["updater"].await_maintenance(
+        h.version, [worker.worker_id], timeout=2).complete
+
+    rb = w["updater"].rollback()
+    assert rb.published, rb.error
+    assert w["updater"].current_version == w["initial"].version_hash()
+    assert w["proc"].poll_updates() == 1
+    assert w["proc"].active_version == w["initial"].version_hash()
+    w["mapper"].notify(w["initial"], version_id=w["proc"].active_version_id)
+
+    rep = worker.run_until_converged()
+    for seg in w["store"].segments:
+        assert "0" not in seg.meta["rule_idents"]   # late rule retired again
+    # re-acking a previously acked version: rolling BACK must still produce
+    # a fresh convergence ack, or await_maintenance hangs to timeout
+    assert rep.acked
+    assert w["updater"].await_maintenance(
+        rb.version, [worker.worker_id], timeout=2).complete
+    # the de-activated rule no longer plans; other rules still serve fast
+    other = w["spec"].planted[1]
+    q = Query(terms=((other.fieldname, other.term),), mode="count")
+    r = w["engine"].execute(q, path="fluxsieve")
+    assert r.count == w["gen"].true_count(other)
+    assert r.segments_fallback == 0
+
+
+# ---------------------------------------------------------------------------
+# Compaction
+# ---------------------------------------------------------------------------
+
+def test_compaction_preserves_results(tmp_path):
+    w = make_world(tmp_path, num_records=6000, segment_size=600)
+    late = w["late"]
+    activate_late_rule(w)
+    BackfillWorker(w["store"], w["bus"], w["ostore"]).run_until_converged()
+    n_before = len(w["store"].segments)
+    counts_before = {
+        t.term: assert_paths_agree(
+            w["engine"], Query(terms=((t.fieldname, t.term),), mode="count"))
+        for t in w["spec"].planted[:3]}
+
+    comp = Compactor(w["store"], min_records=1000, target_records=3000)
+    rep = comp.run_cycle()
+    assert rep.merges >= 1 and rep.segments_in > rep.merges
+    assert len(w["store"].segments) < n_before
+    for t in w["spec"].planted[:3]:
+        q = Query(terms=((t.fieldname, t.term),), mode="count")
+        assert_paths_agree(w["engine"], q, expect=counts_before[t.term])
+    # merged segments keep the backfilled (rule-aware) coverage
+    q_late = Query(terms=((late.fieldname, late.term),), mode="count")
+    assert w["engine"].execute(q_late, path="fluxsieve").segments_fallback == 0
+
+    # reload from disk: retired inputs are gone, merged segments load clean
+    reloaded = SegmentStore.load(tmp_path)
+    assert len(reloaded.segments) == len(w["store"].segments)
+    assert sum(s.num_records for s in reloaded.segments) == 6000
+    engine = QueryEngine(reloaded, mapper=w["mapper"])
+    assert engine.execute(q_late, cold=True).count == counts_before[late.term]
+
+
+def test_compaction_skips_right_sized_segments(tmp_path):
+    w = make_world(tmp_path, num_records=4000, segment_size=1000)
+    comp = Compactor(w["store"], min_records=500, target_records=2000)
+    rep = comp.run_cycle()
+    assert rep.merges == 0
+    assert len(w["store"].segments) == 4
+
+
+# ---------------------------------------------------------------------------
+# Scheduler
+# ---------------------------------------------------------------------------
+
+class _FakeSeg:
+    def __init__(self, sid, n=100, b=1000):
+        self.segment_id, self.num_records, self._b = sid, n, b
+
+    def nbytes(self, names=None):
+        return self._b
+
+
+def test_scheduler_orders_by_heat():
+    prof = QueryProfiler()
+    q = Query(terms=(("content1", "x"),), mode="count")
+
+    class R:
+        latency_s = 2.0
+        path = "fluxsieve"
+        fallback_ids = (7, 7, 3)
+    prof.record(q, R())
+    sched = MaintenanceScheduler(prof)
+    segs = [_FakeSeg(1), _FakeSeg(3), _FakeSeg(7)]
+    assert [s.segment_id for s in sched.order(segs)] == [7, 3, 1]
+
+
+def test_scheduler_enforces_budget():
+    sched = MaintenanceScheduler(None, MaintenancePolicy(
+        max_bytes_per_cycle=2500, max_segments_per_cycle=10))
+    segs = [_FakeSeg(i, b=1000) for i in range(5)]
+    assert len(sched.plan_cycle(segs)) == 2
+    # a single oversized segment is still admitted (no starvation)
+    big = [_FakeSeg(0, b=10_000)]
+    assert len(sched.plan_cycle(big)) == 1
+    sched2 = MaintenanceScheduler(None, MaintenancePolicy(
+        max_records_per_cycle=250))
+    assert len(sched2.plan_cycle(segs)) == 2

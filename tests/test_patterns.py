@@ -1,6 +1,7 @@
 import re
 
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep; suite must collect without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.patterns import Rule, RuleSet
