@@ -32,6 +32,12 @@ class Measurement:
                 f"[{self.ci_lo * 1e6:.1f}..{self.ci_hi * 1e6:.1f}]us,"
                 f"n={self.runs},{extra}")
 
+    def to_dict(self) -> dict:
+        """JSON row for trajectory tracking (benchmarks/run.py --json)."""
+        return {"name": self.name, "median_s": self.median_s,
+                "ci_lo_s": self.ci_lo, "ci_hi_s": self.ci_hi,
+                "runs": self.runs, "derived": dict(self.derived)}
+
 
 def bootstrap_median(samples, n_boot: int = 2000, seed: int = 0) -> tuple:
     """-> (median, ci_lo, ci_hi) via percentile bootstrap of the median."""

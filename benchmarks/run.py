@@ -1,22 +1,47 @@
 """Run every benchmark (one per paper table/figure) at CI-friendly sizes.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--quick|--smoke] [--only NAME]
+                                            [--json OUT.json]
 
 CSV schema: name,median_us,[ci_lo..ci_hi]us,n=runs,derived...
+
+``--json`` additionally writes machine-readable results (name, median_s,
+derived metrics, git sha) so per-PR perf deltas are trajectory-trackable
+instead of anecdotal — commit them as ``BENCH_<name>.json``.  ``--smoke``
+runs tiny sizes (seconds total) so CI can catch kernel-path regressions.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import subprocess
 import sys
 import time
 import traceback
+
+
+def _git_sha() -> str:
+    try:
+        sha = subprocess.run(["git", "rev-parse", "HEAD"],
+                             capture_output=True, text=True,
+                             timeout=10).stdout.strip()
+        dirty = subprocess.run(["git", "status", "--porcelain"],
+                               capture_output=True, text=True,
+                               timeout=10).stdout.strip()
+        return f"{sha}-dirty" if dirty else sha
+    except Exception:  # noqa: BLE001 — sha is best-effort metadata
+        return ""
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes (seconds per bench)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI smoke (implies --quick scale)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="OUT.json",
+                    help="also write machine-readable results")
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_backfill, bench_layout_grid, bench_matcher,
@@ -24,14 +49,18 @@ def main(argv=None) -> int:
                             bench_storage, bench_update)
     from benchmarks.common import print_rows
 
+    if args.smoke:
+        overhead_n, matcher_b, storage_n = 5_000, 256, 5_000
+    elif args.quick:
+        overhead_n, matcher_b, storage_n = 20_000, 512, 20_000
+    else:
+        overhead_n, matcher_b, storage_n = 60_000, 2048, 80_000
+
     suite = {
-        "overhead": lambda: bench_overhead.run(
-            num_records=20_000 if args.quick else 60_000),
-        "matcher": lambda: bench_matcher.run(
-            batch=512 if args.quick else 2048),
+        "overhead": lambda: bench_overhead.run(num_records=overhead_n),
+        "matcher": lambda: bench_matcher.run(batch=matcher_b),
         "update": bench_update.run,
-        "storage": lambda: bench_storage.run(
-            num_records=20_000 if args.quick else 80_000),
+        "storage": lambda: bench_storage.run(num_records=storage_n),
         "layout_grid": lambda: bench_layout_grid.run(
             num_records=40_000 if args.quick else 100_000,
             runs=3 if args.quick else 5),
@@ -50,18 +79,41 @@ def main(argv=None) -> int:
             segment_size=2_000 if args.quick else 5_000,
             runs=3 if args.quick else 5),
     }
+    if args.only and args.only not in suite:
+        print(f"unknown bench {args.only!r} (available: {', '.join(suite)})",
+              file=sys.stderr)
+        return 1
+    if args.smoke:
+        # CI smoke: the kernel-path benches must run to completion so enrich
+        # hot-path regressions fail the build, not only the nightly eyeball
+        smoke_names = ("overhead", "matcher")
+        if args.only and args.only not in smoke_names:
+            print(f"bench {args.only!r} is excluded by --smoke "
+                  f"(smoke runs: {', '.join(smoke_names)})", file=sys.stderr)
+            return 1
+        suite = {k: suite[k] for k in smoke_names}
     failures = 0
+    results = {}
     for name, fn in suite.items():
         if args.only and name != args.only:
             continue
         print(f"# === {name} ===", flush=True)
         t0 = time.time()
         try:
-            print_rows(fn())
+            rows = fn()
+            print_rows(rows)
+            results[name] = [m.to_dict() for m in rows]
         except Exception:
             failures += 1
             traceback.print_exc()
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if args.json:
+        doc = {"git_sha": _git_sha(),
+               "argv": [a for a in (argv or sys.argv[1:])],
+               "benches": results}
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        print(f"# wrote {args.json}", flush=True)
     return 1 if failures else 0
 
 

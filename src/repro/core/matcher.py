@@ -14,6 +14,13 @@ An ``EngineBundle`` groups one engine per record text field (paper §6.1 runs
 it is the serializable artifact the Updater ships through the object store.
 Because table shapes are bucketed (automaton.py), swapping a new bundle into
 a running matcher re-uses every jit cache entry — the hot swap is O(bytes).
+
+``FusedMatcher`` is the bundle-level fused dispatcher the enrich hot path
+uses: all matched text columns of a batch go to the device in ONE dispatch,
+the per-field bitmaps are OR-reduced and the any-match mask computed on
+device, and the pair comes back in a single D2H transfer
+(``MatchResult.to_host``).  Per-field ``MatchEngine.match`` remains for
+tests, the selective/shift_or fallbacks, and the backfill plane.
 """
 from __future__ import annotations
 
@@ -22,16 +29,63 @@ import io
 import json
 from dataclasses import dataclass
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.automaton import CompiledEngine, compile_rules, words_for_rules
 from repro.core.patterns import RuleSet
-from repro.kernels.dfa_scan.ops import (dfa_scan, dfa_scan_selective,
-                                        pack_delta_any)
+from repro.kernels.dfa_scan.ops import (dfa_scan, dfa_scan_fused,
+                                        dfa_scan_selective, pack_delta_any)
 from repro.kernels.shift_or import ops as shift_or_ops
 
 BACKENDS = ("dfa", "dfa_ref", "dfa_selective", "shift_or", "parallel")
+# backends whose whole multi-field match can run as one fused device dispatch
+FUSED_BACKENDS = ("dfa", "dfa_ref", "parallel")
+
+# -- device->host accounting -------------------------------------------------
+# The enrich path must perform exactly ONE D2H transfer per batch; tests
+# assert this via the counter below.
+_TRANSFER_COUNT = 0
+
+
+def transfer_count() -> int:
+    return _TRANSFER_COUNT
+
+
+def _to_host(x):
+    global _TRANSFER_COUNT
+    _TRANSFER_COUNT += 1
+    return jax.device_get(x)
+
+
+class MatchResult:
+    """Deferred match result: packed bitmap + any-match mask.
+
+    Both stay on device (JAX async dispatch keeps computing behind it) until
+    ``to_host`` materializes them in a single counted D2H transfer.  Results
+    produced by host-side backends (dfa_selective) carry numpy arrays and
+    transfer nothing."""
+
+    __slots__ = ("_bm", "_mask", "_host")
+
+    def __init__(self, bm, mask):
+        self._bm = bm
+        self._mask = mask
+        self._host = isinstance(bm, np.ndarray)
+
+    @property
+    def on_device(self) -> bool:
+        """True while the result still lives on device (work may be in
+        flight); host-backend results were never dispatched."""
+        return not self._host
+
+    def to_host(self):
+        """-> (bitmap (N, W) uint32, any_match (N,) bool), numpy."""
+        if not self._host:
+            self._bm, self._mask = _to_host((self._bm, self._mask))
+            self._host = True
+        return self._bm, self._mask
 
 
 class MatchEngine:
@@ -39,12 +93,13 @@ class MatchEngine:
 
     def __init__(self, engine: CompiledEngine, *, backend: str = "dfa_ref",
                  ruleset: RuleSet = None, block_n: int = 256,
-                 interpret: bool = True):
+                 interpret: bool = True, confirm_backend: str = "ref"):
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}")
         self.backend = backend
         self.block_n = block_n
         self.interpret = interpret
+        self.confirm_backend = confirm_backend   # dfa_selective pass-2 engine
         self.engine = engine
         self.version = engine.version
         self.num_rules = engine.num_rules
@@ -70,10 +125,13 @@ class MatchEngine:
     def match(self, data) -> jnp.ndarray:
         """data: (N, L) uint8 -> (N, W) uint32 packed rule bitmaps."""
         if self.backend == "dfa_selective":
-            return dfa_scan_selective(np.asarray(data), self.engine.delta,
+            return dfa_scan_selective(data, self.engine.delta,
                                       self.engine.emit,
                                       self.engine.byte_classes,
-                                      delta2=self._delta2)
+                                      delta2=self._delta2,
+                                      backend=self.confirm_backend,
+                                      block_n=self.block_n,
+                                      interpret=self.interpret)
         data = jnp.asarray(data)
         if self.backend == "shift_or":
             bm = shift_or_ops.shift_or_match(data, self._shift_or,
@@ -162,9 +220,124 @@ def compile_bundle(ruleset: RuleSet, fields) -> EngineBundle:
 
 
 def build_matchers(bundle: EngineBundle, *, backend: str = "dfa_ref",
-                   block_n: int = 256, interpret: bool = True) -> dict:
+                   block_n: int = 256, interpret: bool = True,
+                   confirm_backend: str = "ref") -> dict:
     """field -> MatchEngine, ready for StreamProcessor hot-swap."""
     rs = bundle.ruleset() if bundle.ruleset_json else None
     return {f: MatchEngine(bundle.engines[f], backend=backend, ruleset=rs,
-                           block_n=block_n, interpret=interpret)
+                           block_n=block_n, interpret=interpret,
+                           confirm_backend=confirm_backend)
             for f in bundle.fields}
+
+
+def match_pairs(engine_fields, text_fields):
+    """(engine_field, column) routing shared by the fused plan and the
+    per-field fallback: a '*' engine applies to every text column, a named
+    engine only to its own column (and only when the batch carries it)."""
+    for fieldname in engine_fields:
+        if fieldname == "*":
+            for c in text_fields:
+                yield fieldname, c
+        elif fieldname in text_fields:
+            yield fieldname, fieldname
+
+
+@dataclass(frozen=True)
+class _FusedPlan:
+    """Stacked device tables for one batch schema.  Engines shared across
+    columns (a '*' engine) are stored once; ``eng_idx`` maps each stacked
+    field slot to its table row."""
+    cols: tuple              # column names, one per stacked field slot
+    eng_idx: tuple           # per-slot row into the unique-engine tables
+    luts: object             # (E, 256) int32
+    deltas: object           # (E, S, C) int32
+    emits: object            # (E, S, W) uint32
+
+
+class FusedMatcher:
+    """EngineBundle-level fused dispatcher: one device dispatch per batch.
+
+    All matched text columns are stacked into one ``(F, N, L)`` input; the
+    per-field tables are padded to a common shape bucket and stacked once
+    per batch schema (cached per text-field tuple, so hot-swapping a new
+    bundle re-uses every jit cache entry exactly like the per-field path).
+    The scan, the OR across fields, and the any-match mask all run on
+    device; ``MatchResult.to_host`` is the single D2H.
+    """
+
+    def __init__(self, bundle: EngineBundle, *, backend: str = "dfa_ref",
+                 block_n: int = 256, interpret: bool = True):
+        if backend not in FUSED_BACKENDS:
+            raise ValueError(f"backend {backend!r} has no fused dispatch "
+                             f"(supported: {FUSED_BACKENDS})")
+        self.bundle = bundle
+        self.backend = backend
+        self.block_n = block_n
+        self.interpret = interpret
+        self.words = bundle.words
+        self._kernel = {"dfa": "pallas", "dfa_ref": "ref",
+                        "parallel": "parallel"}[backend]
+        self._plans: dict = {}
+
+    def _plan(self, text_fields: tuple) -> _FusedPlan:
+        plan = self._plans.get(text_fields)
+        if plan is None:
+            plan = self._build_plan(text_fields)
+            self._plans[text_fields] = plan
+        return plan
+
+    def _build_plan(self, text_fields: tuple) -> _FusedPlan:
+        pairs = [(c, self.bundle.engines[f])         # (column, CompiledEngine)
+                 for f, c in match_pairs(self.bundle.fields, text_fields)]
+        if not pairs:
+            return _FusedPlan(cols=(), eng_idx=(), luts=None, deltas=None,
+                              emits=None)
+        uniq, eng_idx, slot = [], [], {}
+        for _, e in pairs:
+            if id(e) not in slot:
+                slot[id(e)] = len(uniq)
+                uniq.append(e)
+            eng_idx.append(slot[id(e)])
+        E = len(uniq)
+        S = max(e.bucket for e in uniq)
+        C = max(e.n_classes for e in uniq)
+        W = self.words
+        luts = np.zeros((E, 256), np.int32)
+        deltas = np.zeros((E, S, C), np.int32)      # padded rows unreachable
+        emits = np.zeros((E, S, W), np.uint32)
+        for i, e in enumerate(uniq):
+            luts[i] = e.byte_classes
+            deltas[i, :e.bucket, :e.n_classes] = e.delta
+            emits[i, :e.bucket] = e.emit
+        eng_idx = tuple(eng_idx)
+        if self._kernel == "pallas" and eng_idx != tuple(range(E)):
+            # pallas on jax 0.4.x can't route the slot->row indirection
+            # through BlockSpec index maps; expand shared tables ONCE here
+            # (host-side, per plan) rather than per dispatch on device
+            idx = list(eng_idx)
+            luts, deltas, emits = luts[idx], deltas[idx], emits[idx]
+            eng_idx = tuple(range(len(idx)))
+        return _FusedPlan(cols=tuple(c for c, _ in pairs),
+                          eng_idx=eng_idx,
+                          luts=jnp.asarray(luts), deltas=jnp.asarray(deltas),
+                          emits=jnp.asarray(emits))
+
+    def match_batch(self, columns: dict, text_fields, n: int) -> MatchResult:
+        """columns: name -> (N, L) uint8; -> deferred (bitmap, mask)."""
+        plan = self._plan(tuple(text_fields))
+        if not plan.cols:
+            return MatchResult(np.zeros((n, self.words), np.uint32),
+                               np.zeros(n, bool))
+        L = max(columns[c].shape[1] for c in plan.cols)
+        mats = []
+        for c in plan.cols:
+            m = columns[c]
+            if m.shape[1] < L:
+                m = np.pad(np.asarray(m), ((0, 0), (0, L - m.shape[1])))
+            mats.append(np.asarray(m))
+        data = np.stack(mats)                       # (F, N, L): one H2D
+        bm, mask = dfa_scan_fused(data, plan.luts, plan.deltas, plan.emits,
+                                  eng_idx=plan.eng_idx,
+                                  backend=self._kernel, block_n=self.block_n,
+                                  interpret=self.interpret)
+        return MatchResult(bm, mask)

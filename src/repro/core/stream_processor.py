@@ -15,9 +15,18 @@ The active engine lives behind a single reference read once per batch
 (`_active`), so in-flight batches finish against the engine they started
 with — the paper's no-downtime swap guarantee.  Swap never retraces jit
 caches because table shapes are bucketed (automaton.py).
+
+The data topology is split into ``process_async`` (ONE fused device
+dispatch for all text fields of a batch — see matcher.FusedMatcher) and
+``finalize`` (single D2H transfer + column attach + optional filter), so a
+pipelined caller can keep the device matching batch *k* while the host
+stores batch *k-1* (data/pipeline.py).  ``process`` is the sequential
+composition of the two.
 """
 from __future__ import annotations
 
+import functools
+import operator
 import threading
 import time
 from dataclasses import dataclass, field
@@ -27,7 +36,8 @@ import numpy as np
 from repro.core import enrichment
 from repro.core.control_plane import (ControlBus, MATCHER_ACKS,
                                       MATCHER_UPDATES)
-from repro.core.matcher import EngineBundle, MatchEngine, build_matchers
+from repro.core.matcher import (FUSED_BACKENDS, EngineBundle, FusedMatcher,
+                                MatchResult, build_matchers, match_pairs)
 from repro.core.object_store import ObjectRef, ObjectStore
 from repro.core.patterns import ruleset_idents
 from repro.core.records import RecordBatch
@@ -40,8 +50,19 @@ ENGINE_VERSION_COLUMN = "engine_version_id"
 class _Active:
     bundle: EngineBundle
     matchers: dict          # field -> MatchEngine
+    fused: object           # FusedMatcher, or None for host-path backends
     version_id: int         # monotonically increasing local id
     activated_at: float
+
+
+@dataclass
+class PendingBatch:
+    """An in-flight enriched batch: dispatched, result possibly still on
+    device.  ``StreamProcessor.finalize`` turns it into a RecordBatch."""
+    batch: RecordBatch
+    result: MatchResult
+    version_id: int
+    n: int
 
 
 @dataclass
@@ -64,7 +85,8 @@ class StreamProcessor:
     def __init__(self, bundle: EngineBundle, *, instance_id: str = "proc-0",
                  mode: str = "enrich", backend: str = "dfa_ref",
                  bus: ControlBus = None, store: ObjectStore = None,
-                 block_n: int = 256, interpret: bool = True):
+                 block_n: int = 256, interpret: bool = True,
+                 confirm_backend: str = "ref"):
         if mode not in ("enrich", "filter"):
             raise ValueError(mode)
         self.instance_id = instance_id
@@ -72,6 +94,7 @@ class StreamProcessor:
         self.backend = backend
         self.block_n = block_n
         self.interpret = interpret
+        self.confirm_backend = confirm_backend   # dfa_selective pass 2
         self.bus = bus
         self.store = store
         self.stats = ProcessorStats()
@@ -87,35 +110,64 @@ class StreamProcessor:
 
     # -- data topology ---------------------------------------------------
     def process(self, batch: RecordBatch) -> RecordBatch:
-        """Match + enrich (and maybe filter) one batch."""
+        """Match + enrich (and maybe filter) one batch, synchronously."""
+        return self.finalize(self.process_async(batch))
+
+    def process_async(self, batch: RecordBatch) -> PendingBatch:
+        """Dispatch the match for one batch and return without blocking on
+        the device: ONE fused dispatch covering every matched text field
+        (bitmap OR + any-match mask computed on device)."""
         active = self._active                      # single read: swap-safe
         t0 = time.perf_counter()
         n = len(batch)
-        W = active.bundle.words
-        bm = np.zeros((n, W), np.uint32)
-        for fieldname, engine in active.matchers.items():
-            if fieldname == "*":
-                cols = batch.text_fields
-            elif fieldname in batch.columns:
-                cols = (fieldname,)
-            else:
-                continue
-            for c in cols:
-                bm |= np.asarray(engine.match(batch.columns[c]))
-        out = batch.with_column(ENRICH_COLUMN, bm)
+        if active.fused is not None:
+            result = active.fused.match_batch(batch.columns,
+                                              batch.text_fields, n)
+        else:
+            result = self._match_per_field(active, batch)
+        with self._lock:
+            self.stats.match_seconds += time.perf_counter() - t0
+        return PendingBatch(batch=batch, result=result,
+                            version_id=active.version_id, n=n)
+
+    def finalize(self, pending: PendingBatch) -> RecordBatch:
+        """Materialize a pending batch: single D2H transfer, attach the
+        enrichment columns, apply filter mode, account stats."""
+        t0 = time.perf_counter()
+        bm, matched = pending.result.to_host()
+        out = pending.batch.with_column(ENRICH_COLUMN, bm)
         out = out.with_column(
             ENGINE_VERSION_COLUMN,
-            np.full(n, active.version_id, np.int32))
-        matched = enrichment.any_match(bm)
+            np.full(pending.n, pending.version_id, np.int32))
         if self.mode == "filter":
             out = out.select(matched)
         with self._lock:
-            self.stats.records_in += n
+            self.stats.records_in += pending.n
             self.stats.records_out += len(out)
             self.stats.records_matched += int(matched.sum())
             self.stats.batches += 1
             self.stats.match_seconds += time.perf_counter() - t0
         return out
+
+    def _match_per_field(self, active: _Active, batch: RecordBatch):
+        """Fallback for backends without a fused dispatch (dfa_selective,
+        shift_or): per-field engine calls, OR-reduced on device when every
+        engine returns device arrays (one D2H at finalize), on host
+        otherwise."""
+        bms = [active.matchers[f].match(batch.columns[c])
+               for f, c in match_pairs(tuple(active.matchers),
+                                       batch.text_fields)]
+        n, W = len(batch), active.bundle.words
+        if not bms:
+            return MatchResult(np.zeros((n, W), np.uint32),
+                               np.zeros(n, bool))
+        if any(isinstance(b, np.ndarray) for b in bms):
+            bm = np.zeros((n, W), np.uint32)
+            for b in bms:
+                bm |= np.asarray(b)
+            return MatchResult(bm, enrichment.any_match(bm))
+        bm = functools.reduce(operator.or_, bms)
+        return MatchResult(bm, (bm != 0).any(axis=1))
 
     # -- control topology --------------------------------------------------
     def poll_updates(self) -> int:
@@ -181,11 +233,17 @@ class StreamProcessor:
     def _install(self, bundle: EngineBundle, version_id: int) -> None:
         matchers = build_matchers(bundle, backend=self.backend,
                                   block_n=self.block_n,
-                                  interpret=self.interpret)
+                                  interpret=self.interpret,
+                                  confirm_backend=self.confirm_backend)
+        fused = None
+        if self.backend in FUSED_BACKENDS:
+            fused = FusedMatcher(bundle, backend=self.backend,
+                                 block_n=self.block_n,
+                                 interpret=self.interpret)
         idents = (ruleset_idents(bundle.ruleset()) if bundle.ruleset_json
                   else {})
         self.version_rules[version_id] = idents
-        self._active = _Active(bundle=bundle, matchers=matchers,
+        self._active = _Active(bundle=bundle, matchers=matchers, fused=fused,
                                version_id=version_id,
                                activated_at=time.time())
         self.stats.versions[bundle.version] = self._active.activated_at

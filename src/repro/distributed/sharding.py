@@ -64,6 +64,31 @@ class ShardingRules:
 DEFAULT_RULES = ShardingRules()
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=False):
+    """``jax.shard_map`` across jax versions.
+
+    Newer jax exposes it top-level with ``axis_names``/``check_vma``; 0.4.x
+    ships ``jax.experimental.shard_map.shard_map`` with ``check_rep`` and an
+    inverted ``auto`` set (mesh axes NOT manual).  All in-repo manual
+    collectives go through this shim so the models/train code runs on both.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=check_vma)
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - set(axis_names)
+        if auto:
+            kw["auto"] = auto
+    return _shard_map(f, **kw)
+
+
 def mesh_axis_names(mesh: Mesh) -> tuple:
     return tuple(mesh.axis_names)
 

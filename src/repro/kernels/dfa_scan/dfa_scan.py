@@ -1,18 +1,27 @@
-"""Pallas TPU kernel: batched Aho-Corasick DFA scan.
+"""Pallas TPU kernel: batched Aho-Corasick DFA scan, fused across fields.
 
-Layout: the grid tiles the record batch; each grid step holds a
-(BLOCK_N, L) tile of byte-class ids plus the full DFA tables in VMEM and
-advances BLOCK_N automata in lock-step with one vectorized table gather per
-byte position (Mosaic `dynamic_gather` is the target lowering for the
-per-lane `jnp.take`).
+Layout: the grid is ``(N // block_n, F)`` — the major axis tiles the record
+batch, the minor (fastest-varying) **field axis** sweeps the per-field
+automata while the SAME output block stays resident in VMEM, OR-accumulating
+each field's rule bitmap.  F text fields therefore cost one kernel launch
+and one (block_n, W) output write per record tile (the fused multi-field
+dispatch's device half; matcher.FusedMatcher is the host half).
+
+The byte->class LUT is folded into the kernel: the input tile is the RAW
+``(block_n, L) uint8`` bytes — 4x smaller than the int32 class tile the
+previous revision streamed through HBM — and each field's 256-entry LUT
+rides along in VMEM.  Transition tables are int16 whenever the padded
+automaton fits (S < 32768), halving the delta block.
 
 VMEM budget per grid step (defaults, 1000-rule engine):
-    classes tile 256 x 512 x 4 B   = 0.5 MiB
-    delta       4096 x 64 x 4 B    = 1.0 MiB   (alphabet-compressed)
-    emit        4096 x 32 x 4 B    = 0.5 MiB
-    state/bitmap accumulators      < 0.1 MiB
-well under the ~16 MiB v5e VMEM.  The byte->class LUT is applied outside
-(it is elementwise and fuses into the surrounding program).
+    byte tile   256 x 512 x 1 B  = 0.125 MiB  (uint8; LUT applied in-kernel)
+    lut         256 x 4 B        = 1 KiB
+    delta       4096 x 64 x 2 B  = 0.5 MiB    (alphabet-compressed, int16)
+    emit        4096 x 32 x 4 B  = 0.5 MiB
+    state/bitmap accumulators    < 0.1 MiB
+well under the ~16 MiB v5e VMEM.  Each grid step advances block_n automata
+in lock-step with one vectorized table gather per byte position (Mosaic
+`dynamic_gather` is the target lowering for the per-lane `jnp.take`).
 """
 from __future__ import annotations
 
@@ -25,45 +34,81 @@ from jax.experimental import pallas as pl
 BLOCK_N = 256
 
 
-def _kernel(cls_ref, delta_ref, emit_ref, out_ref):
-    blk_n, L = cls_ref.shape
-    S, C = delta_ref.shape
-    W = emit_ref.shape[1]
-    delta_flat = delta_ref[...].reshape(S * C)
-    emit = emit_ref[...]
+def _kernel(data_ref, lut_ref, delta_ref, emit_ref, out_ref):
+    _, blk_n, L = data_ref.shape
+    _, S, C = delta_ref.shape
+    W = emit_ref.shape[2]
+    f = pl.program_id(1)
+    data = data_ref[0]                                   # (blk_n, L) uint8
+    lut = lut_ref[0]                                     # (256,) int32
+    delta_flat = delta_ref[0].reshape(S * C)             # int16 when S < 2^15
+    emit = emit_ref[0]                                   # (S, W) uint32
 
     def body(i, carry):
         state, bm = carry
-        col = cls_ref[:, i]
+        col = jnp.take(lut, data[:, i].astype(jnp.int32))       # LUT gather
         state = jnp.take(delta_flat, state * C + col)           # per-lane gather
+        state = state.astype(jnp.int32)
         bm = bm | jnp.take(emit, state, axis=0)                 # row gather
         return state, bm
 
     state0 = jnp.zeros((blk_n,), jnp.int32)
     bm0 = jnp.zeros((blk_n, W), jnp.uint32)
     _, bm = jax.lax.fori_loop(0, L, body, (state0, bm0))
-    out_ref[...] = bm
+
+    # OR-accumulate across the field axis: the out block is revisited on
+    # consecutive grid steps (f is the minor grid axis), so it stays in VMEM.
+    @pl.when(f == 0)
+    def _():
+        out_ref[...] = bm
+
+    @pl.when(f != 0)
+    def _():
+        out_ref[...] = out_ref[...] | bm
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def dfa_scan_kernel(cls_ids, delta, emit, *, block_n: int = BLOCK_N,
-                    interpret: bool = True):
-    """cls_ids: (N, L) int32 byte-class ids (N % block_n == 0);
-    delta: (S, C) int32; emit: (S, W) uint32 -> (N, W) uint32."""
-    N, L = cls_ids.shape
-    S, C = delta.shape
-    W = emit.shape[1]
+@functools.partial(jax.jit,
+                   static_argnames=("eng_idx", "block_n", "interpret"))
+def dfa_scan_fused_kernel(data, luts, deltas, emits, *, eng_idx: tuple,
+                          block_n: int = BLOCK_N, interpret: bool = True):
+    """data: (F, N, L) uint8 raw bytes (N % block_n == 0);
+    luts: (E, 256) int32 byte->class; deltas: (E, S, C) int; emits:
+    (E, S, W) uint32; eng_idx: length-F tuple mapping each field slot to
+    its table row.  -> (N, W) uint32, the OR of all per-field bitmaps.
+
+    Note: jax 0.4.x pallas rejects constants in BlockSpec index maps, so a
+    non-identity eng_idx cannot be routed through the specs — it is
+    expanded to one table row per slot with an on-device gather below.
+    Callers on the hot path should pre-expand host-side instead and pass
+    identity (FusedMatcher._build_plan does), paying the copy once per
+    plan rather than per dispatch."""
+    F, N, L = data.shape
+    _, S, C = deltas.shape
+    W = emits.shape[2]
     assert N % block_n == 0, (N, block_n)
-    grid = (N // block_n,)
+    assert len(eng_idx) == F, (eng_idx, F)
+    if S < 2 ** 15:
+        deltas = deltas.astype(jnp.int16)    # halve the VMEM delta block
+    if tuple(eng_idx) != tuple(range(luts.shape[0])):
+        # Expand unique tables to one row per field slot on device (pallas
+        # on jax 0.4.x rejects constants in index maps, so the slot->row
+        # indirection cannot live in the BlockSpecs; the host still builds
+        # and ships each shared engine's tables only once).
+        eng = jnp.asarray(eng_idx, jnp.int32)
+        luts = jnp.take(luts, eng, axis=0)
+        deltas = jnp.take(deltas, eng, axis=0)
+        emits = jnp.take(emits, eng, axis=0)
+    grid = (N // block_n, F)
     return pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_n, L), lambda i: (i, 0)),
-            pl.BlockSpec((S, C), lambda i: (0, 0)),
-            pl.BlockSpec((S, W), lambda i: (0, 0)),
+            pl.BlockSpec((1, block_n, L), lambda i, f: (f, i, 0)),
+            pl.BlockSpec((1, 256), lambda i, f: (f, 0)),
+            pl.BlockSpec((1, S, C), lambda i, f: (f, 0, 0)),
+            pl.BlockSpec((1, S, W), lambda i, f: (f, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((block_n, W), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((block_n, W), lambda i, f: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((N, W), jnp.uint32),
         interpret=interpret,
-    )(cls_ids, delta, emit)
+    )(data, luts, deltas, emits)

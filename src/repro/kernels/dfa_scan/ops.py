@@ -1,46 +1,109 @@
-"""Jitted wrapper for the DFA-scan kernel: padding, byte-class mapping,
-engine selection, and shape bucketing so hot-swapped engines never retrace.
+"""Jitted wrappers for the DFA-scan kernels: padding, batch-size (N)
+bucketing, backend selection, and retrace accounting so hot-swapped engines
+AND ragged tail batches never retrace.
+
+``dfa_scan`` is the single-field entry (tests, backfill, selective confirm);
+``dfa_scan_fused`` is the multi-field entry used by ``matcher.FusedMatcher``
+— one device dispatch for all fields, per-field bitmaps OR-reduced and the
+any-match mask computed on device, nothing transferred to host.
 """
 from __future__ import annotations
 
+import collections
 import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.dfa_scan.dfa_scan import dfa_scan_kernel, BLOCK_N
-from repro.kernels.dfa_scan.ref import dfa_scan_ref
+from repro.kernels.dfa_scan.dfa_scan import dfa_scan_fused_kernel, BLOCK_N
+from repro.kernels.dfa_scan.ref import dfa_scan_fused_ref
+
+# (fn, backend) -> number of jit traces.  Incremented at TRACE time (a
+# python side effect inside the jitted function), so tests can assert that
+# varying batch sizes after warmup trigger no new retraces.
+TRACE_COUNTS: collections.Counter = collections.Counter()
 
 
 def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
-@functools.partial(jax.jit, static_argnames=("backend", "block_n", "interpret"))
-def _dispatch(data, delta, emit, byte_classes, *, backend: str,
-              block_n: int, interpret: bool):
-    cls = jnp.take(byte_classes, data.astype(jnp.int32))
-    if backend == "ref":
-        return dfa_scan_ref(data, delta, emit, byte_classes)
+def bucket_n(n: int, block_n: int = BLOCK_N) -> int:
+    """Pad a batch size to a power of two at/above ``block_n`` (mirrors the
+    S/C/W table bucketing in automaton.py): variable-size tail batches hit a
+    handful of shape buckets instead of retracing the jit cache per distinct
+    N."""
+    n = max(n, 1)
+    if n <= block_n:
+        return block_n
+    return _round_up(1 << (n - 1).bit_length(), block_n)
+
+
+def _pad_rows(data, n_pad: int):
+    """Zero-pad axis -2 (records) of a host or device array to n_pad."""
+    n = data.shape[-2]
+    if n_pad == n:
+        return data
+    widths = [(0, 0)] * data.ndim
+    widths[-2] = (0, n_pad - n)
+    if isinstance(data, np.ndarray):
+        return np.pad(data, widths)
+    return jnp.pad(data, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("eng_idx", "backend", "block_n",
+                                             "interpret"))
+def _dispatch_fused(data, luts, deltas, emits, *, eng_idx: tuple,
+                    backend: str, block_n: int, interpret: bool):
+    TRACE_COUNTS[("dfa_scan", backend)] += 1
     if backend == "pallas":
-        return dfa_scan_kernel(cls, delta, emit, block_n=block_n,
-                               interpret=interpret)
-    if backend == "parallel":
-        return _parallel_dfa(cls, delta, emit)
-    raise ValueError(backend)
+        bm = dfa_scan_fused_kernel(data, luts, deltas, emits,
+                                   eng_idx=eng_idx, block_n=block_n,
+                                   interpret=interpret)
+        return bm, (bm != 0).any(axis=1)
+    if backend == "ref":
+        bms = dfa_scan_fused_ref(data, luts, deltas, emits, eng_idx=eng_idx)
+    elif backend == "parallel":
+        eng = jnp.asarray(eng_idx, jnp.int32)
+        cls = jnp.take(luts.reshape(-1),
+                       eng[:, None, None] * 256 + data.astype(jnp.int32))
+        bms = jax.vmap(_parallel_dfa)(cls, jnp.take(deltas, eng, axis=0),
+                                      jnp.take(emits, eng, axis=0))
+    else:
+        raise ValueError(backend)
+    bm = bms[0]
+    for f in range(1, bms.shape[0]):                    # static F: unrolled OR
+        bm = bm | bms[f]
+    return bm, (bm != 0).any(axis=1)
+
+
+def dfa_scan_fused(data, luts, deltas, emits, *, eng_idx: tuple = None,
+                   backend: str = "ref", block_n: int = BLOCK_N,
+                   interpret: bool = True):
+    """data: (F, N, L) uint8 (any N); luts: (E, 256) int32; deltas:
+    (E, S, C) int32; emits: (E, S, W) uint32; eng_idx: length-F tuple
+    mapping each field slot to its table row (default identity — engines
+    shared across columns need only one table copy).  Returns the pair
+    ``(bitmap (N, W) uint32, any_match (N,) bool)`` — the OR of all
+    per-field bitmaps — as DEVICE arrays (the caller owns the single D2H)."""
+    F, N = data.shape[0], data.shape[1]
+    if eng_idx is None:
+        eng_idx = tuple(range(F))
+    data = _pad_rows(data, bucket_n(N, block_n))
+    bm, mask = _dispatch_fused(data, luts, deltas, emits,
+                               eng_idx=tuple(eng_idx), backend=backend,
+                               block_n=block_n, interpret=interpret)
+    return bm[:N], mask[:N]
 
 
 def dfa_scan(data, delta, emit, byte_classes, *, backend: str = "ref",
              block_n: int = BLOCK_N, interpret: bool = True):
     """data: (N, L) uint8 (any N) -> (N, W) uint32 rule bitmaps."""
-    N = data.shape[0]
-    n_pad = _round_up(max(N, 1), block_n) if backend == "pallas" else N
-    if n_pad != N:
-        data = jnp.pad(data, ((0, n_pad - N), (0, 0)))
-    out = _dispatch(data, delta, emit, byte_classes, backend=backend,
-                    block_n=block_n, interpret=interpret)
-    return out[:N]
+    bm, _ = dfa_scan_fused(data[None], byte_classes[None], delta[None],
+                           emit[None], backend=backend, block_n=block_n,
+                           interpret=interpret)
+    return bm
 
 
 # ---------------------------------------------------------------------------
@@ -68,6 +131,7 @@ def pack_delta_any(delta, emit):
 @functools.partial(jax.jit)
 def _any_scan(cls, delta2_flat, n_classes):
     """cls: (N, L) int32 class ids -> (N,) bool any-accept flag."""
+    TRACE_COUNTS[("any_scan", "ref")] += 1
     N, L = cls.shape
 
     def body(carry, col):
@@ -81,31 +145,34 @@ def _any_scan(cls, delta2_flat, n_classes):
     return hit
 
 
-def dfa_scan_selective(data, delta, emit, byte_classes, delta2=None):
+def dfa_scan_selective(data, delta, emit, byte_classes, delta2=None, *,
+                       backend: str = "ref", block_n: int = BLOCK_N,
+                       interpret: bool = True):
     """Two-pass matcher: any-accept prefilter + full confirm on matches.
     data: (N, L) uint8 -> (N, W) uint32 (numpy).  Not jittable end-to-end
-    (the confirm subset is data-dependent); pads the subset to a power of
-    two so the confirm path retraces O(log N) times at most."""
+    (the confirm subset is data-dependent); both passes bucket their batch
+    dimension so neither retraces as N varies.  ``backend``/``block_n``/
+    ``interpret`` select the confirm-pass engine (threaded through from the
+    configuring MatchEngine rather than hardcoding the jnp oracle)."""
     import numpy as onp
     if delta2 is None:
         delta2 = pack_delta_any(delta, emit)
+    N = data.shape[0]
+    padded = _pad_rows(data, bucket_n(N, block_n))
     cls = jnp.take(jnp.asarray(byte_classes),
-                   jnp.asarray(data).astype(jnp.int32))
+                   jnp.asarray(padded).astype(jnp.int32))
     n_classes = delta.shape[1]
     hit = onp.asarray(_any_scan(cls, jnp.asarray(delta2).reshape(-1),
-                                n_classes))
-    N = data.shape[0]
+                                n_classes))[:N]
     W = emit.shape[1]
     out = onp.zeros((N, W), onp.uint32)
     idx = onp.flatnonzero(hit)
     if len(idx) == 0:
         return out
-    n_pad = 1 << (len(idx) - 1).bit_length()
-    sub = onp.zeros((n_pad, data.shape[1]), onp.uint8)
-    sub[:len(idx)] = onp.asarray(data)[idx]
-    bm = dfa_scan(jnp.asarray(sub), jnp.asarray(delta), jnp.asarray(emit),
-                  jnp.asarray(byte_classes), backend="ref")
-    out[idx] = onp.asarray(bm)[:len(idx)]
+    sub = onp.asarray(data)[idx]              # confirm pass buckets internally
+    bm = dfa_scan(sub, delta, emit, byte_classes, backend=backend,
+                  block_n=block_n, interpret=interpret)
+    out[idx] = onp.asarray(bm)
     return out
 
 

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed import sharding
 from repro.models.layers import ParamDecl
 
 
@@ -93,8 +94,8 @@ def moe_apply(params, x, cfg, mesh, data_axes: tuple, model_axis: str):
     out_specs = (bspec, P(data_axes if len(data_axes) > 1 else data_axes[0], None))
     sh = (params["sh_gate"], params["sh_in"], params["sh_out"]) if has_shared \
         else (_dummy(), _dummy(), _dummy())
-    out, aux = jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)(
+    out, aux = sharding.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                  out_specs=out_specs, check_vma=False)(
         params["router"], params["w_gate"], params["w_in"], params["w_out"],
         *sh, x)
     aux = aux.mean(0)

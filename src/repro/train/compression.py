@@ -39,7 +39,10 @@ def compressed_psum(tree, axis_name: str, err_tree):
 
     Call inside a shard_map manual over `axis_name`.  Returns
     (mean-reduced fp32 tree, new error tree)."""
-    n = jax.lax.axis_size(axis_name)
+    if hasattr(jax.lax, "axis_size"):
+        n = jax.lax.axis_size(axis_name)
+    else:                       # jax 0.4.x: psum of 1 counts participants
+        n = jax.lax.psum(1, axis_name)
 
     def leaf(g, err):
         gf = g.astype(jnp.float32) + err

@@ -153,7 +153,7 @@ def build_train_step(model: Model, ts_cfg: TrainStepConfig, mesh=None,
                            for k in METRIC_KEYS}
                 return loss, metrics, grads, new_err
 
-            loss, metrics, grads, new_err = jax.shard_map(
+            loss, metrics, grads, new_err = sharding.shard_map(
                 pod_local, mesh=mesh, axis_names={"pod"},
                 in_specs=(p_zero, p_zero, b_pod),
                 out_specs=(P(), m_zero, p_zero, p_zero),

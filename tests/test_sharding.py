@@ -81,9 +81,9 @@ def test_parse_collectives_real_module():
 
     @jax.jit
     def f(x):
-        return jax.shard_map(lambda v: jax.lax.psum(v, "data"),
-                             mesh=mesh, in_specs=P("data"), out_specs=P(),
-                             check_vma=False)(x)
+        return sharding.shard_map(lambda v: jax.lax.psum(v, "data"),
+                                  mesh=mesh, in_specs=P("data"),
+                                  out_specs=P(), check_vma=False)(x)
 
     txt = f.lower(jnp.ones((8, 128))).compile().as_text()
     stats = parse_collectives(txt)

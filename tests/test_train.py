@@ -111,7 +111,9 @@ def test_compression_error_feedback():
     from functools import partial
     from jax.sharding import PartitionSpec as P
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=(P(), P()),
+    from repro.distributed.sharding import shard_map
+
+    @partial(shard_map, mesh=mesh, in_specs=(P(), P()),
              out_specs=(P(), P()), axis_names={"pod"}, check_vma=False)
     def run(gg, ee):
         return compressed_psum(gg, "pod", ee)
