@@ -1,0 +1,188 @@
+"""Query-plane benchmark: planner/executor lanes + concurrent clients.
+
+Two parts, one shared world (planted workload + 1000 rules, plus two
+deliberately DENSE rules whose posting lists are suppressed by the density
+cut — queries over them land in the batched bitmap-scan class):
+
+  * single-client hot latency per query per executor lane — ``numpy`` is
+    the pre-refactor per-segment path, ``ref``/``pallas`` are the stacked
+    single-dispatch device executors (the acceptance gate: hot fluxsieve
+    at or below the numpy baseline);
+  * N concurrent clients over a shuffled Q1-Q4 mix, reporting p50/p99
+    latency per physical path class and per lane (the paper's Figs 6-9
+    intra-query-parallelism axis, now inter-query) — the stacked executors
+    release the GIL inside the single device dispatch, which is where the
+    p99 win over the per-segment numpy loop comes from.
+"""
+from __future__ import annotations
+
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import (Measurement, bootstrap_median, measure,
+                               planted_ruleset)
+from repro.core.matcher import compile_bundle
+from repro.core.patterns import Rule
+from repro.core.query.engine import Query, QueryEngine
+from repro.core.query.mapper import QueryMapper
+from repro.core.query.store import SegmentStore
+from repro.core.stream_processor import StreamProcessor
+from repro.data.generator import LogGenerator, WorkloadSpec
+from repro.data.pipeline import IngestPipeline
+
+DENSE_TERMS = (("content1", "a"), ("content1", "e"))
+
+
+def _build(num_records: int, segment_size: int, root: str):
+    spec = WorkloadSpec(num_records=num_records, ultra_rate=2e-5,
+                        high_rate=2e-4, text_width=256, seed=7)
+    gen = LogGenerator(spec)
+    ruleset = planted_ruleset(spec, 1000)
+    base = ruleset.num_rules
+    ruleset = ruleset.with_rules(
+        [Rule(base + i, f"dense{i}", term, fields=(f,))
+         for i, (f, term) in enumerate(DENSE_TERMS)])
+    proc = StreamProcessor(compile_bundle(ruleset, spec.content_fields),
+                           backend="dfa_ref")
+    store = SegmentStore(segment_size=segment_size, root=root,
+                         index_fields=spec.content_fields)
+    IngestPipeline(gen, store, proc).run(batch_size=4096)
+    mapper = QueryMapper(ruleset)
+    engines = {
+        "numpy": QueryEngine(store, mapper=mapper, backend="numpy"),
+        "ref": QueryEngine(store, mapper=mapper, backend="ref"),
+        # big blocks: pallas interpret mode pays per grid step, so fewer,
+        # larger steps keep the CPU-fidelity lane honest
+        "pallas": QueryEngine(store, mapper=mapper, backend="pallas",
+                              block_n=8192),
+    }
+    return spec, store, engines
+
+
+def _queries(spec) -> dict:
+    ultra1 = next(t for t in spec.planted
+                  if t.fieldname == "content1" and t.rate < 1e-4)
+    rare1 = next(t for t in spec.planted
+                 if t.fieldname == "content1" and t.rate >= 1e-4)
+    rare2 = next(t for t in spec.planted
+                 if t.fieldname == "content2" and t.rate >= 1e-4)
+    return {
+        "q2_ultra_copy": Query(terms=(("content1", ultra1.term),),
+                               mode="copy", name="q2"),
+        "q3_count": Query(terms=(("content1", rare1.term),), mode="count",
+                          name="q3"),
+        "q4_multifield_copy": Query(terms=(("content1", rare1.term),
+                                           ("content2", rare2.term)),
+                                    mode="copy", name="q4"),
+        "qb_bitmap_count": Query(terms=DENSE_TERMS, mode="count", name="qb"),
+        "qb_bitmap_copy": Query(terms=(DENSE_TERMS[0],
+                                       ("content2", rare2.term)),
+                                mode="copy", name="qbc"),
+    }
+
+
+# heaviest-work-first: a query is labeled by the most expensive physical
+# class that served any of its segments (a single bitmap scan dominates any
+# number of pruned segments)
+_CLASS_WEIGHT = ("fallback", "full_scan", "bitmap", "text_index", "postings",
+                 "meta_count", "pruned")
+
+
+def _dominant_class(result) -> str:
+    for cls in _CLASS_WEIGHT:
+        if result.path_classes.get(cls):
+            return cls
+    return result.path or "none"
+
+
+def run(*, num_records: int = 120_000, segment_size: int = 10_000,
+        clients: int = 12, rounds: int = 6, runs_hot: int = 7) -> list:
+    tmp = tempfile.mkdtemp(prefix="query-conc-")
+    spec, store, engines = _build(num_records, segment_size, tmp)
+    qs = _queries(spec)
+    rows = []
+
+    # -- part 1: single-client hot latency per lane ------------------------
+    hot = {}
+    for qname, q in qs.items():
+        for lane, eng in engines.items():
+            m = measure(f"query/{qname}/{lane}/hot",
+                        lambda q=q, e=eng: e.execute(q, path="fluxsieve"),
+                        runs=runs_hot)
+            hot[(qname, lane)] = m
+            rows.append(m)
+    for (qname, lane), m in hot.items():
+        if lane != "numpy":
+            base = hot[(qname, "numpy")].median_s
+            m.derived["vs_numpy"] = f"{base / m.median_s:.2f}x"
+
+    # -- part 2: N concurrent clients over the mixed workload --------------
+    p99_all = {}
+    for lane, eng in engines.items():
+        for q in qs.values():                     # warm caches + jit traces
+            eng.execute(q, path="fluxsieve")
+        samples = []                              # (path class, seconds)
+        lock = threading.Lock()
+
+        def client(cid, eng=eng, samples=samples, lock=lock):
+            rng = np.random.default_rng(cid)
+            seq = [q for _ in range(rounds) for q in qs.values()]
+            rng.shuffle(seq)
+            local = []
+            for q in seq:
+                t0 = time.perf_counter()
+                r = eng.execute(q, path="fluxsieve")
+                local.append((_dominant_class(r),
+                              time.perf_counter() - t0))
+            with lock:
+                samples.extend(local)
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(clients)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        by_class: dict = {}
+        for cls, dt in samples:
+            by_class.setdefault(cls, []).append(dt)
+        lats = np.asarray([dt for _, dt in samples])
+        p99_all[lane] = float(np.percentile(lats, 99))
+        rows.append(Measurement(
+            name=f"query_concurrency/c{clients}/{lane}/all",
+            median_s=float(np.percentile(lats, 50)),
+            ci_lo=float(np.percentile(lats, 25)),
+            ci_hi=float(np.percentile(lats, 75)),
+            runs=len(lats),
+            derived={"p99_us": f"{p99_all[lane] * 1e6:.1f}",
+                     "qps": f"{len(lats) / wall:.0f}",
+                     "clients": clients}))
+        for cls, lat in sorted(by_class.items()):
+            arr = np.asarray(lat)
+            med, lo, hi = bootstrap_median(arr)
+            rows.append(Measurement(
+                name=f"query_concurrency/c{clients}/{lane}/{cls}",
+                median_s=med, ci_lo=lo, ci_hi=hi, runs=len(arr),
+                derived={"p99_us": f"{float(np.percentile(arr, 99)) * 1e6:.1f}",
+                         "clients": clients}))
+    for lane in engines:
+        if lane != "numpy":
+            for m in rows:
+                if m.name == f"query_concurrency/c{clients}/{lane}/all":
+                    m.derived["p99_vs_numpy"] = \
+                        f"{p99_all['numpy'] / p99_all[lane]:.2f}x"
+    return rows
+
+
+def main():
+    from benchmarks.common import print_rows
+    print_rows(run())
+
+
+if __name__ == "__main__":
+    main()

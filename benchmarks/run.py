@@ -45,8 +45,9 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_backfill, bench_layout_grid, bench_matcher,
-                            bench_overhead, bench_scale, bench_speedup,
-                            bench_storage, bench_update)
+                            bench_overhead, bench_query_concurrency,
+                            bench_scale, bench_speedup, bench_storage,
+                            bench_update)
     from benchmarks.common import print_rows
 
     if args.smoke:
@@ -78,6 +79,14 @@ def main(argv=None) -> int:
             num_records=20_000 if args.quick else 60_000,
             segment_size=2_000 if args.quick else 5_000,
             runs=3 if args.quick else 5),
+        "query": lambda: bench_query_concurrency.run(
+            num_records=(4_000 if args.smoke
+                         else 40_000 if args.quick else 120_000),
+            segment_size=(800 if args.smoke
+                          else 5_000 if args.quick else 10_000),
+            clients=4 if args.smoke else 8 if args.quick else 12,
+            rounds=2 if args.smoke else 4 if args.quick else 6,
+            runs_hot=3 if args.smoke else 5 if args.quick else 7),
     }
     if args.only and args.only not in suite:
         print(f"unknown bench {args.only!r} (available: {', '.join(suite)})",
@@ -85,8 +94,9 @@ def main(argv=None) -> int:
         return 1
     if args.smoke:
         # CI smoke: the kernel-path benches must run to completion so enrich
-        # hot-path regressions fail the build, not only the nightly eyeball
-        smoke_names = ("overhead", "matcher")
+        # AND query hot-path regressions fail the build, not only the
+        # nightly eyeball
+        smoke_names = ("overhead", "matcher", "query")
         if args.only and args.only not in smoke_names:
             print(f"bench {args.only!r} is excluded by --smoke "
                   f"(smoke runs: {', '.join(smoke_names)})", file=sys.stderr)

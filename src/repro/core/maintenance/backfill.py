@@ -110,11 +110,14 @@ class BackfillWorker:
         worker group replaying a long topic history therefore does one
         fetch, not one per historical version.
 
-        At-least-once on the NEWEST message: its offset is committed only
-        after successful install, so a transient object-store failure is
-        retried next cycle instead of silently regressing the worker to an
-        older target forever.  (Older messages are superseded either way
-        and are always committed.)"""
+        At-least-once on every candidate that has not been superseded by a
+        successful install: offsets are committed only up to the installed
+        message, because a message is superseded only once some NEWER
+        message actually installs.  In particular, when the newest
+        notification is permanently invalid and an older one failed
+        transiently, nothing is committed — the older candidate stays
+        fetchable and is retried next cycle instead of being silently
+        forfeited (duplicate nacks stay suppressed via ``_nacked``)."""
         group = f"maintenance/{self.worker_id}"
         msgs = self.bus.poll(SEGMENT_MAINTENANCE, group,
                              max_messages=1_000_000)
@@ -148,11 +151,10 @@ class BackfillWorker:
                         "object_ref": msg.value.get("object_ref"),
                     })
         newest = msgs[-1].offset
-        if installed_offset == newest:
-            self.bus.commit(SEGMENT_MAINTENANCE, group, newest)
-        elif len(msgs) > 1:
-            # superseded history is done with; the failed newest is retried
-            self.bus.commit(SEGMENT_MAINTENANCE, group, msgs[-2].offset)
+        if installed_offset is not None:
+            # everything at/below the install is superseded; failed NEWER
+            # candidates stay uncommitted and are retried next cycle
+            self.bus.commit(SEGMENT_MAINTENANCE, group, installed_offset)
         seen = sum(1 for m in msgs if m.offset >= self._seen_upto)
         self._seen_upto = newest + 1
         return seen

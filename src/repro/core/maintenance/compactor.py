@@ -60,16 +60,29 @@ class Compactor:
                             else max(1, store.segment_size // 2))
         self.target_records = (target_records if target_records is not None
                                else store.segment_size)
+        # failure memory (mirrors BackfillWorker._failed_ids): a permanently
+        # failing merge group (e.g. corrupt spill file) must not be fully
+        # re-read and re-failed every cycle, nor starve healthy groups
+        self._failed_keys: set = set()  # tuple(segment ids) of failed groups
+
+    @staticmethod
+    def _schema(seg) -> dict:
+        """Mergeable schema: name -> (dtype, per-record shape).  Comparing
+        names alone would group e.g. mixed ``text_width`` segments whose
+        ``np.concatenate`` then raises every cycle."""
+        return {name: (dtype, tuple(shape[1:]))
+                for name, (dtype, shape) in seg.meta["columns"].items()}
 
     def candidate_groups(self) -> list:
-        """Runs of >= 2 adjacent undersized segments with identical schemas,
-        greedily grown up to ``target_records``."""
+        """Runs of >= 2 adjacent undersized segments with identical schemas
+        (column names AND dtypes/widths), greedily grown up to
+        ``target_records``."""
         groups, run, run_n = [], [], 0
         for seg in list(self.store.segments):
             small = seg.num_records < self.min_records
             fits = run_n + seg.num_records <= self.target_records
-            same_schema = (not run or set(seg.meta["columns"])
-                           == set(run[0].meta["columns"]))
+            same_schema = (not run
+                           or self._schema(seg) == self._schema(run[0]))
             if small and fits and same_schema:
                 run.append(seg)
                 run_n += seg.num_records
@@ -86,7 +99,12 @@ class Compactor:
         rep = CompactionReport()
         t0 = time.perf_counter()
         used = 0
-        for group in self.candidate_groups():
+        groups = self.candidate_groups()
+        # previously-failed groups only get budget once every fresh group
+        # has been tried (deprioritized, not dropped: a transient failure —
+        # a racing maintenance writer, a repaired file — should still heal)
+        fresh = [g for g in groups if self._key(g) not in self._failed_keys]
+        for group in fresh or groups:
             if max_merges is not None and rep.merges >= max_merges:
                 break
             cost = sum(s.nbytes() for s in group)
@@ -99,10 +117,12 @@ class Compactor:
                 ok = self._merge(group)
             except Exception as e:  # noqa: BLE001
                 rep.merges_failed += 1
+                self._failed_keys.add(self._key(group))
                 if len(rep.errors) < 8:
                     rep.errors.append(
                         ([s.segment_id for s in group], str(e)))
                 continue
+            self._failed_keys.discard(self._key(group))
             if ok:
                 rep.merges += 1
                 rep.segments_in += len(group)
@@ -112,6 +132,10 @@ class Compactor:
                 used += cost
         rep.seconds = time.perf_counter() - t0
         return rep
+
+    @staticmethod
+    def _key(group: list) -> tuple:
+        return tuple(s.segment_id for s in group)
 
     def _merge(self, group: list) -> bool:
         # pre-warm every input column so readers holding the old segment

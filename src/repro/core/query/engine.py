@@ -1,22 +1,29 @@
-"""Query execution over the columnar plane — three physical paths.
+"""Query execution over the columnar plane — planner/executor split.
+
+Three logical paths (paper §5.1/§6.1 baselines + the paper's fast path):
 
   full_scan   vectorized substring scan over raw content bytes
               (the DuckDB optimized-full-scan baseline, paper §5.1);
   text_index  token -> posting-list lookup on the per-segment inverted
               index (the Pinot FTS baseline, paper §6.1);
-  fluxsieve   bitmap test on the enrichment column + segment zone-map
-              pruning (the paper's fast path, via the Query Mapper).
+  fluxsieve   enrichment-bitmap evaluation + segment zone-map pruning
+              (the paper's fast path, via the Query Mapper).
 
 A query is a conjunction of (field contains term) predicates with a
 ``copy`` (materialize matching records) or ``count`` (aggregate only) mode —
 exactly the paper's Q1-Q4 and their "with count" variants.  ``cold=True``
-drops all segment caches first and reads without retaining, modelling the
-paper's cold runs; bytes read from disk are accounted per query.
+drops all segment caches (host AND device) first, modelling the paper's
+cold runs; bytes read from disk are accounted per query.
 
-Consistency (paper §3.4 step 4): the fluxsieve path consults the mapper per
-segment — records ingested under an engine version that did not know a rule
-fall back to full scan for that segment (hybrid execution), so enrichment
-never changes results.
+Execution is split into a logical **planner** (``query.planner``) that
+consults the mapper/zone-maps/metadata once and classifies every segment
+into a physical path class, and a batched **executor** (``query.executor``)
+that runs all bitmap-scan segments as ONE stacked device dispatch with one
+D2H transfer per query, serves hot runs from a device-resident column
+cache, and re-plans segments the maintenance plane swapped mid-query.
+Consistency (paper §3.4 step 4) is preserved: records ingested under an
+engine version that did not know a rule fall back to full scan for that
+segment (hybrid execution), so enrichment never changes results.
 """
 from __future__ import annotations
 
@@ -26,8 +33,9 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.records import RecordBatch
-from repro.core.stream_processor import ENRICH_COLUMN
-from repro.core.query.store import Segment, SegmentStore
+from repro.core.query.executor import PlanExecutor, substring_scan  # noqa: F401 — substring_scan re-exported
+from repro.core.query.planner import PhysicalPlan, QueryPlanner
+from repro.core.query.store import Segment, SegmentStore  # noqa: F401
 
 PATHS = ("full_scan", "text_index", "fluxsieve")
 
@@ -60,194 +68,89 @@ class QueryResult:
     segments_fallback: int = 0
     bytes_read: int = 0
     fallback_ids: tuple = ()    # segment ids served via consistency fallback
-
-
-def substring_scan(data: np.ndarray, term: str) -> np.ndarray:
-    """(N, L) uint8 contains `term` as a byte substring -> (N,) bool."""
-    t = term.encode()
-    N, L = data.shape
-    m = len(t)
-    if m == 0 or m > L:
-        return np.zeros(N, bool)
-    # vectorized first-byte prefilter, then confirm remaining bytes
-    acc = data[:, :L - m + 1] == t[0]
-    for i in range(1, m):
-        acc &= data[:, i:L - m + 1 + i] == t[i]
-    return acc.any(axis=1)
+    path_classes: dict = field(default_factory=dict)  # class -> num segments
 
 
 class QueryEngine:
-    """``workers`` > 1 scans segments concurrently (numpy releases the GIL
-    in the vectorized kernels) — the intra-query parallelism axis of the
-    paper's Figs 6-9."""
+    """``backend`` selects the bitmap-class executor: ``"ref"`` (stacked jnp
+    dispatch, default), ``"pallas"`` (stacked Pallas kernel), ``"numpy"``
+    (pre-refactor per-segment word tests — the equivalence oracle).
+    ``scan_backend`` (e.g. ``"dfa_ref"``) routes full-scan fallbacks through
+    throwaway compiled DFA engines.  ``workers`` > 1 scans host-path
+    segments concurrently (numpy releases the GIL in the vectorized
+    kernels) — the intra-query parallelism axis of the paper's Figs 6-9."""
 
     def __init__(self, store: SegmentStore, *, mapper=None, profiler=None,
-                 workers: int = 1):
+                 workers: int = 1, backend: str = "ref",
+                 scan_backend: str = None, block_n: int = 1024,
+                 interpret: bool = True, device_cache=None,
+                 stack_cache_size: int = 8):
         self.store = store
         self.mapper = mapper          # QueryMapper (None -> no fluxsieve path)
         self.profiler = profiler
         self.workers = workers
+        self.planner = QueryPlanner(mapper)
+        self.executor = PlanExecutor(
+            backend=backend, scan_backend=scan_backend, block_n=block_n,
+            interpret=interpret, workers=workers, device_cache=device_cache,
+            stack_cache_size=stack_cache_size)
 
     # -- public ------------------------------------------------------------
+    def plan(self, query: Query, *, path: str = "auto",
+             cache: bool = True) -> PhysicalPlan:
+        """EXPLAIN: the physical plan ``execute`` would run (fresh per call;
+        classifications snapshot live segment metadata)."""
+        flux = None
+        if path in ("auto", "fluxsieve") and self.mapper is not None:
+            flux = self.mapper.map(query)
+        return self.planner.plan(query, list(self.store.segments),
+                                 path=path, flux=flux, cache=cache)
+
     def execute(self, query: Query, *, path: str = "auto",
                 cold: bool = False) -> QueryResult:
         if cold:
-            self.store.drop_caches()
-        chosen = path
-        plan = None
+            self.store.drop_caches()    # token bump also invalidates device
+        flux = None
         if path in ("auto", "fluxsieve") and self.mapper is not None:
-            plan = self.mapper.map(query)
-        if path == "auto":
-            chosen = "fluxsieve" if plan is not None else self._fallback_path(query)
-        if chosen == "fluxsieve" and plan is None:
+            flux = self.mapper.map(query)
+        if path == "fluxsieve" and flux is None:
             raise ValueError("query not covered by registered rules; "
                              "no fluxsieve plan")
         t0 = time.perf_counter()
-        res = self._run(query, chosen, plan, cache=not cold)
+        plan = self.planner.plan(query, list(self.store.segments),
+                                 path=path, flux=flux, cache=not cold)
+        res = self._run(plan, cache=not cold)
         res.latency_s = time.perf_counter() - t0
-        res.path = chosen
+        res.path = plan.path
         if self.profiler is not None:
             self.profiler.record(query, res)
         return res
 
-    def _fallback_path(self, query: Query) -> str:
-        segs = self.store.segments
-        if segs and all(s.has_text_index(f) for f, _ in query.terms
-                        for s in segs):
-            return "text_index"
-        return "full_scan"
-
     # -- execution ---------------------------------------------------------
-    def _run(self, query: Query, path: str, plan, cache: bool) -> QueryResult:
+    def _run(self, plan: PhysicalPlan, cache: bool) -> QueryResult:
         res = QueryResult(count=0)
-        segs = self.store.segments
-
-        def one(seg):
-            # thread-local counters; merged below (no racy increments)
-            local = QueryResult(count=0)
-            if path == "fluxsieve":
-                ids = self._seg_fluxsieve(seg, query, plan, cache, local)
-            elif path == "text_index":
-                ids = self._seg_text_index(seg, query, cache, local)
-            else:
-                ids = self._seg_full_scan(seg, query, cache, local)
-            return ids, local
-
-        if self.workers > 1 and len(segs) > 1:
-            from concurrent.futures import ThreadPoolExecutor
-            with ThreadPoolExecutor(self.workers) as pool:
-                per_seg = list(pool.map(one, segs))
-        else:
-            per_seg = [one(seg) for seg in segs]
-
-        for _, local in per_seg:
-            res.segments_scanned += local.segments_scanned
-            res.segments_pruned += local.segments_pruned
-            res.segments_fallback += local.segments_fallback
-            res.bytes_read += local.bytes_read
-            res.fallback_ids += local.fallback_ids
-
+        per_seg = self.executor.execute(plan, self.planner, cache=cache)
         matches = []   # (segment, ids) for copy mode
-        for seg, (ids, _) in zip(segs, per_seg):
+        for task, (ids, stats) in zip(plan.tasks, per_seg):
+            res.segments_scanned += stats.scanned
+            res.segments_pruned += stats.pruned
+            res.segments_fallback += stats.fallback
+            res.bytes_read += stats.bytes_read
+            res.fallback_ids += stats.fallback_ids
+            if stats.path_class:
+                res.path_classes[stats.path_class] = \
+                    res.path_classes.get(stats.path_class, 0) + 1
             if ids is None:
                 continue
-            if isinstance(ids, int):           # metadata-only count
-                res.count += ids
+            if isinstance(ids, (int, np.integer)):   # metadata-only count
+                res.count += int(ids)
                 continue
             res.count += len(ids)
-            if query.mode == "copy" and len(ids):
-                matches.append((seg, ids))
-        if query.mode == "copy":
+            if plan.query.mode == "copy" and len(ids):
+                matches.append((task.seg, ids))
+        if plan.query.mode == "copy":
             res.records = self._materialize(matches, cache, res)
         return res
-
-    def _seg_full_scan(self, seg: Segment, query: Query, cache, res):
-        res.segments_scanned += 1
-        mask = None
-        for fieldname, term in query.terms:
-            col = self._read(seg, fieldname, cache, res)
-            m = substring_scan(col, term)
-            mask = m if mask is None else (mask & m)
-        return np.flatnonzero(mask)
-
-    def _seg_text_index(self, seg: Segment, query: Query, cache, res):
-        res.segments_scanned += 1
-        ids = None
-        for fieldname, term in query.terms:
-            idx = seg.text_index(fieldname, cache=cache)
-            posting = idx.get(term, np.zeros(0, np.int32))
-            ids = posting if ids is None else np.intersect1d(ids, posting,
-                                                             assume_unique=True)
-            if not len(ids):
-                break
-        return ids
-
-    def _seg_fluxsieve(self, seg: Segment, query: Query, plan, cache, res):
-        # snapshot-validate-retry: the maintenance plane can swap a sealed
-        # segment's enrichment (bitmap/postings + meta) between our coverage
-        # check and our data read.  Evaluate everything against ONE meta
-        # snapshot, then confirm the segment still carries that snapshot;
-        # if not, retry against the new state, and after repeated swaps fall
-        # back to the full scan, which never depends on enrichment.
-        for _ in range(3):
-            meta = seg.meta
-            attempt = QueryResult(count=0)
-            ids = self._seg_fluxsieve_snap(seg, meta, query, plan, cache,
-                                           attempt)
-            if seg.meta is meta:
-                res.segments_scanned += attempt.segments_scanned
-                res.segments_pruned += attempt.segments_pruned
-                res.segments_fallback += attempt.segments_fallback
-                res.bytes_read += attempt.bytes_read
-                res.fallback_ids += attempt.fallback_ids
-                return ids
-        res.segments_fallback += 1
-        res.fallback_ids += (seg.segment_id,)
-        return self._seg_full_scan(seg, query, cache, res)
-
-    def _seg_fluxsieve_snap(self, seg: Segment, meta: dict, query: Query,
-                            plan, cache, res):
-        # consistency: records ingested before a rule existed -> fallback scan
-        if not plan.covers_segment(seg, meta):
-            res.segments_fallback += 1
-            res.fallback_ids += (seg.segment_id,)   # maintenance-plane heat
-            return self._seg_full_scan(seg, query, cache, res)
-        # zone-map pruning: segment-level OR of bitmaps lacks a needed bit
-        zone = meta.get("rule_bitmap_any")
-        if zone is not None:
-            zone = np.asarray(zone, np.uint32)
-            for mask in plan.masks:
-                # widths may differ across engine generations; a bit beyond
-                # the segment's bitmap width cannot be set in any record
-                k = min(len(zone), len(mask))
-                if not (zone[:k] & mask[:k]).any():
-                    res.segments_pruned += 1
-                    return None
-        # single-rule count: answered from per-segment metadata, zero I/O
-        if query.mode == "count" and len(plan.rule_ids) == 1:
-            c = seg.rule_count(plan.rule_ids[0], meta)
-            if c is not None:
-                res.segments_scanned += 1
-                return int(c)
-        res.segments_scanned += 1
-        # seal-time rule postings (sparse inverted index): ids directly,
-        # intersected for multi-term AND — no bitmap-column scan
-        postings = [seg.rule_postings(rid, cache=cache)
-                    for rid in plan.rule_ids]
-        if all(p is not None for p in postings):
-            ids = postings[0]
-            for p in postings[1:]:
-                ids = np.intersect1d(ids, p, assume_unique=True)
-                if not len(ids):
-                    break
-            return ids
-        bm = self._read(seg, ENRICH_COLUMN, cache, res)
-        keep = None
-        for rid in plan.rule_ids:
-            # test ONE word column + bit, not the full (N, W) mask product
-            m = (bm[:, rid // 32] >> np.uint32(rid % 32)) & np.uint32(1)
-            keep = m.astype(bool) if keep is None else (keep & m.astype(bool))
-        return np.flatnonzero(keep)
 
     def _materialize(self, matches, cache, res) -> RecordBatch:
         parts = []
@@ -263,10 +166,3 @@ class QueryEngine:
         if not parts:
             return RecordBatch({})
         return RecordBatch.concat(parts)
-
-    def _read(self, seg: Segment, name: str, cache: bool, res: QueryResult):
-        in_mem = name in seg._columns
-        col = seg.column(name, cache=cache)
-        if not in_mem:
-            res.bytes_read += col.nbytes
-        return col

@@ -1,0 +1,380 @@
+"""Physical plan executor — batched, device-resident query execution.
+
+The executor turns a ``PhysicalPlan`` into per-segment results with the
+same single-dispatch discipline PR 2 brought to ingest, now on the read
+side:
+
+  * ALL ``bitmap``-class segments of a query are concatenated on N (with a
+    per-row segment-slot vector) and matched against the query's
+    conjunctive mask set in ONE stacked device dispatch through the
+    ``bitmap_filter`` kernels; exactly one counted D2H transfer per query
+    brings back the match mask, from which per-segment counts (count
+    mode) or ids (copy mode) derive on the host — accelerators can flip
+    to the device-side count reduction via
+    ``bitmap_query_words(with_counts=True)``;
+  * uploaded enrichment columns live in a device-resident
+    ``DeviceColumnCache`` keyed by ``Segment.meta_token()``, and the fully
+    stacked (concatenated + padded) array is LRU-cached per segment-subset
+    key, so hot queries skip the H2D re-upload entirely; maintenance-plane
+    swaps and cold-run cache drops bump the token and invalidate both;
+  * ``fallback``/``full_scan`` segments route through throwaway DFA
+    engines (query terms compiled to literal rules, reusing the ingest
+    matcher stack) when ``scan_backend`` is set, else through the
+    vectorized numpy substring scan;
+  * enriched-path results are validated against the meta snapshot their
+    classification used; segments swapped mid-query by the maintenance
+    plane are re-planned individually.  Full-scan results are returned
+    directly — they never read enrichment state, so a concurrent swap
+    cannot invalidate them.
+
+``backend="numpy"`` preserves the pre-refactor per-segment numpy execution
+(bit tests on single bitmap words) behind the same planner — the
+equivalence oracle and the honest baseline lane in benchmarks.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.stream_processor import ENRICH_COLUMN
+from repro.core.query.planner import (BITMAP, FALLBACK, FULL_SCAN,
+                                      META_COUNT, POSTINGS, PRUNED,
+                                      TEXT_INDEX)
+from repro.core.query.store import DeviceColumnCache
+
+# -- device->host accounting -------------------------------------------------
+# The batched bitmap path performs exactly ONE D2H transfer per query; tests
+# assert this via the counter below (mirrors core.matcher.transfer_count).
+_TRANSFER_COUNT = 0
+
+
+def transfer_count() -> int:
+    return _TRANSFER_COUNT
+
+
+def _to_host(x):
+    global _TRANSFER_COUNT
+    _TRANSFER_COUNT += 1
+    import jax
+    return jax.device_get(x)
+
+
+def substring_scan(data: np.ndarray, term: str) -> np.ndarray:
+    """(N, L) uint8 contains `term` as a byte substring -> (N,) bool."""
+    t = term.encode()
+    N, L = data.shape
+    m = len(t)
+    if m == 0 or m > L:
+        return np.zeros(N, bool)
+    # vectorized first-byte prefilter, then confirm remaining bytes
+    acc = data[:, :L - m + 1] == t[0]
+    for i in range(1, m):
+        acc &= data[:, i:L - m + 1 + i] == t[i]
+    return acc.any(axis=1)
+
+
+@dataclass
+class TaskStats:
+    """Per-segment counters, merged into the QueryResult by the engine."""
+    scanned: int = 0
+    pruned: int = 0
+    fallback: int = 0
+    bytes_read: int = 0
+    fallback_ids: tuple = ()
+    path_class: str = ""
+
+
+class PlanExecutor:
+    """Executes ``PhysicalPlan``s.  ``backend`` selects the bitmap-class
+    physical engine: ``numpy`` (pre-refactor per-segment word tests),
+    ``ref`` (stacked jnp dispatch), ``pallas`` (stacked Pallas kernel).
+    ``scan_backend`` (e.g. ``"dfa_ref"``/``"dfa"``) routes full scans
+    through throwaway compiled matchers instead of the numpy substring
+    scan.  Thread-safe; ``workers > 1`` scans host-path segments
+    concurrently (the intra-query parallelism axis of Figs 6-9)."""
+
+    MAX_SNAPSHOT_RETRIES = 3
+
+    def __init__(self, *, backend: str = "ref", scan_backend: str = None,
+                 block_n: int = 1024, interpret: bool = True,
+                 workers: int = 1, device_cache: DeviceColumnCache = None,
+                 stack_cache_size: int = 8):
+        if backend not in ("numpy", "ref", "pallas"):
+            raise ValueError(f"unknown executor backend {backend!r}")
+        self.backend = backend
+        self.scan_backend = scan_backend
+        self.block_n = block_n
+        self.interpret = interpret
+        self.workers = workers
+        self.device_cache = device_cache or DeviceColumnCache()
+        self.stack_cache_size = stack_cache_size
+        self._stacks = {}               # (tokens, words) -> (stack, row_seg,
+        self._stack_order = []          #                      lens)
+        self._stack_lock = threading.Lock()
+        self._masks = {}                # rule_ids -> device word-bit vector
+        self._scan_engines = {}         # (query key, fields) -> matchers
+        self._scan_lock = threading.Lock()
+
+    # -- entry ---------------------------------------------------------------
+    def execute(self, plan, planner, *, cache: bool = True) -> list:
+        """-> [(ids, TaskStats)] parallel to ``plan.tasks``; ids is None
+        (pruned), an int (metadata count), or an int32 id array."""
+        tasks = plan.tasks
+        results = [None] * len(tasks)
+        if self.backend != "numpy":
+            idx = [i for i, t in enumerate(tasks) if t.path_class == BITMAP]
+            if idx:
+                for i, r in zip(idx, self._run_stacked(
+                        plan, [tasks[i] for i in idx], cache)):
+                    results[i] = r      # None -> snapshot swapped, re-plan
+
+        remaining = [i for i in range(len(tasks)) if results[i] is None]
+
+        def one(i):
+            return self._run_task(plan, planner, tasks[i], cache)
+
+        if self.workers > 1 and len(remaining) > 1:
+            from concurrent.futures import ThreadPoolExecutor
+            with ThreadPoolExecutor(self.workers) as pool:
+                for i, r in zip(remaining, pool.map(one, remaining)):
+                    results[i] = r
+        else:
+            for i in remaining:
+                results[i] = one(i)
+        return results
+
+    # -- stacked bitmap class (single device dispatch, single D2H) -----------
+    def _run_stacked(self, plan, tasks, cache: bool) -> list:
+        from repro.kernels.bitmap_filter.ops import bitmap_query_words
+        import jax.numpy as jnp
+
+        # the plan's word-sliced encoding: one (word, bit) pair per
+        # single-rule predicate.  The gather happens once at stack build;
+        # traffic per hot query is N*P words (what the numpy path reads),
+        # not N*W.
+        words, bits_np = plan.flux.word_slices()
+        stats = [TaskStats(path_class=BITMAP) for _ in tasks]
+        key = (tuple(t.seg.meta_token() for t in tasks), words)
+        entry = self._stack_get(key) if cache else None
+        if entry is None:
+            # stack build (once per segment subset + word set, then
+            # device-resident): gather the word columns host-side, upload,
+            # concatenate on N, pre-bucket.  All eager device ops live
+            # HERE, off the hot path — a hot query is one jitted dispatch
+            # plus one D2H.
+            parts, lens = [], []
+            for t, st in zip(tasks, stats):
+                parts.append(self._device_words(t.seg, words, cache, st))
+                lens.append(int(t.seg.num_records))
+            stack = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+            row_seg = np.repeat(np.arange(len(tasks), dtype=np.int32), lens)
+            from repro.kernels.dfa_scan.ops import bucket_n
+            n_pad = bucket_n(stack.shape[0], self.block_n)
+            if n_pad != stack.shape[0]:
+                stack = jnp.pad(stack, ((0, n_pad - stack.shape[0]), (0, 0)))
+                row_seg = np.pad(row_seg, (0, n_pad - len(row_seg)))
+            entry = (stack, jnp.asarray(row_seg), tuple(lens))
+            if cache:
+                self._stack_put(key, entry)
+        stack, row_seg, lens = entry
+        bits = self._device_bits(plan.flux.rule_ids, bits_np)
+        copy_mode = plan.query.mode == "copy"
+        match_dev, _ = bitmap_query_words(
+            stack, bits, row_seg, num_segments=len(tasks),
+            backend="pallas" if self.backend == "pallas" else "ref",
+            block_n=self.block_n, interpret=self.interpret,
+            with_counts=False)
+        # the ONE counted D2H per query: the padded match mask; per-segment
+        # counts/ids derive from host slices (on XLA CPU a device-side
+        # scatter reduction costs more than transferring the mask — see
+        # bitmap_query_words(with_counts=...) for the accelerator trade)
+        match = _to_host(match_dev)
+        out, off = [], 0
+        for t, st, n in zip(tasks, stats, lens):
+            if t.seg.meta is not t.meta:
+                out.append(None)        # swapped mid-query: re-plan this one
+            else:
+                st.scanned += 1
+                if copy_mode:
+                    ids = np.flatnonzero(match[off:off + n]).astype(np.int32)
+                else:
+                    ids = int(np.count_nonzero(match[off:off + n]))
+                out.append((ids, st))
+            off += n
+        return out
+
+    def _device_bits(self, rule_ids: tuple, bits_np: np.ndarray):
+        """Device-resident per-predicate word masks, cached per rule-id
+        tuple (content is a pure function of it)."""
+        import jax.numpy as jnp
+        with self._stack_lock:
+            bits = self._masks.get(rule_ids)
+        if bits is None:
+            bits = jnp.asarray(bits_np)
+            with self._stack_lock:
+                if len(self._masks) > 64:       # bound growth
+                    self._masks.clear()
+                self._masks[rule_ids] = bits
+        return bits
+
+    def _device_words(self, seg, words: tuple, cache: bool,
+                      stats: TaskStats):
+        """Device-resident gathered word columns of the enrichment bitmap.
+        The token is read BEFORE the host column so a racing maintenance
+        swap can only file new data under an already-dead token, never
+        stale data under a live one."""
+        import jax.numpy as jnp
+        token = seg.meta_token()
+        name = f"{ENRICH_COLUMN}@{','.join(map(str, words))}"
+        dev = self.device_cache.get(token, name) if cache else None
+        if dev is None:
+            in_mem = ENRICH_COLUMN in seg._columns
+            host = seg.column(ENRICH_COLUMN, cache=cache)
+            if not in_mem:
+                stats.bytes_read += host.nbytes
+            sub = np.ascontiguousarray(np.asarray(host)[:, list(words)])
+            dev = jnp.asarray(sub)                       # the only H2D
+            if cache:
+                self.device_cache.put(token, name, dev)
+        return dev
+
+    def _stack_get(self, key):
+        with self._stack_lock:
+            entry = self._stacks.get(key)
+            if entry is not None:
+                self._stack_order.remove(key)
+                self._stack_order.append(key)
+            return entry
+
+    def _stack_put(self, key, entry) -> None:
+        with self._stack_lock:
+            if key not in self._stacks:
+                self._stack_order.append(key)
+            self._stacks[key] = entry
+            while len(self._stack_order) > self.stack_cache_size:
+                old = self._stack_order.pop(0)
+                del self._stacks[old]
+
+    # -- per-segment paths ---------------------------------------------------
+    def _run_task(self, plan, planner, task, cache: bool) -> tuple:
+        query = plan.query
+        if task.path_class in (TEXT_INDEX, FULL_SCAN):
+            stats = TaskStats(path_class=task.path_class)
+            if task.path_class == TEXT_INDEX:
+                return self._text_index(query, task.seg, cache, stats), stats
+            return self._full_scan(query, task.seg, cache, stats), stats
+        # enriched-path classes: snapshot-validate-retry.  The maintenance
+        # plane can swap a sealed segment's enrichment between classification
+        # and our read; everything here was evaluated against ONE meta
+        # snapshot, so confirm the segment still carries it, re-plan on a
+        # swap, and after repeated swaps fall back to the full scan.
+        t = task
+        for _ in range(self.MAX_SNAPSHOT_RETRIES):
+            stats = TaskStats(path_class=t.path_class)
+            if t.path_class == FALLBACK:
+                # full scans never read enrichment state: return directly,
+                # no re-validation — also the terminal state of a re-plan
+                stats.fallback += 1
+                stats.fallback_ids += (t.seg.segment_id,)
+                return self._full_scan(query, t.seg, cache, stats), stats
+            ids = self._enriched(plan, t, cache, stats)
+            if t.seg.meta is t.meta:
+                return ids, stats
+            t = planner.classify(t.seg, query, plan.flux, cache)
+        stats = TaskStats(path_class=FALLBACK, fallback=1,
+                          fallback_ids=(t.seg.segment_id,))
+        return self._full_scan(query, t.seg, cache, stats), stats
+
+    def _enriched(self, plan, task, cache: bool, stats: TaskStats):
+        if task.path_class == PRUNED:
+            stats.pruned += 1
+            return None
+        stats.scanned += 1
+        if task.path_class == META_COUNT:
+            return task.count
+        if task.path_class == POSTINGS:
+            ids = task.postings[0]
+            for p in task.postings[1:]:
+                ids = np.intersect1d(ids, p, assume_unique=True)
+                if not len(ids):
+                    break
+            return ids
+        # BITMAP, one segment: the pre-refactor numpy word/bit test — also
+        # the retry path after a stacked-batch snapshot invalidation
+        bm = self._read(task.seg, ENRICH_COLUMN, cache, stats)
+        keep = None
+        for rid in plan.flux.rule_ids:
+            # test ONE word column + bit, not the full (N, W) mask product
+            m = (bm[:, rid // 32] >> np.uint32(rid % 32)) & np.uint32(1)
+            keep = m.astype(bool) if keep is None else (keep & m.astype(bool))
+        return np.flatnonzero(keep)
+
+    def _text_index(self, query, seg, cache: bool, stats: TaskStats):
+        stats.scanned += 1
+        ids = None
+        for fieldname, term in query.terms:
+            idx = seg.text_index(fieldname, cache=cache)
+            posting = idx.get(term, np.zeros(0, np.int32))
+            ids = posting if ids is None else np.intersect1d(
+                ids, posting, assume_unique=True)
+            if not len(ids):
+                break
+        return ids
+
+    # -- full scans ----------------------------------------------------------
+    def _full_scan(self, query, seg, cache: bool, stats: TaskStats):
+        stats.scanned += 1
+        if self.scan_backend is not None and all(t for _, t in query.terms):
+            return self._full_scan_dfa(query, seg, cache, stats)
+        mask = None
+        for fieldname, term in query.terms:
+            col = self._read(seg, fieldname, cache, stats)
+            m = substring_scan(col, term)
+            mask = m if mask is None else (mask & m)
+        return np.flatnonzero(mask)
+
+    def _full_scan_dfa(self, query, seg, cache: bool, stats: TaskStats):
+        """Consistency-fallback scan through the fused matcher stack: query
+        terms compile (once, cached per query key) into throwaway literal
+        rules — one bit per term — and the raw text columns run through the
+        same DFA machinery the ingest plane uses."""
+        from repro.core.enrichment import rule_mask
+        matchers = self._scan_matchers(query)
+        bm = None
+        for fieldname, eng in matchers.items():
+            col = self._read(seg, fieldname, cache, stats)
+            sub = np.asarray(eng.match(col))
+            bm = sub if bm is None else (bm | sub)
+        need = rule_mask(range(len(query.terms)), len(query.terms))
+        keep = ((bm & need[None, :bm.shape[1]])
+                == need[None, :bm.shape[1]]).all(axis=1)
+        return np.flatnonzero(keep)
+
+    def _scan_matchers(self, query) -> dict:
+        from repro.core.matcher import build_matchers, compile_bundle
+        from repro.core.patterns import Rule, RuleSet, escape
+        key = (query.key(), self.scan_backend)
+        with self._scan_lock:
+            matchers = self._scan_engines.get(key)
+        if matchers is None:
+            rules = tuple(Rule(i, f"q{i}", escape(term), fields=(f,))
+                          for i, (f, term) in enumerate(query.terms))
+            fields = tuple(sorted({f for f, _ in query.terms}))
+            bundle = compile_bundle(RuleSet(rules), fields)
+            matchers = build_matchers(bundle, backend=self.scan_backend,
+                                      block_n=self.block_n,
+                                      interpret=self.interpret)
+            with self._scan_lock:
+                if len(self._scan_engines) > 64:    # bound growth: ad-hoc
+                    self._scan_engines.clear()      # query shapes are open
+                self._scan_engines[key] = matchers
+        return matchers
+
+    def _read(self, seg, name: str, cache: bool, stats: TaskStats):
+        in_mem = name in seg._columns
+        col = seg.column(name, cache=cache)
+        if not in_mem:
+            stats.bytes_read += col.nbytes
+        return col

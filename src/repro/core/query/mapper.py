@@ -33,6 +33,20 @@ class FluxSievePlan:
     rule_idents: tuple      # content identity per rule_id (parallel tuple)
     min_version_id: int     # newest version id any needed rule was added at
 
+    def word_slices(self) -> tuple:
+        """``(words, bits)`` — per-predicate bitmap word index plus in-word
+        mask, the word-sliced encoding the batched executor ships to the
+        device (``bitmap_query_words``).  Every plan predicate is a single
+        rule, i.e. a single-bit mask, so one (word, bit) pair per predicate
+        is exact — and the device plane only ever gathers the P word
+        columns a query touches, not the full (N, W) bitmap.  Coverage
+        guarantees each word index lies inside every covered segment's
+        bitmap width."""
+        words = tuple(int(r) // 32 for r in self.rule_ids)
+        bits = np.asarray([np.uint32(1) << np.uint32(int(r) % 32)
+                           for r in self.rule_ids], np.uint32)
+        return words, bits
+
     def covers_segment(self, seg: Segment, meta: dict = None) -> bool:
         """``meta`` lets the engine evaluate coverage against a snapshot of
         ``seg.meta`` (concurrent maintenance swaps the meta object; checking

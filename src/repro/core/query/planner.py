@@ -1,0 +1,149 @@
+"""Logical query planner — consult metadata ONCE, classify every segment.
+
+The planner is the read-side analogue of the ingest plane's fused dispatch
+discipline (PR 2): instead of each physical path re-deriving per-segment
+decisions mid-scan, the planner walks the segment list a single time,
+evaluating the mapper plan, zone maps, coverage metadata, and index
+availability against ONE meta snapshot per segment, and emits a
+``PhysicalPlan`` — a first-class object carrying a per-segment
+classification into physical path classes:
+
+  ``pruned``      zone-map OR-bitmap lacks a needed bit — zero I/O;
+  ``meta_count``  answered from precomputed per-rule counts — zero I/O;
+  ``postings``    seal-time rule posting lists, intersected for AND;
+  ``bitmap``      enrichment-bitmap scan — the executor batches ALL of
+                  these into a single stacked device dispatch;
+  ``fallback``    consistency fallback (records predate a rule) -> full
+                  scan.  Full scans never read enrichment state, so their
+                  results are returned directly, never re-validated;
+  ``text_index``  token posting-list lookup (Pinot FTS baseline);
+  ``full_scan``   vectorized substring scan (DuckDB baseline).
+
+Each classification pins the ``seg.meta`` snapshot it was derived from; the
+executor re-validates the snapshot identity after reading data (the
+maintenance plane can swap enrichment mid-query) and re-plans just the
+segments that moved.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+# physical path classes
+PRUNED = "pruned"
+META_COUNT = "meta_count"
+POSTINGS = "postings"
+BITMAP = "bitmap"
+FALLBACK = "fallback"
+TEXT_INDEX = "text_index"
+FULL_SCAN = "full_scan"
+PATH_CLASSES = (PRUNED, META_COUNT, POSTINGS, BITMAP, FALLBACK,
+                TEXT_INDEX, FULL_SCAN)
+
+# classes that read enrichment state and therefore must be re-validated
+# against the meta snapshot after execution (fallback/full scans must NOT:
+# they depend only on raw text columns, which never change after seal)
+VALIDATED_CLASSES = (PRUNED, META_COUNT, POSTINGS, BITMAP)
+
+
+@dataclass
+class SegmentTask:
+    """One segment's classification inside a ``PhysicalPlan``."""
+    seg: object                 # Segment
+    meta: dict                  # the meta snapshot the classification used
+    path_class: str
+    count: int = None           # META_COUNT: precomputed match count
+    postings: tuple = None      # POSTINGS: one int32 id array per rule
+
+
+@dataclass
+class PhysicalPlan:
+    """Per-query physical plan: logical path + per-segment classifications.
+
+    ``tasks`` preserves segment order, so copy-mode materialization
+    concatenates record batches in the same order as the legacy paths."""
+    query: object
+    path: str                   # chosen logical path
+    flux: object = None         # FluxSievePlan (fluxsieve path only)
+    tasks: list = field(default_factory=list)
+
+    def class_counts(self) -> dict:
+        out = {}
+        for t in self.tasks:
+            out[t.path_class] = out.get(t.path_class, 0) + 1
+        return out
+
+    def tasks_of(self, path_class: str) -> list:
+        return [t for t in self.tasks if t.path_class == path_class]
+
+
+class QueryPlanner:
+    """Builds ``PhysicalPlan``s.  The mapper is consulted by the engine
+    (its ``FluxSievePlan`` arrives pre-built via ``flux``) so planning cost
+    here is pure metadata classification."""
+
+    def __init__(self, mapper=None):
+        self.mapper = mapper
+
+    # -- logical path selection (was QueryEngine._fallback_path) -----------
+    def logical_path(self, query, segments, *, path: str = "auto",
+                     flux=None) -> str:
+        if path != "auto":
+            return path
+        if flux is not None:
+            return "fluxsieve"
+        if segments and all(s.has_text_index(f) for f, _ in query.terms
+                            for s in segments):
+            return "text_index"
+        return "full_scan"
+
+    # -- planning -----------------------------------------------------------
+    def plan(self, query, segments, *, path: str = "auto", flux=None,
+             cache: bool = True) -> PhysicalPlan:
+        chosen = self.logical_path(query, segments, path=path, flux=flux)
+        if chosen == "fluxsieve" and flux is None:
+            raise ValueError("query not covered by registered rules; "
+                             "no fluxsieve plan")
+        plan = PhysicalPlan(query=query, path=chosen,
+                            flux=flux if chosen == "fluxsieve" else None)
+        for seg in segments:
+            if chosen == "fluxsieve":
+                plan.tasks.append(self.classify(seg, query, flux, cache))
+            else:
+                cls = TEXT_INDEX if chosen == "text_index" else FULL_SCAN
+                plan.tasks.append(SegmentTask(seg=seg, meta=seg.meta,
+                                              path_class=cls))
+        return plan
+
+    def classify(self, seg, query, flux, cache: bool = True) -> SegmentTask:
+        """Classify ONE segment for the fluxsieve path against a single
+        ``seg.meta`` snapshot (also the executor's re-plan entry after a
+        mid-query maintenance swap invalidates a task)."""
+        meta = seg.meta
+        # consistency: records ingested before a rule existed -> full scan
+        if not flux.covers_segment(seg, meta):
+            return SegmentTask(seg=seg, meta=meta, path_class=FALLBACK)
+        # zone-map pruning: segment-level OR of bitmaps lacks a needed bit
+        zone = meta.get("rule_bitmap_any")
+        if zone is not None:
+            zone = np.asarray(zone, np.uint32)
+            for mask in flux.masks:
+                # widths may differ across engine generations; a bit beyond
+                # the segment's bitmap width cannot be set in any record
+                k = min(len(zone), len(mask))
+                if not (zone[:k] & mask[:k]).any():
+                    return SegmentTask(seg=seg, meta=meta, path_class=PRUNED)
+        # single-rule count: answered from per-segment metadata, zero I/O
+        if query.mode == "count" and len(flux.rule_ids) == 1:
+            c = seg.rule_count(flux.rule_ids[0], meta)
+            if c is not None:
+                return SegmentTask(seg=seg, meta=meta, path_class=META_COUNT,
+                                   count=int(c))
+        # seal-time rule postings (sparse inverted index over the bitmap)
+        postings = [seg.rule_postings(rid, cache=cache)
+                    for rid in flux.rule_ids]
+        if all(p is not None for p in postings):
+            return SegmentTask(seg=seg, meta=meta, path_class=POSTINGS,
+                               postings=tuple(postings))
+        return SegmentTask(seg=seg, meta=meta, path_class=BITMAP)

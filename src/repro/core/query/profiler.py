@@ -35,6 +35,11 @@ class QueryProfiler:
         self.hot_seconds = hot_seconds
         self._stats: dict = {}      # (field, term) -> PredicateStats
         self._segment_heat: dict = {}   # segment_id -> fallback seconds
+        # physical path-class accounting (planner/executor split): how many
+        # segments each class served, across how many queries, and the
+        # latency share attributed to it — the observability hook for
+        # "which physical path is actually burning time"
+        self._class_stats: dict = {}    # class -> {queries, segments, seconds}
         self._lock = threading.Lock()
 
     # -- ingestion (engine calls this per query) --------------------------
@@ -57,6 +62,22 @@ class QueryProfiler:
                 for sid in ids:
                     self._segment_heat[sid] = (
                         self._segment_heat.get(sid, 0.0) + share_seg)
+            # per-path-class accounting: latency attributed by segment share
+            classes = getattr(result, "path_classes", None) or {}
+            total = sum(classes.values()) or 1
+            for cls, nseg in classes.items():
+                st = self._class_stats.setdefault(
+                    cls, {"queries": 0, "segments": 0, "seconds": 0.0})
+                st["queries"] += 1
+                st["segments"] += nseg
+                st["seconds"] += result.latency_s * (nseg / total)
+
+    def path_class_stats(self) -> dict:
+        """class -> {queries, segments, seconds}: how often each physical
+        path class served segments and the query-latency share attributed
+        to it (by segment count)."""
+        with self._lock:
+            return {cls: dict(st) for cls, st in self._class_stats.items()}
 
     def segment_heat(self) -> dict:
         """segment_id -> cumulative seconds spent on fallback scans."""

@@ -115,6 +115,8 @@ class Segment:
     _text_index: dict = field(default_factory=dict)  # field -> {token: ids}
     _rule_postings: dict = None     # str(rule_id) -> int32 ids (None = absent)
     _rule_counts: tuple = None      # (source object, {int id: count}) cache
+    _meta_gen: int = 0              # bumped on every enrichment swap / cache
+                                    # drop; see meta_token()
     path: Path = None               # spill directory (None = memory only)
     # serializes cold-load cache fills against apply_update: without it a
     # reader could np.load the OLD file, get descheduled across a swap, and
@@ -126,6 +128,17 @@ class Segment:
     @property
     def column_names(self) -> tuple:
         return tuple(self.meta["columns"])
+
+    def meta_token(self) -> tuple:
+        """Identity of this segment's current enrichment state, usable as a
+        cache key by holders of derived artifacts (the query executor's
+        device-resident column cache keys on it).  ``apply_update`` and
+        ``drop_caches`` both bump the generation, so a maintenance swap or a
+        cold-run cache drop can never serve a stale derived array: the old
+        token simply stops being produced.  Segment ids are monotonic and
+        never reused (compaction allocates fresh ids), so tokens are unique
+        across segment objects of one store."""
+        return (self.segment_id, self._meta_gen)
 
     def column(self, name: str, *, cache: bool = True) -> np.ndarray:
         """Read one column; ``cache=False`` models a cold read (load from
@@ -262,6 +275,11 @@ class Segment:
             if text_index is not None:
                 self._text_index.update(text_index)
             self.meta = {**self.meta, **meta_updates}
+            # token bump strictly AFTER the meta flip: a racing reader that
+            # observes the new generation is guaranteed to also observe the
+            # new meta/columns (install happens-before flip happens-before
+            # bump), so nothing stale can ever be cached under a live token
+            self._meta_gen += 1
             if self.path is not None:
                 _atomic_write_text(self.path / "meta.json", json.dumps(
                     {**self.meta, "segment_id": self.segment_id,
@@ -293,6 +311,10 @@ class Segment:
             self._columns = {}
             self._text_index = {}
             self._rule_postings = None
+            # cold-run semantics extend to device residency: bumping the
+            # token invalidates any device-cached copy of our columns, so a
+            # cold query re-reads from disk (and is accounted as such)
+            self._meta_gen += 1
 
     def nbytes(self, names=None) -> int:
         names = names or self.column_names
@@ -351,6 +373,53 @@ def _load_index(path: Path) -> dict:
     offsets = np.concatenate([[0], np.cumsum(z["lengths"])])
     flat = z["flat"]
     return {t: flat[offsets[i]:offsets[i + 1]] for i, t in enumerate(tokens)}
+
+
+class DeviceColumnCache:
+    """Device-resident per-segment column cache for the query executor.
+
+    Keys are ``(Segment.meta_token(), column_name)``: maintenance-plane
+    swaps (``apply_update``) and cold-run cache drops both bump the token,
+    so a stale device array can never be returned for a fresh query — the
+    old key simply stops being asked for and ages out of the LRU.  Hot
+    queries that hit here skip the H2D re-upload entirely.
+
+    Thread-safe: the engine is shared across concurrent query clients."""
+
+    def __init__(self, max_entries: int = 256):
+        self.max_entries = max_entries
+        self._entries = {}              # (token, name) -> device array
+        self._order = []                # LRU, oldest first
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, token: tuple, name: str):
+        key = (token, name)
+        with self._lock:
+            arr = self._entries.get(key)
+            if arr is None:
+                self.misses += 1
+                return None
+            self.hits += 1
+            self._order.remove(key)
+            self._order.append(key)
+            return arr
+
+    def put(self, token: tuple, name: str, arr) -> None:
+        key = (token, name)
+        with self._lock:
+            if key not in self._entries:
+                self._order.append(key)
+            self._entries[key] = arr
+            while len(self._order) > self.max_entries:
+                old = self._order.pop(0)
+                del self._entries[old]
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._order.clear()
 
 
 class SegmentStore:

@@ -24,6 +24,72 @@ def _kernel(bm_ref, q_ref, match_ref, count_ref):
     count_ref[0, 0] = jnp.sum(any_hit.astype(jnp.int32))
 
 
+def _query_kernel(bm_ref, q_ref, match_ref):
+    # conjunctive multi-mask predicate: AND over the P masks of "any bit in
+    # common".  P is static, so the loop unrolls into 2-D VPU ops (no 3-D
+    # broadcast — friendlier to the TPU lowering than a (blk, P, W) tensor).
+    bm = bm_ref[...]                                         # (blk, W)
+    ok = None
+    for p in range(q_ref.shape[0]):
+        hit_p = jnp.any((bm & q_ref[p][None, :]) != 0, axis=1)
+        ok = hit_p if ok is None else (ok & hit_p)
+    match_ref[...] = ok.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def bitmap_query_kernel(bitmaps, masks, *, block_n: int = BLOCK_N,
+                        interpret: bool = True):
+    """bitmaps: (N, W) uint32 (N % block_n == 0); masks: (P, W) uint32.
+    Returns match (N,) int32 — 1 where the record satisfies EVERY mask
+    (AND across predicates, any-bit within each).  One grid pass over the
+    stacked enrichment column; the multi-segment query executor feeds all
+    bitmap-scan segments of a query through this in a single dispatch."""
+    N, W = bitmaps.shape
+    P = masks.shape[0]
+    assert N % block_n == 0
+    grid = (N // block_n,)
+    return pl.pallas_call(
+        _query_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, W), lambda i: (i, 0)),
+            pl.BlockSpec((P, W), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.int32),
+        interpret=interpret,
+    )(bitmaps, masks)
+
+
+def _word_query_kernel(cols_ref, bits_ref, match_ref):
+    hit = (cols_ref[...] & bits_ref[...]) != 0               # (blk, P)
+    match_ref[...] = jnp.all(hit, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def bitmap_word_query_kernel(cols, bits, *, block_n: int = BLOCK_N,
+                             interpret: bool = True):
+    """cols: (N, P) uint32 pre-gathered bitmap word columns (N % block_n
+    == 0); bits: (P,) uint32 single-word masks.  Returns match (N,) int32 —
+    the word-sliced fast path of ``bitmap_query_kernel``: the executor
+    gathers only the words a query touches, so HBM traffic is N*P words
+    instead of N*W."""
+    N, P = cols.shape
+    assert N % block_n == 0
+    grid = (N // block_n,)
+    return pl.pallas_call(
+        _word_query_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, P), lambda i: (i, 0)),
+            pl.BlockSpec((1, P), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.int32),
+        interpret=interpret,
+    )(cols, bits[None])
+
+
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def bitmap_filter_kernel(bitmaps, query, *, block_n: int = BLOCK_N,
                          interpret: bool = True):

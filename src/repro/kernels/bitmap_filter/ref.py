@@ -12,3 +12,21 @@ def bitmap_filter_ref(bitmaps, query):
 
 def bitmap_count_ref(bitmaps, query):
     return bitmap_filter_ref(bitmaps, query).sum(dtype=jnp.int32)
+
+
+def bitmap_query_ref(bitmaps, masks):
+    """Conjunctive predicate: bitmaps (N, W) uint32, masks (P, W) uint32.
+    A record matches when EVERY mask has at least one set bit in common with
+    the record's bitmap (AND across predicates, OR within one mask) — the
+    query engine's Q4-style multi-term semantics.  Returns (N,) bool."""
+    hit = (bitmaps[:, None, :] & masks[None, :, :]) != 0     # (N, P, W)
+    return jnp.all(jnp.any(hit, axis=2), axis=1)
+
+
+def bitmap_word_query_ref(cols, bits):
+    """Word-sliced conjunctive predicate: cols (N, P) uint32 — the P
+    pre-gathered bitmap WORD columns a query actually touches — and bits
+    (P,) uint32 single-word masks.  Equivalent to ``bitmap_query_ref``
+    whenever every predicate mask fits one word (always true for the
+    engine's single-rule predicates), at 1/W the memory traffic."""
+    return jnp.all((cols & bits[None, :]) != 0, axis=1)

@@ -8,6 +8,8 @@ from repro.core.automaton import compile_rules, match_oracle
 from repro.core.patterns import Rule, RuleSet
 from repro.core.records import encode_texts
 from repro.kernels.bitmap_filter.ops import (bitmap_count, bitmap_match,
+                                             bitmap_query_stacked,
+                                             bitmap_query_words,
                                              bitmap_select)
 from repro.kernels.bitmap_filter.ref import bitmap_filter_ref
 from repro.kernels.dfa_scan.ops import dfa_scan
@@ -113,6 +115,47 @@ def test_bitmap_filter_shapes(n, w):
     np.testing.assert_array_equal(got, want)
     cnt = bitmap_count(jnp.asarray(bm), jnp.asarray(query), backend="pallas")
     assert int(cnt) == int(want.sum())
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("p", [1, 2, 3])
+def test_bitmap_query_stacked_multi_segment(backend, p):
+    """The multi-segment conjunctive entries (full-width masks AND the
+    word-sliced fast path) agree with the numpy AND-of-any semantics across
+    ragged segment sizes, and padded rows/slots never contribute."""
+    rng = np.random.default_rng(p * 10 + (backend == "pallas"))
+    lens = [int(rng.integers(1, 40)) for _ in range(4)]
+    N, W = sum(lens), 3
+    bm = rng.integers(0, 2**32, size=(N, W), dtype=np.uint32)
+    bm[rng.random(N) < 0.5] = 0
+    rids = rng.choice(W * 32, size=p, replace=False)
+    masks = np.zeros((p, W), np.uint32)
+    for i, r in enumerate(rids):
+        masks[i, r // 32] = np.uint32(1) << np.uint32(r % 32)
+    row_seg = np.repeat(np.arange(4, dtype=np.int32), lens)
+    want = (((bm[:, None, :] & masks[None]) != 0).any(-1)).all(-1)
+    want_counts = [int(want[row_seg == s].sum()) for s in range(4)]
+
+    m, c = bitmap_query_stacked(jnp.asarray(bm), jnp.asarray(masks),
+                                jnp.asarray(row_seg), num_segments=4,
+                                backend=backend, block_n=8)
+    np.testing.assert_array_equal(np.asarray(m)[:N], want)
+    assert not np.asarray(m)[N:].any()          # padded rows never match
+    assert np.asarray(c)[:4].tolist() == want_counts
+    assert not np.asarray(c)[4:].any()          # padded slots stay zero
+
+    words = jnp.asarray((rids // 32).astype(np.int32))
+    cols = jnp.asarray(np.ascontiguousarray(bm[:, np.asarray(rids) // 32]))
+    bits = jnp.asarray(masks[np.arange(p), np.asarray(rids) // 32])
+    m2, c2 = bitmap_query_words(cols, bits, jnp.asarray(row_seg),
+                                num_segments=4, backend=backend, block_n=8)
+    np.testing.assert_array_equal(np.asarray(m2)[:N], want)
+    assert np.asarray(c2)[:4].tolist() == want_counts
+    m3, c3 = bitmap_query_words(cols, bits, jnp.asarray(row_seg),
+                                num_segments=4, backend=backend, block_n=8,
+                                with_counts=False)
+    np.testing.assert_array_equal(np.asarray(m3)[:N], want)
+    assert c3 is None
 
 
 def test_bitmap_select_compaction():

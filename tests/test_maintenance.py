@@ -522,3 +522,108 @@ def test_scheduler_enforces_budget():
     sched2 = MaintenanceScheduler(None, MaintenancePolicy(
         max_records_per_cycle=250))
     assert len(sched2.plan_cycle(segs)) == 2
+
+
+# ---------------------------------------------------------------------------
+# Review-finding fixes: poll_target commit discipline, compactor failure
+# memory, dtype/width-aware compaction grouping
+# ---------------------------------------------------------------------------
+
+def test_poll_target_keeps_transiently_failed_older_candidate(tmp_path):
+    """When the NEWEST notification is permanently invalid and an older one
+    fails transiently, neither offset may be committed: once the older
+    artifact heals, the worker must still be able to install it (and the
+    newest keeps being retried on top)."""
+    w = make_world(tmp_path, num_records=2000, segment_size=1000)
+    h1 = activate_late_rule(w)
+    extra = w["full"].with_rules(
+        [Rule(w["full"].num_rules, "extra", "XZneedleXZ",
+              fields=("content1",))])
+    h2 = w["updater"].submit(extra, asynchronous=False)
+    assert h2.published
+    blobs = {}
+    for h in (h1, h2):
+        key = ("engines/matcher", h.ref.version)
+        data, meta = w["ostore"]._mem[key]
+        blobs[key] = (data, meta)
+        w["ostore"]._mem[key] = (data[:-40] + b"x" * 40, meta)
+
+    worker = BackfillWorker(w["store"], w["bus"], w["ostore"])
+    worker.run_cycle()
+    assert worker._target is None                # nothing installable
+
+    # the OLDER artifact heals: it must still be fetchable (not forfeited
+    # by a premature commit) and becomes the installed target
+    key1 = ("engines/matcher", h1.ref.version)
+    w["ostore"]._mem[key1] = blobs[key1]
+    rep = worker.run_until_converged()
+    assert worker._target is not None
+    assert worker._target.version == h1.version
+    assert rep.segments_backfilled == len(w["store"].segments)
+
+    # the newest stays uncommitted and wins once it heals too
+    key2 = ("engines/matcher", h2.ref.version)
+    w["ostore"]._mem[key2] = blobs[key2]
+    worker.run_until_converged()
+    assert worker._target.version == h2.version
+
+
+def _append_text_segment(store, texts, width):
+    n = len(texts)
+    base = store.num_records
+    store.append(RecordBatch({
+        "timestamp": np.arange(base, base + n, dtype=np.int64),
+        "content1": encode_texts(texts, width)}))
+    store.seal()
+
+
+def test_compactor_schema_compare_includes_dtype_and_width(tmp_path):
+    """Mixed text_width segments share column NAMES but not widths; a
+    name-only compare would group them and np.concatenate would raise every
+    cycle.  Grouping must key on {name: (dtype, shape[1:])}."""
+    store = SegmentStore(segment_size=1000, root=tmp_path)
+    _append_text_segment(store, ["a"] * 3, 32)
+    _append_text_segment(store, ["b"] * 3, 32)
+    _append_text_segment(store, ["c"] * 3, 64)
+    _append_text_segment(store, ["d"] * 3, 64)
+    comp = Compactor(store, min_records=10, target_records=100)
+    groups = [[s.segment_id for s in g] for g in comp.candidate_groups()]
+    assert groups == [[0, 1], [2, 3]]
+    rep = comp.run_cycle()
+    assert rep.merges == 2 and rep.merges_failed == 0
+    assert [s.num_records for s in store.segments] == [6, 6]
+
+
+def test_compactor_failure_memory(tmp_path):
+    """A permanently failing merge group is deprioritized (not fully
+    re-read and re-failed every cycle) while fresh groups exist, retried
+    when idle, and forgiven once it heals — mirroring the BackfillWorker's
+    _failed_ids discipline."""
+    store = SegmentStore(segment_size=1000, root=tmp_path)
+    for texts in (["a"] * 3, ["b"] * 3):         # group A (ids 0, 1)
+        _append_text_segment(store, texts, 32)
+    _append_text_segment(store, ["big"] * 50, 32)  # not small: splits runs
+    for texts in (["c"] * 3, ["d"] * 3):         # group B (ids 3, 4)
+        _append_text_segment(store, texts, 32)
+    victim = store.segments[0]
+    victim.drop_caches()
+    good_bytes = (victim.path / "content1.npy").read_bytes()
+    (victim.path / "content1.npy").write_bytes(b"corrupt")
+
+    comp = Compactor(store, min_records=10, target_records=100)
+    rep1 = comp.run_cycle()                      # A fails, B merges
+    assert rep1.merges == 1 and rep1.merges_failed == 1
+
+    for texts in (["e"] * 3, ["f"] * 3):         # fresh group appears
+        _append_text_segment(store, texts, 32)
+    rep2 = comp.run_cycle()                      # fresh merged, A NOT re-read
+    assert rep2.merges == 1 and rep2.merges_failed == 0
+    assert {0, 1} <= {s.segment_id for s in store.segments}
+
+    rep3 = comp.run_cycle()                      # idle: A retried, fails
+    assert rep3.merges == 0 and rep3.merges_failed == 1
+
+    (victim.path / "content1.npy").write_bytes(good_bytes)  # heals
+    rep4 = comp.run_cycle()
+    assert rep4.merges == 1 and rep4.merges_failed == 0
+    assert not comp._failed_keys

@@ -1,0 +1,307 @@
+"""Planner/executor split tests: randomized lane equivalence (the stacked
+device executors vs the pre-refactor numpy path vs the scan baselines),
+physical path-class accounting, the device-resident column cache and its
+invalidation by maintenance swaps / cold runs, mid-query meta-swap
+re-planning, and the one-D2H-per-query discipline under jax's transfer
+guard."""
+import numpy as np
+import pytest
+
+from repro.core.matcher import compile_bundle
+from repro.core.patterns import Rule, RuleSet
+from repro.core.query import executor as executor_mod
+from repro.core.query.engine import Query, QueryEngine
+from repro.core.query.mapper import QueryMapper
+from repro.core.query.planner import (BITMAP, FALLBACK, META_COUNT, POSTINGS,
+                                      PRUNED)
+from repro.core.query.store import SegmentStore
+from repro.core.stream_processor import StreamProcessor
+from repro.data.generator import LogGenerator, WorkloadSpec
+
+# two deliberately DENSE rules (single letters hit most vocab words): their
+# posting lists are suppressed by the density cut, so queries over them land
+# in the bitmap-scan class — the stacked-dispatch path under test
+DENSE_TERMS = (("content1", "a"), ("content1", "e"))
+
+
+def build_ragged_world(tmp_path, *, seed=0, num_records=4000, late=False):
+    """Planted workload ingested into RAGGED segments (sizes drawn per
+    seal), with planted selective rules + two dense rules.  ``late=True``
+    holds one planted rule out of the ingest-time ruleset but registers it
+    with the mapper afterwards — every segment then predates it, so queries
+    on it exercise the consistency-fallback class on every segment."""
+    spec = WorkloadSpec(num_records=num_records, ultra_rate=1e-3,
+                        high_rate=1e-2, seed=seed, text_width=256)
+    gen = LogGenerator(spec)
+    rules = [Rule(i, t.term, t.term, fields=(t.fieldname,))
+             for i, t in enumerate(spec.planted)]
+    base = len(rules)
+    for j, (f, term) in enumerate(DENSE_TERMS):
+        rules.append(Rule(base + j, f"dense{j}", term, fields=(f,)))
+    full = RuleSet(tuple(rules))
+    late_rule = rules[0]
+    ingest_rs = full.without_ids([late_rule.rule_id]) if late else full
+    proc = StreamProcessor(compile_bundle(ingest_rs, spec.content_fields))
+    store = SegmentStore(segment_size=10**9, root=tmp_path,
+                         index_fields=spec.content_fields,
+                         version_rules=proc.version_rules)
+    rng = np.random.default_rng(seed + 99)
+    start = 0
+    while start < num_records:
+        n = int(rng.integers(300, 900))
+        n = min(n, num_records - start)
+        store.append(proc.process(gen.batch(start, n)))
+        store.seal()
+        start += n
+    mapper = QueryMapper(ingest_rs, version_id=0)
+    if late:
+        mapper.notify(full, version_id=1)
+    return spec, gen, store, mapper
+
+
+def make_engines(store, mapper):
+    return {
+        "numpy": QueryEngine(store, mapper=mapper, backend="numpy"),
+        "ref": QueryEngine(store, mapper=mapper, backend="ref"),
+        "pallas": QueryEngine(store, mapper=mapper, backend="pallas",
+                              block_n=256),
+        "ref+dfa": QueryEngine(store, mapper=mapper, backend="ref",
+                               scan_backend="dfa_ref", block_n=64),
+    }
+
+
+def queries(spec):
+    ultra = next(t for t in spec.planted
+                 if t.fieldname == "content1" and t.rate < 1e-2)
+    high1 = next(t for t in spec.planted
+                 if t.fieldname == "content1" and t.rate >= 1e-2)
+    high2 = next(t for t in spec.planted
+                 if t.fieldname == "content2" and t.rate >= 1e-2)
+    return {
+        "q2_ultra_copy": Query(terms=((ultra.fieldname, ultra.term),),
+                               mode="copy"),
+        "q3_high_count": Query(terms=((high1.fieldname, high1.term),),
+                               mode="count"),
+        "q3_dense_count": Query(terms=DENSE_TERMS, mode="count"),
+        "q4_mixed_copy": Query(terms=((high1.fieldname, high1.term),
+                                      (high2.fieldname, high2.term)),
+                               mode="copy"),
+        "q4_dense_copy": Query(terms=(DENSE_TERMS[0],
+                                      ("content2", high2.term)),
+                               mode="copy"),
+    }
+
+
+def result_fingerprint(r):
+    ts = (tuple(np.sort(r.records.columns["timestamp"]).tolist())
+          if r.records is not None and r.records.columns else ())
+    return (r.count, r.segments_scanned, r.segments_pruned,
+            r.segments_fallback, r.bytes_read, tuple(sorted(r.fallback_ids)),
+            ts)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_randomized_lane_equivalence(tmp_path, seed):
+    """All executor lanes (numpy oracle, stacked jnp, stacked pallas, dfa
+    full scans) agree on count, materialized records, bytes_read, and
+    pruned/fallback accounting across Q1-Q4 shapes, ragged segments, and
+    cold/hot runs — and match the untouched scan baselines."""
+    spec, gen, store, mapper = build_ragged_world(tmp_path, seed=seed)
+    engines = make_engines(store, mapper)
+    baseline = engines["numpy"]
+    for qname, q in queries(spec).items():
+        for cold in (True, False):
+            if not cold:
+                # lanes share one store: pre-warm the host cache so every
+                # hot lane sees identical residency (the first hot reader
+                # would otherwise pay — and retain — the disk read alone)
+                baseline.execute(q, path="fluxsieve")
+            want = None
+            for lane, engine in engines.items():
+                r = engine.execute(q, path="fluxsieve", cold=cold)
+                got = result_fingerprint(r)
+                if want is None:
+                    want = got
+                else:
+                    assert got == want, (qname, lane, cold, got, want)
+            # anchored to the untouched substring-scan baseline
+            r_scan = baseline.execute(q, path="full_scan")
+            assert want[0] == r_scan.count, (qname, want[0], r_scan.count)
+    # planted truth for the single-term queries
+    ultra = next(t for t in spec.planted
+                 if t.fieldname == "content1" and t.rate < 1e-2)
+    r = engines["ref"].execute(
+        Query(terms=((ultra.fieldname, ultra.term),), mode="count"),
+        path="fluxsieve")
+    assert r.count == gen.true_count(ultra)
+
+
+@pytest.mark.parametrize("seed", [3, 4])
+def test_randomized_equivalence_under_fallback(tmp_path, seed):
+    """Every segment predates the queried rule: the whole store serves via
+    consistency fallback, and the dfa-backed scan lane must agree with the
+    numpy substring lane byte-for-byte."""
+    spec, gen, store, mapper = build_ragged_world(tmp_path, seed=seed,
+                                                  late=True)
+    engines = make_engines(store, mapper)
+    t = spec.planted[0]
+    for mode in ("count", "copy"):
+        q = Query(terms=((t.fieldname, t.term),), mode=mode)
+        fps = {lane: result_fingerprint(e.execute(q, path="fluxsieve"))
+               for lane, e in engines.items()}
+        assert len(set(fps.values())) == 1, fps
+        r = engines["ref"].execute(q, path="fluxsieve")
+        assert r.segments_fallback == len(store.segments)
+        assert r.count == gen.true_count(t)
+        assert r.path_classes == {FALLBACK: len(store.segments)}
+
+
+def test_plan_classes(tmp_path):
+    """The planner's per-segment classification covers all enriched path
+    classes and is reflected in QueryResult.path_classes."""
+    spec, gen, store, mapper = build_ragged_world(tmp_path, seed=5)
+    engine = QueryEngine(store, mapper=mapper, backend="ref")
+    ultra = next(t for t in spec.planted
+                 if t.fieldname == "content1" and t.rate < 1e-2)
+    # single selective rule, count mode: pruned or metadata-count everywhere
+    q = Query(terms=((ultra.fieldname, ultra.term),), mode="count")
+    plan = engine.plan(q, path="fluxsieve")
+    counts = plan.class_counts()
+    assert set(counts) <= {PRUNED, META_COUNT}
+    assert sum(counts.values()) == len(store.segments)
+    r = engine.execute(q, path="fluxsieve")
+    assert r.path_classes == counts
+    # selective copy: postings class on unpruned segments
+    plan_copy = engine.plan(Query(terms=((ultra.fieldname, ultra.term),),
+                                  mode="copy"), path="fluxsieve")
+    assert set(plan_copy.class_counts()) <= {PRUNED, POSTINGS}
+    # dense conjunction: bitmap-scan class everywhere
+    plan_dense = engine.plan(Query(terms=DENSE_TERMS, mode="count"),
+                             path="fluxsieve")
+    assert plan_dense.class_counts() == {BITMAP: len(store.segments)}
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_single_d2h_per_query(tmp_path, backend):
+    """The batched bitmap-scan class performs exactly ONE device-to-host
+    transfer per query: the counted executor hook fires once per execute,
+    and jax's transfer guard proves no implicit D2H sneaks in."""
+    import jax
+    spec, gen, store, mapper = build_ragged_world(tmp_path, seed=6,
+                                                  num_records=2500)
+    engine = QueryEngine(store, mapper=mapper, backend=backend, block_n=256)
+    q_count = Query(terms=DENSE_TERMS, mode="count")
+    q_copy = Query(terms=DENSE_TERMS, mode="copy")
+    truth = engine.execute(q_count, path="full_scan").count
+    engine.execute(q_count, path="fluxsieve")       # warmup/compile
+    engine.execute(q_copy, path="fluxsieve")
+    before = executor_mod.transfer_count()
+    with jax.transfer_guard_device_to_host("disallow"):
+        for _ in range(2):
+            r = engine.execute(q_count, path="fluxsieve")
+            rc = engine.execute(q_copy, path="fluxsieve")
+    assert executor_mod.transfer_count() - before == 4
+    assert r.count == truth and rc.count == truth
+    assert r.path_classes == {BITMAP: len(store.segments)}
+
+
+def test_device_cache_hot_skip_and_invalidation(tmp_path):
+    """Hot queries serve the stacked bitmap from device residency (no disk
+    bytes, no re-upload); a maintenance meta swap invalidates exactly the
+    swapped segment; cold runs re-read and re-account everything."""
+    spec, gen, store, mapper = build_ragged_world(tmp_path, seed=7,
+                                                  num_records=2500)
+    engine = QueryEngine(store, mapper=mapper, backend="ref")
+    ex = engine.executor
+    q = Query(terms=DENSE_TERMS, mode="count")
+    r_cold = engine.execute(q, path="fluxsieve", cold=True)
+    assert r_cold.bytes_read > 0
+    r_warm = engine.execute(q, path="fluxsieve")    # uploads + caches stack
+    r_hot = engine.execute(q, path="fluxsieve")     # stack-cache hit
+    assert r_hot.bytes_read == 0
+    assert r_hot.count == r_cold.count == r_warm.count
+    assert len(ex._stacks) == 1
+    misses0 = ex.device_cache.misses
+    hits0 = ex.device_cache.hits
+    # maintenance swap on ONE segment: stack key changes; re-gather hits the
+    # device cache for unchanged segments and re-uploads only the swapped one
+    store.segments[0].apply_update(meta_updates={})
+    r_swap = engine.execute(q, path="fluxsieve")
+    assert r_swap.count == r_cold.count
+    assert ex.device_cache.misses == misses0 + 1
+    assert ex.device_cache.hits >= hits0 + len(store.segments) - 1
+    # cold run: token bump drops device residency; disk bytes re-accounted
+    r_cold2 = engine.execute(q, path="fluxsieve", cold=True)
+    assert r_cold2.bytes_read == r_cold.bytes_read
+
+
+def test_mid_query_meta_swap_replans(tmp_path):
+    """A plan whose snapshots were ALL invalidated by maintenance swaps
+    between planning and execution is re-planned per segment — results stay
+    correct and nothing degrades to fallback (the re-plan sees equivalent
+    metadata)."""
+    spec, gen, store, mapper = build_ragged_world(tmp_path, seed=8,
+                                                  num_records=2500)
+    engine = QueryEngine(store, mapper=mapper, backend="ref")
+    q = Query(terms=DENSE_TERMS, mode="copy")
+    truth = engine.execute(q, path="full_scan").count
+    plan = engine.plan(q, path="fluxsieve")
+    for seg in store.segments:                      # swap EVERY snapshot
+        seg.apply_update(meta_updates={})
+    res = engine._run(plan, cache=True)
+    assert res.count == truth
+    assert res.segments_fallback == 0
+    assert res.path_classes == {BITMAP: len(store.segments)}
+
+
+def test_fallback_full_scan_returns_directly_after_swap(tmp_path):
+    """Satellite fix: a consistency-fallback full scan never reads
+    enrichment state, so its result is returned directly even when the
+    segment meta swaps mid-query — one fallback per segment, no re-scan."""
+    spec, gen, store, mapper = build_ragged_world(tmp_path, seed=9,
+                                                  num_records=2000,
+                                                  late=True)
+    engine = QueryEngine(store, mapper=mapper, backend="ref")
+    t = spec.planted[0]
+    q = Query(terms=((t.fieldname, t.term),), mode="count")
+    plan = engine.plan(q, path="fluxsieve")
+    assert plan.class_counts() == {FALLBACK: len(store.segments)}
+    for seg in store.segments:
+        seg.apply_update(meta_updates={})           # swap under the plan
+    res = engine._run(plan, cache=True)
+    assert res.count == engine.execute(q, path="full_scan").count
+    assert res.segments_fallback == len(store.segments)
+    assert res.segments_scanned == len(store.segments)
+
+
+def test_profiler_path_class_stats(tmp_path):
+    from repro.core.query.profiler import QueryProfiler
+    spec, gen, store, mapper = build_ragged_world(tmp_path, seed=10,
+                                                  num_records=2000)
+    prof = QueryProfiler()
+    engine = QueryEngine(store, mapper=mapper, profiler=prof, backend="ref")
+    engine.execute(Query(terms=DENSE_TERMS, mode="count"), path="fluxsieve")
+    ultra = next(t for t in spec.planted
+                 if t.fieldname == "content1" and t.rate < 1e-2)
+    engine.execute(Query(terms=((ultra.fieldname, ultra.term),),
+                         mode="count"), path="fluxsieve")
+    stats = prof.path_class_stats()
+    assert stats[BITMAP]["segments"] == len(store.segments)
+    assert stats[BITMAP]["queries"] == 1
+    assert set(stats) <= {BITMAP, PRUNED, META_COUNT, POSTINGS}
+    assert all(st["seconds"] >= 0 for st in stats.values())
+
+
+def test_workers_threaded_equivalence(tmp_path):
+    """Intra-query parallelism (workers > 1) returns identical results on
+    the host-path classes, with the stacked class unaffected."""
+    spec, gen, store, mapper = build_ragged_world(tmp_path, seed=11,
+                                                  num_records=2500,
+                                                  late=True)
+    e1 = QueryEngine(store, mapper=mapper, backend="ref")
+    e4 = QueryEngine(store, mapper=mapper, backend="ref", workers=4)
+    t = spec.planted[0]
+    for q in (Query(terms=((t.fieldname, t.term),), mode="copy"),
+              Query(terms=DENSE_TERMS, mode="count")):
+        assert result_fingerprint(e1.execute(q, path="fluxsieve")) == \
+            result_fingerprint(e4.execute(q, path="fluxsieve"))
