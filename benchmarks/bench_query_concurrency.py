@@ -1,6 +1,7 @@
-"""Query-plane benchmark: planner/executor lanes + concurrent clients.
+"""Query-plane benchmark: planner/executor lanes + concurrent clients +
+arrangement-sharing regimes.
 
-Two parts, one shared world (planted workload + 1000 rules, plus two
+Three parts, one shared world (planted workload + 1000 rules, plus two
 deliberately DENSE rules whose posting lists are suppressed by the density
 cut — queries over them land in the batched bitmap-scan class):
 
@@ -12,7 +13,14 @@ cut — queries over them land in the batched bitmap-scan class):
     latency per physical path class and per lane (the paper's Figs 6-9
     intra-query-parallelism axis, now inter-query) — the stacked executors
     release the GIL inside the single device dispatch, which is where the
-    p99 win over the per-segment numpy loop comes from.
+    p99 win over the per-segment numpy loop comes from;
+  * the ``shared-arrangement`` lanes: the same N-client mix with device
+    state held ``private`` (one ArrangementStore per client — the PR 3
+    per-query-cache regime, N device copies + N uploads of every word
+    column) vs ``shared`` (all clients lease ONE refcounted arrangement
+    plane) vs ``shared+sharded`` (shared plane + sharded query workers);
+    each lane reports H2D bytes, device-memory high-water, and per-column
+    upload multiplicity alongside p50/p99.
 """
 from __future__ import annotations
 
@@ -98,6 +106,36 @@ def _dominant_class(result) -> str:
     return result.path or "none"
 
 
+def _run_clients(engine_for, qlist, *, clients, rounds, seed_base=0):
+    """N client threads over a shuffled query mix against
+    ``engine_for(cid)``; -> ((dominant path class, seconds) samples, wall
+    seconds).  Shared by the lane comparison and the sharing-regime
+    parts so their timing harnesses cannot diverge."""
+    samples, lock = [], threading.Lock()
+
+    def client(cid):
+        eng = engine_for(cid)
+        rng = np.random.default_rng(seed_base + cid)
+        seq = [q for _ in range(rounds) for q in qlist]
+        rng.shuffle(seq)
+        local = []
+        for q in seq:
+            t0 = time.perf_counter()
+            r = eng.execute(q, path="fluxsieve")
+            local.append((_dominant_class(r), time.perf_counter() - t0))
+        with lock:
+            samples.extend(local)
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return samples, time.perf_counter() - t0
+
+
 def run(*, num_records: int = 120_000, segment_size: int = 10_000,
         clients: int = 12, rounds: int = 6, runs_hot: int = 7) -> list:
     tmp = tempfile.mkdtemp(prefix="query-conc-")
@@ -124,30 +162,9 @@ def run(*, num_records: int = 120_000, segment_size: int = 10_000,
     for lane, eng in engines.items():
         for q in qs.values():                     # warm caches + jit traces
             eng.execute(q, path="fluxsieve")
-        samples = []                              # (path class, seconds)
-        lock = threading.Lock()
-
-        def client(cid, eng=eng, samples=samples, lock=lock):
-            rng = np.random.default_rng(cid)
-            seq = [q for _ in range(rounds) for q in qs.values()]
-            rng.shuffle(seq)
-            local = []
-            for q in seq:
-                t0 = time.perf_counter()
-                r = eng.execute(q, path="fluxsieve")
-                local.append((_dominant_class(r),
-                              time.perf_counter() - t0))
-            with lock:
-                samples.extend(local)
-
-        threads = [threading.Thread(target=client, args=(i,))
-                   for i in range(clients)]
-        t0 = time.perf_counter()
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
-        wall = time.perf_counter() - t0
+        samples, wall = _run_clients(lambda cid, eng=eng: eng,
+                                     list(qs.values()),
+                                     clients=clients, rounds=rounds)
         by_class: dict = {}
         for cls, dt in samples:
             by_class.setdefault(cls, []).append(dt)
@@ -176,6 +193,60 @@ def run(*, num_records: int = 120_000, segment_size: int = 10_000,
                 if m.name == f"query_concurrency/c{clients}/{lane}/all":
                     m.derived["p99_vs_numpy"] = \
                         f"{p99_all['numpy'] / p99_all[lane]:.2f}x"
+
+    # -- part 3: arrangement-sharing regimes under the same client mix -----
+    mapper = engines["ref"].mapper
+    qlist = list(qs.values())
+    for lane, mk in (
+            ("private", lambda: [QueryEngine(store, mapper=mapper,
+                                             backend="ref")
+                                 for _ in range(clients)]),
+            ("shared", lambda: [QueryEngine(store, mapper=mapper,
+                                            backend="ref")] * clients),
+            ("shared+sharded", lambda: [QueryEngine(store, mapper=mapper,
+                                                    backend="ref",
+                                                    shards=4)] * clients),
+    ):
+        lane_engines = mk()
+        for q in qlist:             # jit warm only; arrangements stay cold
+            lane_engines[0].execute(q, path="fluxsieve")
+        for e in lane_engines:
+            e.arrangements.publish()        # drop + reset residency so the
+            e.arrangements.uploads.clear()  # measured run pays every upload
+            e.arrangements.h2d_bytes = 0
+            e.arrangements.device_bytes_peak = e.arrangements.device_bytes
+        samples, wall = _run_clients(
+            lambda cid, engines=lane_engines: engines[cid], qlist,
+            clients=clients, rounds=rounds, seed_base=1000)
+        stores = {id(e.arrangements): e.arrangements for e in lane_engines}
+        h2d = sum(s.h2d_bytes for s in stores.values())
+        peak = sum(s.device_bytes_peak for s in stores.values())
+        # upload multiplicity per word column ACROSS stores: the private
+        # regime pays one upload per client, the shared plane exactly one
+        from collections import Counter
+        comb = Counter()
+        for s in stores.values():
+            for k, v in s.upload_counts().items():
+                comb[k] += v
+        up = list(comb.values())
+        lats = np.asarray([dt for _, dt in samples])
+        blats = np.asarray([dt for cls, dt in samples if cls == "bitmap"])
+        rows.append(Measurement(
+            name=f"query_arrangement/c{clients}/{lane}",
+            median_s=float(np.percentile(lats, 50)),
+            ci_lo=float(np.percentile(lats, 25)),
+            ci_hi=float(np.percentile(lats, 75)),
+            runs=len(lats),
+            derived={"p99_us": f"{float(np.percentile(lats, 99)) * 1e6:.1f}",
+                     "bitmap_p99_us":
+                         f"{float(np.percentile(blats, 99)) * 1e6:.1f}"
+                         if len(blats) else "n/a",
+                     "qps": f"{len(lats) / wall:.0f}",
+                     "h2d_mb": f"{h2d / 1e6:.2f}",
+                     "devmem_peak_mb": f"{peak / 1e6:.2f}",
+                     "uploads_per_column":
+                         f"{max(up) if up else 0}",
+                     "clients": clients}))
     return rows
 
 

@@ -232,6 +232,7 @@ class BackfillWorker:
             todo = self.scheduler.plan_cycle(todo)
         if max_segments is not None:
             todo = todo[:max_segments]
+        healed = []
         for seg in todo:
             # per-segment isolation: one bad segment (corrupt spill file,
             # truncated column) must not crash the worker or stall the rest.
@@ -252,6 +253,12 @@ class BackfillWorker:
                 rep.bytes_rewritten += seg.nbytes([ENRICH_COLUMN])
                 self._failed_ids.discard(seg.segment_id)
                 self._pending_ids.discard(seg.segment_id)
+                healed.append(seg.segment_id)
+        if healed and self.scheduler is not None:
+            # backfill-aware pruning stats: installed segments no longer
+            # serve fallback scans — drop their stale heat so the next
+            # cycle prioritizes segments still burning query time
+            self.scheduler.notify_backfilled(healed)
         # sealed segments with no enrichment column can never converge —
         # surface them instead of silently treating them as done
         rep.segments_skipped = sum(

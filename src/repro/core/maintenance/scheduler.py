@@ -28,6 +28,14 @@ class MaintenanceScheduler:
         self.profiler = profiler
         self.policy = policy or MaintenancePolicy()
 
+    def notify_backfilled(self, segment_ids) -> None:
+        """Re-run the heat accounting after a backfill install: freshly
+        covered segments stop looking hot (their fallback seconds predate
+        the coverage), so the next cycle's ordering reflects segments that
+        are STILL burning query time, not ones already healed."""
+        if self.profiler is not None:
+            self.profiler.clear_segment_heat(tuple(segment_ids))
+
     def order(self, segments: list) -> list:
         """Hottest (most fallback-scanned) first; ties oldest-id first so
         cold historical segments still drain deterministically."""

@@ -1,8 +1,10 @@
-from repro.core.query.store import (DeviceColumnCache, Segment,  # noqa: F401
-                                    SegmentStore)
+from repro.core.query.store import Segment, SegmentStore  # noqa: F401
+from repro.core.query.arrangement import (ArrangementLease,  # noqa: F401
+                                          ArrangementStore)
 from repro.core.query.engine import Query, QueryEngine, QueryResult  # noqa: F401
 from repro.core.query.planner import (PATH_CLASSES, PhysicalPlan,  # noqa: F401
                                       QueryPlanner, SegmentTask)
-from repro.core.query.executor import PlanExecutor  # noqa: F401
+from repro.core.query.executor import (PlanExecutor,  # noqa: F401
+                                       ShardedQueryExecutor)
 from repro.core.query.mapper import QueryMapper  # noqa: F401
 from repro.core.query.profiler import QueryProfiler  # noqa: F401

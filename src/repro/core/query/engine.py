@@ -19,8 +19,10 @@ Execution is split into a logical **planner** (``query.planner``) that
 consults the mapper/zone-maps/metadata once and classifies every segment
 into a physical path class, and a batched **executor** (``query.executor``)
 that runs all bitmap-scan segments as ONE stacked device dispatch with one
-D2H transfer per query, serves hot runs from a device-resident column
-cache, and re-plans segments the maintenance plane swapped mid-query.
+D2H transfer per query, leases hot device state from the SHARED
+refcounted arrangement plane (``query.arrangement`` — one upload per word
+column per maintenance epoch across ALL concurrent queries and shards),
+and re-plans segments the maintenance plane swapped mid-query.
 Consistency (paper §3.4 step 4) is preserved: records ingested under an
 engine version that did not know a rule fall back to full scan for that
 segment (hybrid execution), so enrichment never changes results.
@@ -33,7 +35,9 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.records import RecordBatch
-from repro.core.query.executor import PlanExecutor, substring_scan  # noqa: F401 — substring_scan re-exported
+from repro.core.query.arrangement import ArrangementStore
+from repro.core.query.executor import (PlanExecutor, ShardedQueryExecutor,
+                                       substring_scan)  # noqa: F401 — substring_scan re-exported
 from repro.core.query.planner import PhysicalPlan, QueryPlanner
 from repro.core.query.store import Segment, SegmentStore  # noqa: F401
 
@@ -76,24 +80,50 @@ class QueryEngine:
     dispatch, default), ``"pallas"`` (stacked Pallas kernel), ``"numpy"``
     (pre-refactor per-segment word tests — the equivalence oracle).
     ``scan_backend`` (e.g. ``"dfa_ref"``) routes full-scan fallbacks through
-    throwaway compiled DFA engines.  ``workers`` > 1 scans host-path
+    throwaway compiled DFA engines (fused backends batch ALL scan segments
+    of a query into one dispatch).  ``workers`` > 1 scans host-path
     segments concurrently (numpy releases the GIL in the vectorized
-    kernels) — the intra-query parallelism axis of the paper's Figs 6-9."""
+    kernels) — the intra-query parallelism axis of the paper's Figs 6-9.
+
+    Device state is the SHARED arrangement plane: pass one
+    ``arrangements=ArrangementStore()`` to every engine over a store (or
+    share one engine) and concurrent queries lease a single refcounted
+    device copy per (segment set, word subset) — uploaded once per
+    maintenance epoch.  The engine subscribes the arrangement store to the
+    segment store's maintenance feed, so ``apply_update`` / compaction /
+    cold-run drops publish epochs instead of invalidating under readers.
+    ``shards`` > 1 turns on the sharded query workers: ``plan.tasks``
+    partition by segment across a pool (identities
+    ``{worker_id}/shard-{i}``), each shard dispatching and re-planning
+    independently against the shared arrangements."""
 
     def __init__(self, store: SegmentStore, *, mapper=None, profiler=None,
                  workers: int = 1, backend: str = "ref",
                  scan_backend: str = None, block_n: int = 1024,
-                 interpret: bool = True, device_cache=None,
-                 stack_cache_size: int = 8):
+                 interpret: bool = True, arrangements: ArrangementStore = None,
+                 device_counts="auto", shards: int = 1,
+                 worker_id: str = "query-0"):
         self.store = store
         self.mapper = mapper          # QueryMapper (None -> no fluxsieve path)
         self.profiler = profiler
         self.workers = workers
         self.planner = QueryPlanner(mapper)
-        self.executor = PlanExecutor(
+        self.arrangements = arrangements or ArrangementStore()
+        # maintenance swaps publish epochs to the shared device plane
+        store.subscribe_maintenance(self.arrangements.publish)
+        self.plan_executor = PlanExecutor(
             backend=backend, scan_backend=scan_backend, block_n=block_n,
-            interpret=interpret, workers=workers, device_cache=device_cache,
-            stack_cache_size=stack_cache_size)
+            interpret=interpret, workers=workers,
+            arrangements=self.arrangements, device_counts=device_counts)
+        self.executor = (ShardedQueryExecutor(self.plan_executor,
+                                              shards=shards,
+                                              worker_id=worker_id)
+                         if shards > 1 else self.plan_executor)
+
+    def close(self) -> None:
+        """Release the shard worker pool (no-op for unsharded engines)."""
+        if isinstance(self.executor, ShardedQueryExecutor):
+            self.executor.close()
 
     # -- public ------------------------------------------------------------
     def plan(self, query: Query, *, path: str = "auto",

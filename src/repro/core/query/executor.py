@@ -1,35 +1,45 @@
-"""Physical plan executor — batched, device-resident query execution.
+"""Physical plan executor — shared-arrangement device plane, batched
+dispatch, sharded workers.
 
 The executor turns a ``PhysicalPlan`` into per-segment results with the
 same single-dispatch discipline PR 2 brought to ingest, now on the read
-side:
+side — and, since the shared-arrangement refactor, with ONE device copy of
+the data across ALL in-flight queries:
 
-  * ALL ``bitmap``-class segments of a query are concatenated on N (with a
-    per-row segment-slot vector) and matched against the query's
-    conjunctive mask set in ONE stacked device dispatch through the
-    ``bitmap_filter`` kernels; exactly one counted D2H transfer per query
-    brings back the match mask, from which per-segment counts (count
-    mode) or ids (copy mode) derive on the host — accelerators can flip
-    to the device-side count reduction via
-    ``bitmap_query_words(with_counts=True)``;
-  * uploaded enrichment columns live in a device-resident
-    ``DeviceColumnCache`` keyed by ``Segment.meta_token()``, and the fully
-    stacked (concatenated + padded) array is LRU-cached per segment-subset
-    key, so hot queries skip the H2D re-upload entirely; maintenance-plane
-    swaps and cold-run cache drops bump the token and invalidate both;
-  * ``fallback``/``full_scan`` segments route through throwaway DFA
-    engines (query terms compiled to literal rules, reusing the ingest
-    matcher stack) when ``scan_backend`` is set, else through the
-    vectorized numpy substring scan;
+  * ALL ``bitmap``-class segments of a query are matched against the
+    query's conjunctive mask set in ONE stacked device dispatch through
+    the ``bitmap_filter`` kernels; exactly one counted D2H transfer per
+    query brings back the match mask (or, on real accelerators, the
+    device-reduced per-segment counts — ``device_counts``);
+  * the stacked word-column arrays live in a shared, refcounted,
+    epoch-versioned ``ArrangementStore`` (``query.arrangement``): every
+    query leases its arrangement RAII-style, concurrent queries over the
+    same (segment set, word subset) coalesce onto one device copy — each
+    word column is uploaded once per maintenance epoch, not once per
+    query — and maintenance swaps *publish a new epoch* instead of
+    invalidating anything under a reader;
+  * ``fallback``/``full_scan`` segments batch through one fused
+    throwaway-DFA dispatch per query (``dfa_scan_fused`` via the ingest
+    ``FusedMatcher`` stack) when ``scan_backend`` supports fusion, else
+    through the vectorized numpy substring scan per segment;
   * enriched-path results are validated against the meta snapshot their
     classification used; segments swapped mid-query by the maintenance
     plane are re-planned individually.  Full-scan results are returned
     directly — they never read enrichment state, so a concurrent swap
     cannot invalidate them.
 
+``ShardedQueryExecutor`` partitions ``plan.tasks`` by segment identity
+across a worker pool: each shard runs its own stacked dispatch against the
+shared arrangement plane (leases carry the shard's worker identity, the
+same scheme the maintenance plane uses to attribute work) and re-plans
+swapped segments independently; the merge step reassembles per-segment
+results in plan order, so counters and ``path_class_stats`` aggregate
+exactly as in the single-worker path.
+
 ``backend="numpy"`` preserves the pre-refactor per-segment numpy execution
-(bit tests on single bitmap words) behind the same planner — the
-equivalence oracle and the honest baseline lane in benchmarks.
+(bit tests on single bitmap words, no batching, no sharing) behind the
+same planner — the equivalence oracle and the honest baseline lane in
+benchmarks.
 """
 from __future__ import annotations
 
@@ -39,10 +49,10 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core.stream_processor import ENRICH_COLUMN
+from repro.core.query.arrangement import ArrangementItem, ArrangementStore
 from repro.core.query.planner import (BITMAP, FALLBACK, FULL_SCAN,
                                       META_COUNT, POSTINGS, PRUNED,
                                       TEXT_INDEX)
-from repro.core.query.store import DeviceColumnCache
 
 # -- device->host accounting -------------------------------------------------
 # The batched bitmap path performs exactly ONE D2H transfer per query; tests
@@ -92,15 +102,20 @@ class PlanExecutor:
     ``ref`` (stacked jnp dispatch), ``pallas`` (stacked Pallas kernel).
     ``scan_backend`` (e.g. ``"dfa_ref"``/``"dfa"``) routes full scans
     through throwaway compiled matchers instead of the numpy substring
-    scan.  Thread-safe; ``workers > 1`` scans host-path segments
-    concurrently (the intra-query parallelism axis of Figs 6-9)."""
+    scan (fused-capable backends batch all scan segments into one
+    dispatch).  ``device_counts`` selects the device-side per-segment
+    count reduction for count-mode queries: ``"auto"`` enables it on real
+    accelerators only (on XLA CPU the scatter reduction measurably costs
+    more than transferring the mask — PR 3), ``True``/``False`` force it.
+    Thread-safe; ``workers > 1`` scans host-path segments concurrently
+    (the intra-query parallelism axis of Figs 6-9)."""
 
     MAX_SNAPSHOT_RETRIES = 3
 
     def __init__(self, *, backend: str = "ref", scan_backend: str = None,
                  block_n: int = 1024, interpret: bool = True,
-                 workers: int = 1, device_cache: DeviceColumnCache = None,
-                 stack_cache_size: int = 8):
+                 workers: int = 1, arrangements: ArrangementStore = None,
+                 device_counts="auto"):
         if backend not in ("numpy", "ref", "pallas"):
             raise ValueError(f"unknown executor backend {backend!r}")
         self.backend = backend
@@ -108,27 +123,35 @@ class PlanExecutor:
         self.block_n = block_n
         self.interpret = interpret
         self.workers = workers
-        self.device_cache = device_cache or DeviceColumnCache()
-        self.stack_cache_size = stack_cache_size
-        self._stacks = {}               # (tokens, words) -> (stack, row_seg,
-        self._stack_order = []          #                      lens)
-        self._stack_lock = threading.Lock()
+        self.arrangements = arrangements or ArrangementStore()
+        self.device_counts = device_counts
         self._masks = {}                # rule_ids -> device word-bit vector
+        self._mask_lock = threading.Lock()
         self._scan_engines = {}         # (query key, fields) -> matchers
+        self._scan_fused = {}           # (query key, backend) -> FusedMatcher
         self._scan_lock = threading.Lock()
 
     # -- entry ---------------------------------------------------------------
-    def execute(self, plan, planner, *, cache: bool = True) -> list:
+    def execute(self, plan, planner, *, cache: bool = True,
+                owner: str = "query") -> list:
         """-> [(ids, TaskStats)] parallel to ``plan.tasks``; ids is None
-        (pruned), an int (metadata count), or an int32 id array."""
+        (pruned), an int (metadata count), or an int32 id array.
+        ``owner`` tags arrangement leases (shard worker identity)."""
         tasks = plan.tasks
         results = [None] * len(tasks)
         if self.backend != "numpy":
             idx = [i for i, t in enumerate(tasks) if t.path_class == BITMAP]
             if idx:
                 for i, r in zip(idx, self._run_stacked(
-                        plan, [tasks[i] for i in idx], cache)):
+                        plan, [tasks[i] for i in idx], cache, owner)):
                     results[i] = r      # None -> snapshot swapped, re-plan
+            idx = [i for i, t in enumerate(tasks)
+                   if results[i] is None
+                   and t.path_class in (FALLBACK, FULL_SCAN)]
+            if len(idx) > 1 and self._fused_scan_capable(plan.query):
+                for i, r in zip(idx, self._run_scans_batched(
+                        plan, [tasks[i] for i in idx], cache)):
+                    results[i] = r
 
         remaining = [i for i in range(len(tasks)) if results[i] is None]
 
@@ -146,58 +169,64 @@ class PlanExecutor:
         return results
 
     # -- stacked bitmap class (single device dispatch, single D2H) -----------
-    def _run_stacked(self, plan, tasks, cache: bool) -> list:
+    def _use_device_counts(self) -> bool:
+        if self.device_counts == "auto":
+            import jax
+            self.device_counts = jax.default_backend() not in ("cpu",)
+        return bool(self.device_counts)
+
+    def _run_stacked(self, plan, tasks, cache: bool, owner: str) -> list:
         from repro.kernels.bitmap_filter.ops import bitmap_query_words
-        import jax.numpy as jnp
 
         # the plan's word-sliced encoding: one (word, bit) pair per
-        # single-rule predicate.  The gather happens once at stack build;
-        # traffic per hot query is N*P words (what the numpy path reads),
-        # not N*W.
+        # single-rule predicate.  Traffic per hot query is N*P words (what
+        # the numpy path reads), not N*W.
         words, bits_np = plan.flux.word_slices()
         stats = [TaskStats(path_class=BITMAP) for _ in tasks]
-        key = (tuple(t.seg.meta_token() for t in tasks), words)
-        entry = self._stack_get(key) if cache else None
-        if entry is None:
-            # stack build (once per segment subset + word set, then
-            # device-resident): gather the word columns host-side, upload,
-            # concatenate on N, pre-bucket.  All eager device ops live
-            # HERE, off the hot path — a hot query is one jitted dispatch
-            # plus one D2H.
-            parts, lens = [], []
-            for t, st in zip(tasks, stats):
-                parts.append(self._device_words(t.seg, words, cache, st))
-                lens.append(int(t.seg.num_records))
-            stack = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
-            row_seg = np.repeat(np.arange(len(tasks), dtype=np.int32), lens)
-            from repro.kernels.dfa_scan.ops import bucket_n
-            n_pad = bucket_n(stack.shape[0], self.block_n)
-            if n_pad != stack.shape[0]:
-                stack = jnp.pad(stack, ((0, n_pad - stack.shape[0]), (0, 0)))
-                row_seg = np.pad(row_seg, (0, n_pad - len(row_seg)))
-            entry = (stack, jnp.asarray(row_seg), tuple(lens))
-            if cache:
-                self._stack_put(key, entry)
-        stack, row_seg, lens = entry
-        bits = self._device_bits(plan.flux.rule_ids, bits_np)
-        copy_mode = plan.query.mode == "copy"
-        match_dev, _ = bitmap_query_words(
-            stack, bits, row_seg, num_segments=len(tasks),
-            backend="pallas" if self.backend == "pallas" else "ref",
-            block_n=self.block_n, interpret=self.interpret,
-            with_counts=False)
-        # the ONE counted D2H per query: the padded match mask; per-segment
-        # counts/ids derive from host slices (on XLA CPU a device-side
-        # scatter reduction costs more than transferring the mask — see
-        # bitmap_query_words(with_counts=...) for the accelerator trade)
-        match = _to_host(match_dev)
+        # tokens are read here, BEFORE any host column load, so a racing
+        # maintenance swap can only pool new data under an already-dead
+        # token — the snapshot validation below decides result validity
+        items = [ArrangementItem(
+            token=t.seg.meta_token(), num_records=int(t.seg.num_records),
+            load=self._host_loader(t.seg, cache, st))
+            for t, st in zip(tasks, stats)]
+        if cache:
+            lease = self.arrangements.lease(items, words,
+                                            block_n=self.block_n,
+                                            owner=owner)
+        else:       # cold run: private build, pays (and accounts) its I/O
+            lease = self.arrangements.build_ephemeral(
+                items, words, block_n=self.block_n, owner=owner)
+        try:
+            arr = lease.arrangement
+            bits = self._device_bits(plan.flux.rule_ids, bits_np)
+            copy_mode = plan.query.mode == "copy"
+            with_counts = not copy_mode and self._use_device_counts()
+            match_dev, counts_dev = bitmap_query_words(
+                arr.stack, bits, arr.row_seg, num_segments=len(tasks),
+                backend="pallas" if self.backend == "pallas" else "ref",
+                block_n=self.block_n, interpret=self.interpret,
+                with_counts=with_counts)
+            # the ONE counted D2H per query: on accelerators the
+            # device-side segment_sum shrinks it from N bytes to S ints;
+            # on XLA CPU the mask transfer is the measured win
+            if with_counts:
+                counts = np.asarray(_to_host(counts_dev))[:len(tasks)]
+                match = None
+            else:
+                match = _to_host(match_dev)
+            lens = arr.lens
+        finally:
+            lease.release()
         out, off = [], 0
-        for t, st, n in zip(tasks, stats, lens):
+        for slot, (t, st, n) in enumerate(zip(tasks, stats, lens)):
             if t.seg.meta is not t.meta:
                 out.append(None)        # swapped mid-query: re-plan this one
             else:
                 st.scanned += 1
-                if copy_mode:
+                if match is None:
+                    ids = int(counts[slot])
+                elif copy_mode:
                     ids = np.flatnonzero(match[off:off + n]).astype(np.int32)
                 else:
                     ids = int(np.count_nonzero(match[off:off + n]))
@@ -205,57 +234,91 @@ class PlanExecutor:
             off += n
         return out
 
+    def _host_loader(self, seg, cache: bool, stats: TaskStats):
+        """Host bitmap read for an arrangement build, accounting disk bytes
+        to the query that actually triggered the upload."""
+        def load():
+            in_mem = ENRICH_COLUMN in seg._columns
+            host = seg.column(ENRICH_COLUMN, cache=cache)
+            if not in_mem:
+                stats.bytes_read += host.nbytes
+            return np.asarray(host)
+        return load
+
     def _device_bits(self, rule_ids: tuple, bits_np: np.ndarray):
         """Device-resident per-predicate word masks, cached per rule-id
         tuple (content is a pure function of it)."""
         import jax.numpy as jnp
-        with self._stack_lock:
+        with self._mask_lock:
             bits = self._masks.get(rule_ids)
         if bits is None:
             bits = jnp.asarray(bits_np)
-            with self._stack_lock:
+            with self._mask_lock:
                 if len(self._masks) > 64:       # bound growth
                     self._masks.clear()
                 self._masks[rule_ids] = bits
         return bits
 
-    def _device_words(self, seg, words: tuple, cache: bool,
-                      stats: TaskStats):
-        """Device-resident gathered word columns of the enrichment bitmap.
-        The token is read BEFORE the host column so a racing maintenance
-        swap can only file new data under an already-dead token, never
-        stale data under a live one."""
-        import jax.numpy as jnp
-        token = seg.meta_token()
-        name = f"{ENRICH_COLUMN}@{','.join(map(str, words))}"
-        dev = self.device_cache.get(token, name) if cache else None
-        if dev is None:
-            in_mem = ENRICH_COLUMN in seg._columns
-            host = seg.column(ENRICH_COLUMN, cache=cache)
-            if not in_mem:
-                stats.bytes_read += host.nbytes
-            sub = np.ascontiguousarray(np.asarray(host)[:, list(words)])
-            dev = jnp.asarray(sub)                       # the only H2D
-            if cache:
-                self.device_cache.put(token, name, dev)
-        return dev
+    # -- batched fallback / full scans (one fused DFA dispatch per query) ----
+    def _fused_scan_capable(self, query) -> bool:
+        from repro.core.matcher import FUSED_BACKENDS
+        return (self.scan_backend in FUSED_BACKENDS
+                and all(t for _, t in query.terms))
 
-    def _stack_get(self, key):
-        with self._stack_lock:
-            entry = self._stacks.get(key)
-            if entry is not None:
-                self._stack_order.remove(key)
-                self._stack_order.append(key)
-            return entry
+    def _run_scans_batched(self, plan, tasks, cache: bool) -> list:
+        """ALL fallback/full-scan segments of one query, stacked on N and
+        matched in one throwaway-DFA fused dispatch (the scan-path analogue
+        of the stacked bitmap class): per-field text columns concatenate
+        across segments, ``dfa_scan_fused`` runs once, and per-segment ids
+        slice out of the combined bitmap on the host.  Full scans never
+        read enrichment state, so results return directly — no snapshot
+        re-validation (same contract as the per-segment path)."""
+        from repro.core.enrichment import rule_mask
+        query = plan.query
+        stats = []
+        for t in tasks:
+            st = TaskStats(path_class=t.path_class, scanned=1)
+            if t.path_class == FALLBACK:
+                st.fallback = 1
+                st.fallback_ids = (t.seg.segment_id,)
+            stats.append(st)
+        fused = self._scan_fused_matcher(query)
+        fields = tuple(sorted({f for f, _ in query.terms}))
+        lens = [int(t.seg.num_records) for t in tasks]
+        cols = {}
+        for f in fields:
+            parts = [np.asarray(self._read(t.seg, f, cache, st))
+                     for t, st in zip(tasks, stats)]
+            L = max(p.shape[1] for p in parts)
+            parts = [np.pad(p, ((0, 0), (0, L - p.shape[1])))
+                     if p.shape[1] < L else p for p in parts]
+            cols[f] = np.concatenate(parts)
+        bm, _ = fused.match_batch(cols, fields, sum(lens)).to_host()
+        need = rule_mask(range(len(query.terms)), len(query.terms))
+        k = min(bm.shape[1], len(need))
+        keep = ((bm[:, :k] & need[None, :k]) == need[None, :k]).all(axis=1)
+        out, off = [], 0
+        for st, n in zip(stats, lens):
+            out.append((np.flatnonzero(keep[off:off + n]).astype(np.int32),
+                        st))
+            off += n
+        return out
 
-    def _stack_put(self, key, entry) -> None:
-        with self._stack_lock:
-            if key not in self._stacks:
-                self._stack_order.append(key)
-            self._stacks[key] = entry
-            while len(self._stack_order) > self.stack_cache_size:
-                old = self._stack_order.pop(0)
-                del self._stacks[old]
+    def _scan_fused_matcher(self, query):
+        from repro.core.matcher import FusedMatcher
+        key = (query.key(), self.scan_backend)
+        with self._scan_lock:
+            fused = self._scan_fused.get(key)
+        if fused is None:
+            bundle = self._scan_bundle(query)
+            fused = FusedMatcher(bundle, backend=self.scan_backend,
+                                 block_n=self.block_n,
+                                 interpret=self.interpret)
+            with self._scan_lock:
+                if len(self._scan_fused) > 64:
+                    self._scan_fused.clear()
+                self._scan_fused[key] = fused
+        return fused
 
     # -- per-segment paths ---------------------------------------------------
     def _run_task(self, plan, planner, task, cache: bool) -> tuple:
@@ -352,18 +415,22 @@ class PlanExecutor:
                 == need[None, :bm.shape[1]]).all(axis=1)
         return np.flatnonzero(keep)
 
-    def _scan_matchers(self, query) -> dict:
-        from repro.core.matcher import build_matchers, compile_bundle
+    def _scan_bundle(self, query):
+        from repro.core.matcher import compile_bundle
         from repro.core.patterns import Rule, RuleSet, escape
+        rules = tuple(Rule(i, f"q{i}", escape(term), fields=(f,))
+                      for i, (f, term) in enumerate(query.terms))
+        fields = tuple(sorted({f for f, _ in query.terms}))
+        return compile_bundle(RuleSet(rules), fields)
+
+    def _scan_matchers(self, query) -> dict:
+        from repro.core.matcher import build_matchers
         key = (query.key(), self.scan_backend)
         with self._scan_lock:
             matchers = self._scan_engines.get(key)
         if matchers is None:
-            rules = tuple(Rule(i, f"q{i}", escape(term), fields=(f,))
-                          for i, (f, term) in enumerate(query.terms))
-            fields = tuple(sorted({f for f, _ in query.terms}))
-            bundle = compile_bundle(RuleSet(rules), fields)
-            matchers = build_matchers(bundle, backend=self.scan_backend,
+            matchers = build_matchers(self._scan_bundle(query),
+                                      backend=self.scan_backend,
                                       block_n=self.block_n,
                                       interpret=self.interpret)
             with self._scan_lock:
@@ -378,3 +445,74 @@ class PlanExecutor:
         if not in_mem:
             stats.bytes_read += col.nbytes
         return col
+
+
+class ShardedQueryExecutor:
+    """Sharded query workers over the shared arrangement plane.
+
+    ``plan.tasks`` partition by segment identity (``segment_id % shards``,
+    stable across repeated queries so each shard's arrangement stays hot)
+    onto a persistent worker pool; every shard runs its own stacked
+    dispatch — leasing from the SAME ``ArrangementStore``, so sharding
+    multiplies concurrency, not device copies — and re-plans segments the
+    maintenance plane swapped under it independently of its siblings.  The
+    merge step reassembles per-segment ``(ids, TaskStats)`` into plan
+    order, so counts, counters, and ``path_class_stats`` aggregate exactly
+    as in the single-worker executor.
+
+    Worker identity reuses the maintenance plane's scheme
+    (``{worker_id}/shard-{i}``): arrangement leases are attributed per
+    shard, so a leak or a pinned epoch names the worker that owes it."""
+
+    def __init__(self, executor: PlanExecutor, *, shards: int = 4,
+                 worker_id: str = "query-0"):
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        self.executor = executor
+        self.shards = shards
+        self.worker_id = worker_id
+        self.worker_idents = tuple(f"{worker_id}/shard-{i}"
+                                   for i in range(shards))
+        from concurrent.futures import ThreadPoolExecutor
+        self._pool = ThreadPoolExecutor(
+            max_workers=shards, thread_name_prefix=f"{worker_id}-shard")
+
+    def close(self) -> None:
+        """Shut the shard worker pool down (idle threads exit).  Called on
+        finalization too, so churning engines does not accumulate
+        process-lifetime threads."""
+        self._pool.shutdown(wait=False)
+
+    def __del__(self):
+        self.close()
+
+    # mirror the wrapped executor's tuning surface for callers/tests
+    @property
+    def backend(self) -> str:
+        return self.executor.backend
+
+    @property
+    def arrangements(self) -> ArrangementStore:
+        return self.executor.arrangements
+
+    def execute(self, plan, planner, *, cache: bool = True,
+                owner: str = None) -> list:
+        tasks = plan.tasks
+        shard_idx = plan.shard_tasks(self.shards)
+        if len(shard_idx) <= 1:
+            return self.executor.execute(plan, planner, cache=cache,
+                                         owner=owner or self.worker_idents[0])
+
+        def run_shard(k, idx):
+            sub = plan.subplan(idx)
+            return self.executor.execute(
+                sub, planner, cache=cache,
+                owner=self.worker_idents[k % self.shards])
+
+        futures = [self._pool.submit(run_shard, k, idx)
+                   for k, idx in enumerate(shard_idx)]
+        results = [None] * len(tasks)
+        for idx, fut in zip(shard_idx, futures):
+            for i, r in zip(idx, fut.result()):
+                results[i] = r
+        return results

@@ -77,6 +77,27 @@ class PhysicalPlan:
     def tasks_of(self, path_class: str) -> list:
         return [t for t in self.tasks if t.path_class == path_class]
 
+    # -- sharding (the plan is the unit of distribution) -------------------
+    def subplan(self, indices) -> "PhysicalPlan":
+        """A shard's view of this plan: same query/logical path/flux, the
+        given task subset.  Classifications (and their meta snapshots) are
+        shared with the parent, so a shard's snapshot-validate-retry
+        re-plans exactly the segments swapped under IT."""
+        sub = PhysicalPlan(query=self.query, path=self.path, flux=self.flux)
+        sub.tasks = [self.tasks[i] for i in indices]
+        return sub
+
+    def shard_tasks(self, shards: int) -> list:
+        """Partition task indices by segment identity into at most
+        ``shards`` non-empty groups.  Keyed on ``segment_id % shards`` —
+        stable across repeated queries and across seals/compactions of
+        OTHER segments, so each shard's arrangement key (its token subset)
+        stays hot as the store grows."""
+        groups = [[] for _ in range(max(1, shards))]
+        for i, t in enumerate(self.tasks):
+            groups[t.seg.segment_id % len(groups)].append(i)
+        return [g for g in groups if g]
+
 
 class QueryPlanner:
     """Builds ``PhysicalPlan``s.  The mapper is consulted by the engine

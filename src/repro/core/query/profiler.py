@@ -84,6 +84,16 @@ class QueryProfiler:
         with self._lock:
             return dict(self._segment_heat)
 
+    def clear_segment_heat(self, segment_ids) -> None:
+        """Backfill-aware pruning stats: a freshly re-enriched segment no
+        longer serves fallback scans, so its accumulated heat is stale —
+        the BackfillWorker clears it after each install so the
+        MaintenanceScheduler stops prioritizing already-covered segments
+        over genuinely hot ones."""
+        with self._lock:
+            for sid in segment_ids:
+                self._segment_heat.pop(sid, None)
+
     # -- analysis ----------------------------------------------------------
     def hot_predicates(self) -> list:
         """Predicates worth precomputing: frequent AND expensive AND still

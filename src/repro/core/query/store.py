@@ -26,6 +26,7 @@ import os
 import re
 import threading
 import warnings
+import weakref
 from dataclasses import dataclass, field
 from pathlib import Path
 
@@ -123,6 +124,11 @@ class Segment:
     # install the stale array under the NEW metadata — permanently.  The
     # in-cache fast paths stay lock-free (install happens-before meta flip).
     _io_lock: object = field(default_factory=threading.Lock)
+    # maintenance-epoch publication hook (set by the owning SegmentStore):
+    # called with (segment_ids,) AFTER a swap/cache-drop bumps the token, so
+    # shared-arrangement readers retire the old epoch instead of racing a
+    # cache invalidation
+    _on_swap: object = None
 
     # -- column access ---------------------------------------------------
     @property
@@ -285,6 +291,10 @@ class Segment:
                     {**self.meta, "segment_id": self.segment_id,
                      "num_records": self.num_records},
                     default=_json_np))
+        # epoch publication OUTSIDE the io lock (listeners take their own
+        # locks; a listener that re-entered column() must not deadlock)
+        if self._on_swap is not None:
+            self._on_swap((self.segment_id,))
 
     # -- lifecycle ---------------------------------------------------------
     def spill(self, root: Path) -> None:
@@ -315,6 +325,8 @@ class Segment:
             # token invalidates any device-cached copy of our columns, so a
             # cold query re-reads from disk (and is accounted as such)
             self._meta_gen += 1
+        if self._on_swap is not None:
+            self._on_swap((self.segment_id,))
 
     def nbytes(self, names=None) -> int:
         names = names or self.column_names
@@ -375,53 +387,6 @@ def _load_index(path: Path) -> dict:
     return {t: flat[offsets[i]:offsets[i + 1]] for i, t in enumerate(tokens)}
 
 
-class DeviceColumnCache:
-    """Device-resident per-segment column cache for the query executor.
-
-    Keys are ``(Segment.meta_token(), column_name)``: maintenance-plane
-    swaps (``apply_update``) and cold-run cache drops both bump the token,
-    so a stale device array can never be returned for a fresh query — the
-    old key simply stops being asked for and ages out of the LRU.  Hot
-    queries that hit here skip the H2D re-upload entirely.
-
-    Thread-safe: the engine is shared across concurrent query clients."""
-
-    def __init__(self, max_entries: int = 256):
-        self.max_entries = max_entries
-        self._entries = {}              # (token, name) -> device array
-        self._order = []                # LRU, oldest first
-        self._lock = threading.Lock()
-        self.hits = 0
-        self.misses = 0
-
-    def get(self, token: tuple, name: str):
-        key = (token, name)
-        with self._lock:
-            arr = self._entries.get(key)
-            if arr is None:
-                self.misses += 1
-                return None
-            self.hits += 1
-            self._order.remove(key)
-            self._order.append(key)
-            return arr
-
-    def put(self, token: tuple, name: str, arr) -> None:
-        key = (token, name)
-        with self._lock:
-            if key not in self._entries:
-                self._order.append(key)
-            self._entries[key] = arr
-            while len(self._order) > self.max_entries:
-                old = self._order.pop(0)
-                del self._entries[old]
-
-    def clear(self) -> None:
-        with self._lock:
-            self._entries.clear()
-            self._order.clear()
-
-
 class SegmentStore:
     """Append-only columnar store with sealing + spilling."""
 
@@ -441,6 +406,43 @@ class SegmentStore:
         self._active_count = 0
         self._next_id = 0           # monotonic (compaction retires ids)
         self._lock = threading.RLock()
+        # maintenance-epoch listeners (shared-arrangement stores): every
+        # apply_update / drop_caches / replace_segments publishes the
+        # affected segment ids here instead of invalidating caches in place
+        self._maintenance_listeners: list = []
+
+    # -- epoch publication ---------------------------------------------------
+    def subscribe_maintenance(self, fn) -> None:
+        """Register ``fn(segment_ids)`` to be called after every
+        maintenance swap (``Segment.apply_update``), cold-run cache drop,
+        or compaction retire — the shared-arrangement plane's epoch feed
+        (``store.subscribe_maintenance(arrangements.publish)``).
+
+        Idempotent per callable (N engines sharing one ArrangementStore
+        publish ONE epoch per swap, not N), and bound methods are held
+        weakly: a discarded engine's arrangement store is collectable — a
+        store outliving its engines must not pin their device memory."""
+        with self._lock:
+            if any(r() == fn for r in self._maintenance_listeners):
+                return
+            ref = (weakref.WeakMethod(fn) if hasattr(fn, "__self__")
+                   else (lambda f: (lambda: f))(fn))
+            self._maintenance_listeners.append(ref)
+            for s in self.segments:
+                s._on_swap = self._publish_epoch
+
+    def _publish_epoch(self, segment_ids) -> None:
+        dead = False
+        for r in list(self._maintenance_listeners):
+            fn = r()
+            if fn is None:
+                dead = True
+            else:
+                fn(tuple(segment_ids))
+        if dead:
+            with self._lock:
+                self._maintenance_listeners = [
+                    r for r in self._maintenance_listeners if r() is not None]
 
     # -- ingestion ---------------------------------------------------------
     def append(self, batch: RecordBatch) -> None:
@@ -493,7 +495,8 @@ class SegmentStore:
                     idents, batch.columns[ENRICH_COLUMN].shape[1])
         seg = Segment(segment_id=sid, num_records=len(batch), meta=meta,
                       _columns=dict(batch.columns),
-                      _rule_postings=seg_postings)
+                      _rule_postings=seg_postings,
+                      _on_swap=self._publish_epoch)
         for f in self.index_fields:
             if f in batch.columns:
                 seg._text_index[f] = build_text_index(batch.columns[f])
@@ -524,6 +527,10 @@ class SegmentStore:
                 return False
             self.segments = (self.segments[:idx[0]] + [new]
                              + self.segments[idx[0] + len(idx):])
+        # compactor retire is a maintenance epoch: arrangements over the
+        # replaced segments retire (in-flight leases pin them; the old
+        # segment objects and spill files stay valid for those readers)
+        self._publish_epoch([s.segment_id for s in old])
         failed = [s.segment_id for s in old if not self._retire_spill(s)]
         if failed:
             # a live un-tombstoned input would be double-loaded (and its
@@ -569,7 +576,9 @@ class SegmentStore:
         for d in sorted(Path(root).glob("segment-*")):
             if (d / RETIRED_MARKER).exists():
                 continue        # replaced by compaction, kept for readers
-            store.segments.append(Segment.load(d))
+            seg = Segment.load(d)
+            seg._on_swap = store._publish_epoch
+            store.segments.append(seg)
         store._next_id = 1 + max(
             (s.segment_id for s in store.segments), default=-1)
         return store

@@ -1,0 +1,322 @@
+"""Shared-arrangement lifecycle tests: the once-per-epoch upload
+discipline under 12 concurrent clients, refcounted epoch pinning (a reader
+holding an old epoch while maintenance publishes two more), threaded
+lease/publish races, deterministic device-memory accounting, and lease
+leak detection."""
+import gc
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.query.arrangement import (ArrangementItem, ArrangementLease,
+                                          ArrangementStore)
+from repro.core.query.engine import Query, QueryEngine
+from tests.test_query_plan import DENSE_TERMS, build_ragged_world, \
+    result_fingerprint
+
+W = 4          # bitmap words per synthetic segment
+
+
+def _item(sid: int, gen: int, n: int = 8):
+    """Synthetic segment: token (sid, gen); every bitmap word carries the
+    value ``sid * 100 + gen`` so stack contents prove WHICH epoch a reader
+    observed."""
+    val = np.uint32(sid * 100 + gen)
+    return ArrangementItem(
+        token=(sid, gen), num_records=n,
+        load=lambda: np.full((n, W), val, np.uint32))
+
+
+def _stack_host(arr):
+    import jax
+    return np.asarray(jax.device_get(arr.stack))
+
+
+# -- upload discipline under concurrency ------------------------------------
+
+def test_upload_once_per_column_under_12_clients(tmp_path):
+    """The acceptance invariant: 12 concurrent clients over an overlapping
+    word set cost ONE upload per touched word column per maintenance
+    epoch — concurrent leases coalesce onto a single build — and results
+    stay byte-identical with a single-client oracle."""
+    spec, gen, store, mapper = build_ragged_world(tmp_path, seed=21,
+                                                  num_records=2500)
+    engine = QueryEngine(store, mapper=mapper, backend="ref")
+    oracle = QueryEngine(store, mapper=mapper, backend="numpy")
+    qs = [Query(terms=DENSE_TERMS, mode="count"),
+          Query(terms=DENSE_TERMS, mode="copy")]
+    # expected results from the numpy oracle (touches no arrangements), so
+    # the 12 clients below race the shared plane's very first (cold) build
+    want = [result_fingerprint(oracle.execute(q, path="fluxsieve"))
+            for q in qs]
+    errors = []
+
+    def client(cid):
+        try:
+            for _ in range(3):
+                for q, w in zip(qs, want):
+                    r = engine.execute(q, path="fluxsieve")
+                    assert result_fingerprint(r) == w
+        except Exception as e:  # noqa: BLE001
+            errors.append((cid, e))
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(12)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    uploads = engine.arrangements.upload_counts()
+    assert uploads, "expected pooled word-column uploads"
+    assert all(v == 1 for v in uploads.values()), uploads
+    assert engine.arrangements.builds == 1      # one coalesced build
+    assert engine.arrangements.active_leases() == {}
+
+
+def test_sharded_clients_share_one_column_pool(tmp_path):
+    """Sharded execution multiplies concurrency, not device copies: each
+    shard builds its own (sub-)arrangement but every word column still
+    crosses H2D once — the shards lease from ONE ArrangementStore."""
+    spec, gen, store, mapper = build_ragged_world(tmp_path, seed=22,
+                                                  num_records=2500)
+    engine = QueryEngine(store, mapper=mapper, backend="ref", shards=3)
+    q = Query(terms=DENSE_TERMS, mode="count")
+    want = engine.execute(q, path="fluxsieve").count
+    for _ in range(3):
+        assert engine.execute(q, path="fluxsieve").count == want
+    uploads = engine.arrangements.upload_counts()
+    assert all(v == 1 for v in uploads.values()), uploads
+    # every ragged segment contributed its touched word columns exactly once
+    touched = {tok[0] for tok, _ in uploads}
+    assert touched == {s.segment_id for s in store.segments}
+    assert engine.arrangements.active_leases() == {}
+
+
+# -- epoch pinning -----------------------------------------------------------
+
+def test_reader_pins_old_epoch_across_two_publishes():
+    """A lease holding epoch E stays readable (untorn, byte-identical)
+    while maintenance publishes E+1 and E+2; the retired epochs free
+    deterministically — each the moment its last lease releases."""
+    store = ArrangementStore()
+    words = (0, 2)
+    old = store.lease([_item(0, 0), _item(1, 0)], words, block_n=64,
+                      owner="reader-old")
+    bytes_e0 = store.device_bytes
+    assert bytes_e0 > 0
+    # maintenance publishes TWO more epochs while the reader is in flight
+    for g in (1, 2):
+        store.publish([0, 1])
+        mid = store.lease([_item(0, g), _item(1, g)], words, block_n=64,
+                          owner=f"reader-e{g}")
+        host = _stack_host(mid.arrangement)
+        assert host[0, 0] == 0 * 100 + g and host[8, 0] == 1 * 100 + g
+        if g == 1:
+            lease_e1 = mid
+        else:
+            mid.release()
+    assert store.epoch == 2
+    # the pinned epoch-0 image is still exactly epoch 0 — no torn swap
+    host = _stack_host(old.arrangement)
+    assert host[0, 0] == 0 and host[8, 0] == 100
+    assert old.arrangement.retired and lease_e1.arrangement.retired
+    # frees are deterministic and per-epoch: e0 drains, then e1
+    held = store.device_bytes
+    old.release()
+    assert store.device_bytes < held
+    lease_e1.release()
+    store.publish()                 # retire the live e2 arrangement too
+    assert store.device_bytes == 0
+    assert store.live_arrangements() == 0
+    assert store.active_leases() == {}
+
+
+def test_engine_query_pins_epoch_under_maintenance(tmp_path):
+    """Integration flavor of the pin: a lease taken through the executor's
+    own plane survives two Segment.apply_update publications mid-flight,
+    and the engine keeps answering correctly throughout."""
+    spec, gen, store, mapper = build_ragged_world(tmp_path, seed=23,
+                                                  num_records=2000)
+    engine = QueryEngine(store, mapper=mapper, backend="ref")
+    q = Query(terms=DENSE_TERMS, mode="count")
+    truth = engine.execute(q, path="fluxsieve").count
+    arr_store = engine.arrangements
+    key = next(iter(arr_store._live))
+    live = arr_store._live[key]
+    live.refcount += 1              # simulate an in-flight reader
+    pinned = ArrangementLease(live, "in-flight", arr_store)
+    epoch0 = arr_store.epoch
+    store.segments[0].apply_update(meta_updates={})
+    store.segments[0].apply_update(meta_updates={})
+    assert arr_store.epoch == epoch0 + 2
+    assert live.retired and live.stack is not None
+    assert engine.execute(q, path="fluxsieve").count == truth
+    pinned.release()
+    assert live.stack is None       # drained -> freed deterministically
+
+
+# -- threaded races ----------------------------------------------------------
+
+def test_threaded_lease_publish_race():
+    """Readers lease/verify/release while a maintenance thread publishes
+    epoch after epoch: every reader always observes a complete image of
+    the token set it bound (never torn, never freed under it), and the
+    plane drains to zero device bytes afterwards."""
+    store = ArrangementStore()
+    gens = {0: 0, 1: 0}
+    gen_lock = threading.Lock()
+    stop = threading.Event()
+    errors = []
+
+    def reader(rid):
+        try:
+            while not stop.is_set():
+                with gen_lock:
+                    snapshot = dict(gens)
+                items = [_item(s, g) for s, g in sorted(snapshot.items())]
+                lease = store.lease(items, (1,), block_n=64,
+                                    owner=f"reader-{rid}")
+                try:
+                    host = _stack_host(lease.arrangement)
+                    for slot, (s, g) in enumerate(sorted(snapshot.items())):
+                        assert host[slot * 8, 0] == s * 100 + g, \
+                            (slot, host[slot * 8, 0])
+                finally:
+                    lease.release()
+        except Exception as e:  # noqa: BLE001
+            errors.append((rid, e))
+
+    def maintenance():
+        try:
+            for g in range(1, 15):
+                with gen_lock:
+                    gens[0] = g
+                    gens[1] = g
+                store.publish([0, 1])
+        except Exception as e:  # noqa: BLE001
+            errors.append(("maint", e))
+
+    readers = [threading.Thread(target=reader, args=(i,)) for i in range(6)]
+    for t in readers:
+        t.start()
+    m = threading.Thread(target=maintenance)
+    m.start()
+    m.join()
+    stop.set()
+    for t in readers:
+        t.join()
+    assert not errors, errors
+    store.publish()
+    assert store.device_bytes == 0
+    assert store.live_arrangements() == 0
+    assert store.active_leases() == {}
+
+
+# -- leak detection & accounting ---------------------------------------------
+
+def test_lease_leak_detected_at_finalization():
+    store = ArrangementStore()
+    lease = store.lease([_item(0, 0)], (0,), block_n=64, owner="sloppy")
+    assert store.active_leases() == {"sloppy": 1}
+    with pytest.warns(ResourceWarning, match="sloppy"):
+        del lease
+        gc.collect()
+    assert store.leaks == 1
+    assert store.active_leases() == {}
+    store.publish()
+    assert store.device_bytes == 0      # the leaked ref still freed
+
+
+def test_ephemeral_build_counts_no_shared_traffic():
+    store = ArrangementStore()
+    lease = store.build_ephemeral([_item(0, 0)], (0, 1), block_n=64,
+                                  owner="cold")
+    assert store.device_bytes > 0
+    assert store.upload_counts() == {} and store.h2d_bytes == 0
+    host = _stack_host(lease.arrangement)
+    assert host.shape[1] == 2 and host[0, 0] == 0
+    lease.release()
+    assert store.device_bytes == 0
+    assert store.active_leases() == {}
+
+
+def test_publish_during_build_dooms_installed_arrangement():
+    """A maintenance publish that lands while an arrangement is still
+    BUILDING must not let the finished build squat a live slot under dead
+    tokens: it installs retired, stays readable for its lease, and frees
+    the moment the lease drains."""
+    store = ArrangementStore()
+    gate, release = threading.Event(), threading.Event()
+
+    def load():
+        gate.set()
+        assert release.wait(5)
+        return np.zeros((8, W), np.uint32)
+
+    items = [ArrangementItem(token=(0, 0), num_records=8, load=load)]
+    out = {}
+    t = threading.Thread(target=lambda: out.setdefault(
+        "lease", store.lease(items, (0,), block_n=64, owner="builder")))
+    t.start()
+    assert gate.wait(5)
+    store.publish([0])              # the swap lands mid-build
+    release.set()
+    t.join(5)
+    lease = out["lease"]
+    assert lease.arrangement.retired
+    assert store.live_arrangements() == 0
+    lease.release()
+    store.publish([0])              # clear the dead-token pooled columns
+    assert store.device_bytes == 0
+
+
+def test_column_pool_lru_bound():
+    """The device column pool is bounded: beyond ``max_pool_columns`` the
+    coldest unreferenced columns evict (re-uploading on next use) instead
+    of growing device residency monotonically between epochs."""
+    store = ArrangementStore(max_live=2, max_pool_columns=4)
+    for s in range(8):              # 8 distinct segment columns, one at a time
+        store.lease([_item(s, 0)], (0,), block_n=64,
+                    owner=f"q{s}").release()
+    assert len(store._columns) <= 4 + 1     # bound (+1: newest may be refd)
+    store.publish()
+    assert store.device_bytes == 0
+
+
+def test_shared_arrangements_single_epoch_per_swap(tmp_path):
+    """Two engines sharing one ArrangementStore over one SegmentStore
+    subscribe its publish ONCE: a maintenance swap advances the shared
+    epoch by exactly one, and a dead engine's arrangement store is not
+    pinned by the segment store's listener list."""
+    import weakref
+    spec, gen, store, mapper = build_ragged_world(tmp_path, seed=24,
+                                                  num_records=1500)
+    shared = ArrangementStore()
+    e1 = QueryEngine(store, mapper=mapper, backend="ref",
+                     arrangements=shared)
+    e2 = QueryEngine(store, mapper=mapper, backend="ref",
+                     arrangements=shared)
+    epoch0 = shared.epoch
+    store.segments[0].apply_update(meta_updates={})
+    assert shared.epoch == epoch0 + 1       # deduped: one epoch, not two
+    # a discarded engine's (private) arrangement store must be collectable
+    e3 = QueryEngine(store, mapper=mapper, backend="ref")
+    ref = weakref.ref(e3.arrangements)
+    del e3
+    gc.collect()
+    assert ref() is None
+    store.segments[0].apply_update(meta_updates={})     # prunes dead refs
+    assert shared.epoch == epoch0 + 2
+
+
+def test_max_live_eviction_retires_not_frees_leased():
+    store = ArrangementStore(max_live=2)
+    leases = [store.lease([_item(0, 0)], (w,), block_n=64, owner=f"q{w}")
+              for w in range(4)]
+    assert store.live_arrangements() <= 2
+    for lease in leases:            # evicted-but-leased stayed readable
+        assert lease.arrangement.stack is not None
+        lease.release()
+    store.publish()
+    assert store.device_bytes == 0

@@ -511,6 +511,35 @@ def test_scheduler_orders_by_heat():
     assert [s.segment_id for s in sched.order(segs)] == [7, 3, 1]
 
 
+def test_backfill_clears_segment_heat(tmp_path):
+    """Backfill-aware pruning stats: after a backfill install, the freshly
+    covered segments' fallback heat is cleared — they stop looking hot to
+    the scheduler, whose next ordering reflects segments STILL burning
+    fallback time (here: none, so ordering falls back to segment id)."""
+    w = make_world(tmp_path)
+    late = w["late"]
+    activate_late_rule(w)
+    q = Query(terms=((late.fieldname, late.term),), mode="count")
+    w["engine"].execute(q, path="fluxsieve")    # all-fallback: heats every seg
+    heat_pre = w["profiler"].segment_heat()
+    assert set(heat_pre) == {s.segment_id for s in w["store"].segments}
+    sched = MaintenanceScheduler(w["profiler"])
+    worker = BackfillWorker(w["store"], w["bus"], w["ostore"],
+                            scheduler=sched)
+    # budgeted cycle: only the installed segments cool down, the rest stay
+    # hot (and therefore first in line next cycle)
+    rep = worker.run_cycle(max_segments=2)
+    assert rep.segments_backfilled == 2
+    heat_mid = w["profiler"].segment_heat()
+    assert len(heat_mid) == len(heat_pre) - 2
+    remaining = [s for s in w["store"].segments
+                 if s.segment_id in heat_mid]
+    assert [s.segment_id for s in sched.order(w["store"].segments)[:len(remaining)]] \
+        == sorted(heat_mid, key=lambda sid: (-heat_mid[sid], sid))
+    worker.run_until_converged()
+    assert w["profiler"].segment_heat() == {}
+
+
 def test_scheduler_enforces_budget():
     sched = MaintenanceScheduler(None, MaintenancePolicy(
         max_bytes_per_cycle=2500, max_segments_per_cycle=10))

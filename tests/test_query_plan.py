@@ -1,6 +1,7 @@
 """Planner/executor split tests: randomized lane equivalence (the stacked
-device executors vs the pre-refactor numpy path vs the scan baselines),
-physical path-class accounting, the device-resident column cache and its
+device executors, the sharded + shared-arrangement lanes, and the batched
+DFA scan lane vs the pre-refactor numpy path vs the scan baselines),
+physical path-class accounting, the shared arrangement plane's epoch
 invalidation by maintenance swaps / cold runs, mid-query meta-swap
 re-planning, and the one-D2H-per-query discipline under jax's transfer
 guard."""
@@ -67,6 +68,12 @@ def make_engines(store, mapper):
                               block_n=256),
         "ref+dfa": QueryEngine(store, mapper=mapper, backend="ref",
                                scan_backend="dfa_ref", block_n=64),
+        # sharded query workers over the shared arrangement plane
+        "ref+shards": QueryEngine(store, mapper=mapper, backend="ref",
+                                  shards=3),
+        # forced device-side count reduction (the accelerator path, on CPU)
+        "ref+devcounts": QueryEngine(store, mapper=mapper, backend="ref",
+                                     device_counts=True),
     }
 
 
@@ -205,34 +212,49 @@ def test_single_d2h_per_query(tmp_path, backend):
     assert r.path_classes == {BITMAP: len(store.segments)}
 
 
-def test_device_cache_hot_skip_and_invalidation(tmp_path):
-    """Hot queries serve the stacked bitmap from device residency (no disk
-    bytes, no re-upload); a maintenance meta swap invalidates exactly the
-    swapped segment; cold runs re-read and re-account everything."""
+def test_arrangement_hot_skip_and_epoch_invalidation(tmp_path):
+    """Hot queries lease the shared device arrangement (no disk bytes, no
+    re-upload — uploads stay at one per word column per epoch); a
+    maintenance meta swap publishes a new epoch and only the swapped
+    segment's columns re-upload; cold runs re-read and re-account
+    everything."""
     spec, gen, store, mapper = build_ragged_world(tmp_path, seed=7,
                                                   num_records=2500)
     engine = QueryEngine(store, mapper=mapper, backend="ref")
-    ex = engine.executor
+    arr = engine.arrangements
     q = Query(terms=DENSE_TERMS, mode="count")
     r_cold = engine.execute(q, path="fluxsieve", cold=True)
     assert r_cold.bytes_read > 0
-    r_warm = engine.execute(q, path="fluxsieve")    # uploads + caches stack
-    r_hot = engine.execute(q, path="fluxsieve")     # stack-cache hit
+    assert arr.upload_counts() == {}        # ephemeral: nothing pooled
+    r_warm = engine.execute(q, path="fluxsieve")    # builds the arrangement
+    builds0 = arr.builds
+    r_hot = engine.execute(q, path="fluxsieve")     # pure lease hit
     assert r_hot.bytes_read == 0
+    assert arr.builds == builds0 and arr.lease_hits >= 1
     assert r_hot.count == r_cold.count == r_warm.count
-    assert len(ex._stacks) == 1
-    misses0 = ex.device_cache.misses
-    hits0 = ex.device_cache.hits
-    # maintenance swap on ONE segment: stack key changes; re-gather hits the
-    # device cache for unchanged segments and re-uploads only the swapped one
-    store.segments[0].apply_update(meta_updates={})
+    assert arr.live_arrangements() == 1
+    uploads0 = arr.upload_counts()
+    assert uploads0 and all(v == 1 for v in uploads0.values())
+    # maintenance swap on ONE segment: epoch publishes, the old arrangement
+    # retires, and the rebuild re-uploads ONLY the swapped segment's columns
+    # (unchanged tokens serve from the shared column pool)
+    epoch0 = arr.epoch
+    swapped = store.segments[0]
+    swapped.apply_update(meta_updates={})
+    assert arr.epoch == epoch0 + 1
     r_swap = engine.execute(q, path="fluxsieve")
     assert r_swap.count == r_cold.count
-    assert ex.device_cache.misses == misses0 + 1
-    assert ex.device_cache.hits >= hits0 + len(store.segments) - 1
-    # cold run: token bump drops device residency; disk bytes re-accounted
+    uploads1 = arr.upload_counts()
+    assert all(v == 1 for v in uploads1.values())
+    fresh = set(uploads1) - set(uploads0)
+    assert fresh and {tok[0] for tok, _ in fresh} == {swapped.segment_id}
+    # cold run: epoch publication drops device residency; disk bytes
+    # re-accounted, and the shared plane holds nothing afterwards
     r_cold2 = engine.execute(q, path="fluxsieve", cold=True)
     assert r_cold2.bytes_read == r_cold.bytes_read
+    assert arr.live_arrangements() == 0
+    assert arr.device_bytes == 0
+    assert arr.active_leases() == {}
 
 
 def test_mid_query_meta_swap_replans(tmp_path):
@@ -290,6 +312,50 @@ def test_profiler_path_class_stats(tmp_path):
     assert stats[BITMAP]["queries"] == 1
     assert set(stats) <= {BITMAP, PRUNED, META_COUNT, POSTINGS}
     assert all(st["seconds"] >= 0 for st in stats.values())
+
+
+def test_sharded_mid_query_swap_replans(tmp_path):
+    """Sharded execution under maintenance churn: every snapshot in the
+    plan is invalidated between planning and execution — each shard
+    re-plans ITS swapped segments independently, the merge step reassembles
+    plan order, and nothing degrades to fallback."""
+    spec, gen, store, mapper = build_ragged_world(tmp_path, seed=12,
+                                                  num_records=2500)
+    engine = QueryEngine(store, mapper=mapper, backend="ref", shards=3)
+    q = Query(terms=DENSE_TERMS, mode="copy")
+    truth = engine.execute(q, path="full_scan").count
+    plan = engine.plan(q, path="fluxsieve")
+    for seg in store.segments:                      # swap EVERY snapshot
+        seg.apply_update(meta_updates={})
+    res = engine._run(plan, cache=True)
+    assert res.count == truth
+    assert res.segments_fallback == 0
+    assert res.path_classes == {BITMAP: len(store.segments)}
+    assert engine.arrangements.active_leases() == {}
+
+
+def test_fallback_batched_single_fused_dispatch(tmp_path):
+    """Satellite: with a fused-capable scan backend, ALL consistency-
+    fallback segments of a query run as ONE throwaway-DFA dispatch (one
+    matcher D2H per query, not one per segment) and stay byte-identical
+    with the per-segment numpy substring lane."""
+    from repro.core import matcher as matcher_mod
+    spec, gen, store, mapper = build_ragged_world(tmp_path, seed=13,
+                                                  num_records=2000,
+                                                  late=True)
+    assert len(store.segments) > 1
+    eng_np = QueryEngine(store, mapper=mapper, backend="numpy")
+    eng_dfa = QueryEngine(store, mapper=mapper, backend="ref",
+                          scan_backend="dfa_ref", block_n=64)
+    t = spec.planted[0]
+    for mode in ("count", "copy"):
+        q = Query(terms=((t.fieldname, t.term),), mode=mode)
+        want = result_fingerprint(eng_np.execute(q, path="fluxsieve"))
+        before = matcher_mod.transfer_count()
+        r = eng_dfa.execute(q, path="fluxsieve")
+        assert matcher_mod.transfer_count() - before == 1
+        assert result_fingerprint(r) == want
+        assert r.segments_fallback == len(store.segments)
 
 
 def test_workers_threaded_equivalence(tmp_path):
