@@ -1,5 +1,5 @@
 """Maintenance-plane benchmark: query latency before/during/after backfill
-of a late-added rule.
+of a late-added rule, plus multi-worker backfill scaling.
 
 A rule activated after ingest leaves every sealed segment uncovered, so the
 fluxsieve path degenerates to per-segment full-scan fallback.  The
@@ -8,14 +8,30 @@ converges the same query serves every historical segment from the enriched
 bitmap/postings (``segments_fallback == 0``) with a count byte-identical to
 the full scan.  Rows report the before/during/after latencies plus the
 speedup ratio and backfill throughput.
+
+The ``backfill_scale_w{N}`` lanes measure the DISTRIBUTED maintenance
+plane: one store, one rule-churn stream, converged by a
+``MaintenanceWorkerPool`` of N leased, sharded workers.  Each timed run
+flips the target between two rule variants (the late rules' patterns
+change identity), so every segment must be re-matched — the same total
+work per run regardless of N — and reports wall-clock convergence,
+aggregate backfill throughput, and the scaling ratio vs the 1-worker lane.
+Matcher compilation is warmed and shared (``matcher_cache``) so lanes
+compare matching throughput, not compile time.
 """
 from __future__ import annotations
 
+import subprocess
+import sys
+import time
+
 from repro.core.control_plane import ControlBus
 from repro.core.maintenance import (BackfillWorker, MaintenancePolicy,
-                                    MaintenanceScheduler)
+                                    MaintenanceScheduler,
+                                    MaintenanceWorkerPool)
 from repro.core.matcher import compile_bundle
 from repro.core.object_store import ObjectStore
+from repro.core.patterns import Rule, RuleSet
 from repro.core.query.engine import Query, QueryEngine
 from repro.core.query.mapper import QueryMapper
 from repro.core.query.profiler import QueryProfiler
@@ -25,11 +41,113 @@ from repro.core.updater import MatcherUpdater
 from repro.data.generator import LogGenerator, WorkloadSpec
 from repro.data.pipeline import IngestPipeline
 
-from benchmarks.common import Measurement, measure, planted_ruleset
+from benchmarks.common import (Measurement, bootstrap_median, measure,
+                               planted_ruleset)
+
+
+def _cpu_ceiling(seconds: float = 0.5) -> float:
+    """Aggregate CPU scaling this box ACTUALLY offers two concurrent
+    processes (pure busy-loop calibration, separate interpreters, no GIL,
+    no XLA): the hardware ceiling for ANY 2-worker wall-clock scaling
+    measurement.  On dedicated 2+-core hosts this is ~2.0; on shared/SMT/
+    burst-throttled CI boxes it can be well under 1.5 — in which case the
+    ``efficiency`` column (scaling / ceiling), not raw ``scaling_x``, is
+    the number that transfers across machines."""
+    code = ("import time\nt0=time.perf_counter()\nx=0\n"
+            f"while time.perf_counter()-t0 < {seconds}: x+=1\n"
+            "print(x)")
+
+    def burn(n):
+        ps = [subprocess.Popen([sys.executable, "-c", code],
+                               stdout=subprocess.PIPE, text=True)
+              for _ in range(n)]
+        return sum(int(p.communicate()[0]) for p in ps)
+
+    one = burn(1)
+    return burn(2) / max(one, 1)
+
+
+def scaling_lanes(*, num_records: int = 24_000, segment_size: int = 1_500,
+                  num_rules: int = 32, late_rules: int = 4,
+                  workers: tuple = (1, 2), repeats: int = 3,
+                  seed: int = 11) -> list:
+    """One world, N-worker convergence races.  Work per timed run is
+    constant (every segment re-matches the late-rule delta after a target
+    flip); only the worker count varies.  The multi-worker rows carry the
+    box's calibrated ``cpu_ceiling_x`` and the ceiling-relative
+    ``efficiency`` so results are comparable across hosts."""
+    spec = WorkloadSpec(num_records=num_records, ultra_rate=2e-5,
+                        high_rate=2e-4, seed=seed)
+    gen = LogGenerator(spec)
+    full = planted_ruleset(spec, num_rules)
+    late_ids = list(range(min(late_rules, len(spec.planted))))
+    initial = full.without_ids(late_ids)
+    # the flip variant: same rule ids, different pattern CONTENT — a new
+    # identity, so converged segments become pending again (equal work)
+    prime = RuleSet(tuple(
+        Rule(r.rule_id, r.name, r.pattern + "Zz9", fields=r.fields)
+        if r.rule_id in set(late_ids) else r for r in full.rules))
+
+    bus, ostore = ControlBus(), ObjectStore()
+    proc = StreamProcessor(compile_bundle(initial, spec.content_fields),
+                           bus=bus, store=ostore)
+    store = SegmentStore(segment_size=segment_size)
+    updater = MatcherUpdater(ostore, bus, spec.content_fields,
+                             initial=initial)
+    IngestPipeline(gen, store, proc).run(batch_size=4096)
+    n_seg = len(store.segments)
+
+    shared_cache: dict = {}     # compiled delta matchers, warmed once
+    state = {"cur": initial}
+
+    def flip():
+        nxt = prime if state["cur"] in (initial, full) else full
+        state["cur"] = nxt
+        h = updater.submit(nxt, asynchronous=False)
+        assert h.published, h.error
+
+    rows, base = [], None
+    for w in workers:
+        pool = MaintenanceWorkerPool(store, bus, ostore, num_workers=w,
+                                     worker_prefix=f"bench{w}",
+                                     matcher_cache=shared_cache)
+        # warmup: converge BOTH flip variants untimed, so every timed run
+        # hits warm compiled matchers and warm jit caches
+        for _ in range(2):
+            flip()
+            pool.run_until_converged()
+        samples = []
+        for _ in range(repeats):
+            flip()
+            t0 = time.perf_counter()
+            rep = pool.run_until_converged()
+            dt = time.perf_counter() - t0
+            assert rep.pending_after == 0, "lane did not converge"
+            assert rep.segments_backfilled == n_seg, \
+                (rep.segments_backfilled, n_seg)
+            samples.append(dt)
+        med, lo, hi = bootstrap_median(samples)
+        derived = {"workers": w, "segments": n_seg,
+                   "records": num_records,
+                   "records_per_s": f"{num_records / max(med, 1e-9):,.0f}"}
+        if base is None:
+            base = med
+        else:
+            scaling = base / max(med, 1e-9)
+            ceiling = _cpu_ceiling()
+            derived["scaling_x"] = f"{scaling:.2f}x"
+            derived["cpu_ceiling_x"] = f"{ceiling:.2f}x"
+            derived["efficiency"] = f"{scaling / max(ceiling, 1e-9):.2f}"
+        rows.append(Measurement(name=f"backfill_scale_w{w}", median_s=med,
+                                ci_lo=lo, ci_hi=hi, runs=repeats,
+                                derived=derived))
+    return rows
 
 
 def run(*, num_records: int = 60_000, segment_size: int = 5_000,
-        num_rules: int = 200, runs: int = 5) -> list:
+        num_rules: int = 200, runs: int = 5, workers: tuple = (1, 2),
+        scale_records: int = 24_000, scale_segment: int = 1_500,
+        scale_repeats: int = 3) -> list:
     spec = WorkloadSpec(num_records=num_records, ultra_rate=2e-5,
                         high_rate=2e-4, seed=7)
     gen = LogGenerator(spec)
@@ -101,7 +219,12 @@ def run(*, num_records: int = 60_000, segment_size: int = 5_000,
                  "records": num_records,
                  "records_per_s": f"{num_records / max(seconds, 1e-9):,.0f}",
                  "acked": rep.acked or rep1.acked})
-    return [pre, mid, post, work]
+    rows = [pre, mid, post, work]
+    if workers:
+        rows.extend(scaling_lanes(num_records=scale_records,
+                                  segment_size=scale_segment,
+                                  workers=workers, repeats=scale_repeats))
+    return rows
 
 
 if __name__ == "__main__":

@@ -57,29 +57,47 @@ def main(argv=None) -> int:
     else:
         overhead_n, matcher_b, storage_n = 60_000, 2048, 80_000
 
+    def entry(fn, **params):
+        """Suite entry carrying its RESOLVED parameters, so --json output
+        is self-describing (worker/shard/client counts, sizes) instead of
+        requiring the reader to re-derive them from argv + defaults."""
+        return ((lambda: fn(**params)), params)
+
     suite = {
-        "overhead": lambda: bench_overhead.run(num_records=overhead_n),
-        "matcher": lambda: bench_matcher.run(batch=matcher_b),
-        "update": bench_update.run,
-        "storage": lambda: bench_storage.run(num_records=storage_n),
-        "layout_grid": lambda: bench_layout_grid.run(
+        "overhead": entry(bench_overhead.run, num_records=overhead_n),
+        "matcher": entry(bench_matcher.run, batch=matcher_b),
+        "update": entry(bench_update.run),
+        "storage": entry(bench_storage.run, num_records=storage_n),
+        "layout_grid": entry(
+            bench_layout_grid.run,
             num_records=40_000 if args.quick else 100_000,
             runs=3 if args.quick else 5),
-        "scale": lambda: bench_scale.run(
+        "scale": entry(
+            bench_scale.run,
             sizes=(40_000, 80_000) if args.quick else (125_000, 250_000),
             runs_hot=3 if args.quick else 5,
             runs_cold=2 if args.quick else 3),
-        "speedup_ultra": lambda: bench_speedup.run(
-            "ultra", num_records=40_000 if args.quick else 150_000,
+        "speedup_ultra": entry(
+            bench_speedup.run, selectivity="ultra",
+            num_records=40_000 if args.quick else 150_000,
             runs=3 if args.quick else 5),
-        "speedup_high": lambda: bench_speedup.run(
-            "high", num_records=40_000 if args.quick else 150_000,
+        "speedup_high": entry(
+            bench_speedup.run, selectivity="high",
+            num_records=40_000 if args.quick else 150_000,
             runs=3 if args.quick else 5),
-        "backfill": lambda: bench_backfill.run(
-            num_records=20_000 if args.quick else 60_000,
-            segment_size=2_000 if args.quick else 5_000,
-            runs=3 if args.quick else 5),
-        "query": lambda: bench_query_concurrency.run(
+        "backfill": entry(
+            bench_backfill.run,
+            num_records=(6_000 if args.smoke
+                         else 20_000 if args.quick else 60_000),
+            segment_size=(600 if args.smoke
+                          else 2_000 if args.quick else 5_000),
+            runs=2 if args.smoke else 3 if args.quick else 5,
+            workers=(1, 2),
+            scale_records=12_000 if args.smoke or args.quick else 24_000,
+            scale_segment=1_500,
+            scale_repeats=3 if args.smoke else 3 if args.quick else 5),
+        "query": entry(
+            bench_query_concurrency.run,
             num_records=(4_000 if args.smoke
                          else 40_000 if args.quick else 120_000),
             segment_size=(800 if args.smoke
@@ -93,10 +111,10 @@ def main(argv=None) -> int:
               file=sys.stderr)
         return 1
     if args.smoke:
-        # CI smoke: the kernel-path benches must run to completion so enrich
-        # AND query hot-path regressions fail the build, not only the
-        # nightly eyeball
-        smoke_names = ("overhead", "matcher", "query")
+        # CI smoke: the kernel-path benches must run to completion so
+        # enrich, query, AND distributed-maintenance regressions fail the
+        # build, not only the nightly eyeball
+        smoke_names = ("overhead", "matcher", "query", "backfill")
         if args.only and args.only not in smoke_names:
             print(f"bench {args.only!r} is excluded by --smoke "
                   f"(smoke runs: {', '.join(smoke_names)})", file=sys.stderr)
@@ -104,7 +122,8 @@ def main(argv=None) -> int:
         suite = {k: suite[k] for k in smoke_names}
     failures = 0
     results = {}
-    for name, fn in suite.items():
+    ran_params = {}
+    for name, (fn, params) in suite.items():
         if args.only and name != args.only:
             continue
         print(f"# === {name} ===", flush=True)
@@ -113,6 +132,8 @@ def main(argv=None) -> int:
             rows = fn()
             print_rows(rows)
             results[name] = [m.to_dict() for m in rows]
+            ran_params[name] = {k: list(v) if isinstance(v, tuple) else v
+                                for k, v in params.items()}
         except Exception:
             failures += 1
             traceback.print_exc()
@@ -120,6 +141,11 @@ def main(argv=None) -> int:
     if args.json:
         doc = {"git_sha": _git_sha(),
                "argv": [a for a in (argv or sys.argv[1:])],
+               "config": {
+                   "scale": ("smoke" if args.smoke
+                             else "quick" if args.quick else "full"),
+                   "suites": ran_params,
+               },
                "benches": results}
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)

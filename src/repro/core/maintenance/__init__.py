@@ -1,21 +1,51 @@
 """Segment maintenance plane — background upkeep of the analytical plane.
 
-Three cooperating pieces, all off the ingest path:
+Cooperating pieces, all off the ingest path:
 
   * :class:`BackfillWorker` — retroactive re-enrichment: matches newly
     activated rules against historical (sealed) segments so the fluxsieve
-    fast path stops falling back to full scans on pre-rule data;
+    fast path stops falling back to full scans on pre-rule data; resumes
+    from per-segment row-watermark checkpoints after a restart or budget
+    cut;
+  * :class:`MaintenanceWorkerPool` — N backfill workers sharding the
+    segment space by id hash, each with its own consumer-group offsets and
+    per-shard convergence ack;
+  * :class:`LeaseManager` — per-segment leases + epoch fencing: two
+    maintenance writers can never interleave on one segment, and a crashed
+    worker's lease expires instead of wedging its shard
+    (:class:`FencedWriteError` is the write barrier's rejection);
   * :class:`Compactor` — merges small sealed segments into right-sized
-    ones, re-deriving zone maps and indexes;
+    ones, re-deriving zone maps and indexes, and physically drops
+    retention-tombstoned rows during rewrites;
+  * :class:`RetentionWorker` — event-time TTL: retires fully expired
+    segments, stamps straddlers with a ``retention_cutoff``;
+  * :class:`SpillGC` — deletes RETIRED spill dirs once the manifest, the
+    arrangement plane's pin signal, and a grace window all agree no reader
+    remains;
   * :class:`MaintenanceScheduler` — orders work by profiler-observed query
-    heat and enforces a bytes/records budget per cycle.
+    heat and enforces a bytes/records/rows budget per cycle.
+
+Delivery contract: engine updates reach the plane on the
+``SEGMENT_MAINTENANCE`` topic with per-worker consumer groups —
+**at-least-once per worker**; every install is idempotent (re-backfilling
+a converged segment is a no-op) so duplicate delivery is always safe.
 """
-from repro.core.maintenance.backfill import BackfillReport, BackfillWorker
+from repro.core.maintenance.backfill import (BackfillReport, BackfillWorker,
+                                             merge_reports)
 from repro.core.maintenance.compactor import CompactionReport, Compactor
+from repro.core.maintenance.lease import (FencedWriteError, Lease,
+                                          LeaseManager, shard_of)
+from repro.core.maintenance.retention import (GCReport, RetentionPolicy,
+                                              RetentionReport,
+                                              RetentionWorker, SpillGC)
 from repro.core.maintenance.scheduler import (MaintenancePolicy,
                                               MaintenanceScheduler)
+from repro.core.maintenance.workers import MaintenanceWorkerPool
 
 __all__ = [
     "BackfillReport", "BackfillWorker", "CompactionReport", "Compactor",
-    "MaintenancePolicy", "MaintenanceScheduler",
+    "FencedWriteError", "GCReport", "Lease", "LeaseManager",
+    "MaintenancePolicy", "MaintenanceScheduler", "MaintenanceWorkerPool",
+    "RetentionPolicy", "RetentionReport", "RetentionWorker", "SpillGC",
+    "merge_reports", "shard_of",
 ]

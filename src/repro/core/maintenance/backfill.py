@@ -17,14 +17,37 @@ backfill, applied to the enrichment column):
      derived artifact — ``rule_bitmap_any`` zone map, ``rule_counts``, rule
      postings, ``rules_known`` — via ``Segment.apply_update``, so concurrent
      queries see either the fully-old or fully-new enrichment;
-  4. once no sealed segment lags the active version it publishes an ack on
-     ``MAINTENANCE_ACKS`` (the updater's ``await_maintenance`` watches it).
+  4. once no sealed segment in ITS SHARD lags the active version it
+     publishes an ack on ``MAINTENANCE_ACKS`` (the updater's
+     ``await_maintenance`` watches it, one ack per worker id).
+
+Maintenance plane v2 — distribution and durability:
+
+  * **Sharding**: a worker owns the segments ``shard_of(segment_id,
+    num_shards) == shard_index``; a ``MaintenanceWorkerPool`` runs N such
+    workers over one store, each with its own consumer-group offsets
+    (at-least-once delivery per worker, so a crashed worker's replacement
+    re-reads the topic from its own committed offset);
+  * **Leases + epoch fencing** (``maintenance.lease``): every install is
+    guarded by a per-segment lease whose epoch is the fencing token carried
+    into ``Segment.apply_update(fence=...)`` — two workers can never
+    interleave writes on one segment, and a crashed worker's lease expires
+    instead of wedging its shard;
+  * **Incremental checkpointing**: long segments are matched in row-range
+    passes (``rows_per_pass``); each partial pass persists a per-segment
+    high-water mark + the partially rebuilt bitmap (atomically, next to the
+    spill files), so a worker restart or a mid-segment budget cut resumes
+    matching from the watermark instead of row 0.  The checkpoint is keyed
+    on the target (version + delta), so a moved target invalidates it.
 
 Invariant: a query result is byte-identical whether a segment is served via
-backfilled bitmap, postings, metadata counts, or full-scan fallback.
+backfilled bitmap, postings, metadata counts, or full-scan fallback — and
+the install itself stays all-or-nothing (checkpoints stage work *outside*
+the segment's visible artifacts; only the final ``apply_update`` swaps).
 """
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass, field
 
@@ -34,12 +57,18 @@ from repro.core.automaton import words_for_rules
 from repro.core.control_plane import (ControlBus, MAINTENANCE_ACKS,
                                       SEGMENT_MAINTENANCE)
 from repro.core.enrichment import rule_mask
+from repro.core.maintenance.lease import (FencedWriteError, LeaseManager,
+                                          shard_of)
 from repro.core.matcher import EngineBundle, build_matchers, compile_bundle
 from repro.core.object_store import ObjectRef, ObjectStore
 from repro.core.patterns import RuleSet, ruleset_idents
 from repro.core.query.store import (SegmentStore, derive_enrichment_meta,
                                     pack_known_bitmap)
 from repro.core.stream_processor import ENRICH_COLUMN
+
+# per-segment backfill checkpoint, stored NEXT TO the spill files (swapped
+# atomically via tmp+os.replace); never part of the segment's visible state
+CKPT_NAME = "backfill.ckpt.npz"
 
 
 @dataclass(frozen=True)
@@ -58,21 +87,64 @@ class BackfillReport:
     segments_skipped: int = 0   # sealed w/o enrichment column (gauge): can
                                 # never converge, served by scan paths only
     segments_failed: int = 0    # raised during backfill; retried next cycle
+    segments_partial: int = 0   # row-budget cut mid-segment; checkpointed
+    segments_contended: int = 0  # lease held (or fenced) by another worker
     errors: list = field(default_factory=list)   # (segment_id, error) pairs
     records: int = 0
+    rows_matched: int = 0       # rows actually re-matched this cycle (a
+                                # checkpoint resume makes this < records)
+    rows_resumed: int = 0       # rows skipped thanks to a checkpoint
     bytes_rewritten: int = 0
     seconds: float = 0.0
-    pending_after: int = 0
+    pending_after: int = 0      # pending in THIS worker's shard
     acked: bool = False
 
 
+def merge_reports(total: BackfillReport, rep: BackfillReport,
+                  *, sequential: bool = True) -> BackfillReport:
+    """Accumulate ``rep`` into ``total``.  ``sequential`` merges cycles of
+    ONE worker over time (gauges take the latest value); the pool merges
+    same-cycle reports of MANY workers (gauges sum across shards)."""
+    total.version = rep.version or total.version
+    total.messages += rep.messages
+    total.segments_backfilled += rep.segments_backfilled
+    total.segments_failed += rep.segments_failed
+    total.segments_partial += rep.segments_partial
+    total.segments_contended += rep.segments_contended
+    total.errors.extend(rep.errors[:max(0, 8 - len(total.errors))])
+    total.records += rep.records
+    total.rows_matched += rep.rows_matched
+    total.rows_resumed += rep.rows_resumed
+    total.bytes_rewritten += rep.bytes_rewritten
+    total.seconds += rep.seconds
+    if sequential:
+        total.segments_skipped = rep.segments_skipped
+        total.pending_after = rep.pending_after
+        total.acked = total.acked or rep.acked
+    else:
+        total.segments_skipped = max(total.segments_skipped,
+                                     rep.segments_skipped)
+        total.pending_after += rep.pending_after
+    return total
+
+
 class BackfillWorker:
-    """One maintenance-plane worker (``run_cycle`` is its poll loop body)."""
+    """One maintenance-plane worker (``run_cycle`` is its poll loop body).
+
+    ``shard_index``/``num_shards`` restrict the worker to its hash shard of
+    the segment space (``lease.shard_of``); ``leases`` guards every install
+    with a fenced per-segment lease; ``rows_per_pass`` bounds how many rows
+    one cycle matches per segment (the rest is checkpointed and resumed).
+    ``matcher_cache`` lets a ``MaintenanceWorkerPool`` share compiled delta
+    matchers across workers (compiled engines are immutable/thread-safe)."""
 
     def __init__(self, store: SegmentStore, bus: ControlBus,
                  object_store: ObjectStore, *, worker_id: str = "maint-0",
                  scheduler=None, backend: str = "dfa_ref",
-                 block_n: int = 256, interpret: bool = True):
+                 block_n: int = 256, interpret: bool = True,
+                 shard_index: int = 0, num_shards: int = 1,
+                 leases: LeaseManager = None, rows_per_pass: int = None,
+                 matcher_cache: dict = None):
         self.store = store
         self.bus = bus
         self.object_store = object_store
@@ -81,6 +153,13 @@ class BackfillWorker:
         self.backend = backend
         self.block_n = block_n
         self.interpret = interpret
+        if not 0 <= shard_index < max(num_shards, 1):
+            raise ValueError(f"shard_index {shard_index} out of range for "
+                             f"{num_shards} shards")
+        self.shard_index = shard_index
+        self.num_shards = max(num_shards, 1)
+        self.leases = leases
+        self.rows_per_pass = rows_per_pass
         self._target: _Target = None
         # each installed target owes exactly one convergence ack — keyed on
         # installation, not version string, so rolling BACK to a previously
@@ -96,7 +175,21 @@ class BackfillWorker:
         # steady-state cycles diff just the newly sealed segments
         self._pending_ids: set = None   # None = needs full rescan
         self._scanned_upto = 0          # segment-id high-water mark
-        self._matchers: dict = {}       # (version, delta ids, fields) -> dict
+        # (version, delta ids, fields) -> dict; shareable across a pool
+        self._matchers: dict = matcher_cache if matcher_cache is not None \
+            else {}
+        self._mem_ckpts: dict = {}      # sid -> (key, hwm, bm) for segments
+                                        # without a spill path
+
+    @property
+    def worker_ids(self) -> tuple:
+        """Worker identities to await acks from (pool-compatible shape)."""
+        return (self.worker_id,)
+
+    def owns(self, segment_id: int) -> bool:
+        """Shard ownership: this worker backfills (and acks) only its hash
+        shard of the segment space."""
+        return shard_of(segment_id, self.num_shards) == self.shard_index
 
     # -- control topology --------------------------------------------------
     def poll_target(self) -> int:
@@ -117,10 +210,24 @@ class BackfillWorker:
         notification is permanently invalid and an older one failed
         transiently, nothing is committed — the older candidate stays
         fetchable and is retried next cycle instead of being silently
-        forfeited (duplicate nacks stay suppressed via ``_nacked``)."""
+        forfeited (duplicate nacks stay suppressed via ``_nacked``).
+
+        Restart recovery: a worker that installed a target, committed its
+        offset, and then CRASHED would otherwise never see that
+        notification again — its replacement (same worker id, same group)
+        polls past the committed offset and finds nothing.  The committed
+        offset gates delivery accounting, not target durability: a worker
+        with no target re-derives the newest valid one from the raw topic
+        history, and owes a convergence ack for it — so a mid-backfill
+        crash still ends in exactly the acks the updater awaits once the
+        replacement (resuming from checkpoints) converges."""
         group = f"maintenance/{self.worker_id}"
+        recovering = False
         msgs = self.bus.poll(SEGMENT_MAINTENANCE, group,
                              max_messages=1_000_000)
+        if not msgs and self._target is None:
+            msgs = self.bus.messages(SEGMENT_MAINTENANCE, 0)
+            recovering = True
         if not msgs:
             return 0
         installed_offset = None
@@ -136,7 +243,7 @@ class BackfillWorker:
                 ruleset = bundle.ruleset()
                 self._target = _Target(version=bundle.version, ruleset=ruleset,
                                        idents=ruleset_idents(ruleset))
-                self._matchers.clear()
+                self._evict_matchers(bundle.version)
                 self._ack_pending = True
                 self._pending_ids = None    # target moved: full rescan
                 installed_offset = msg.offset
@@ -154,18 +261,32 @@ class BackfillWorker:
         if installed_offset is not None:
             # everything at/below the install is superseded; failed NEWER
             # candidates stay uncommitted and are retried next cycle
+            # (idempotent under recovery: commit never rewinds offsets)
             self.bus.commit(SEGMENT_MAINTENANCE, group, installed_offset)
         seen = sum(1 for m in msgs if m.offset >= self._seen_upto)
-        self._seen_upto = newest + 1
-        return seen
+        self._seen_upto = max(self._seen_upto, newest + 1)
+        return 0 if recovering else seen    # replay is not new delivery
 
     def set_target(self, ruleset: RuleSet) -> None:
         """Direct (bus-less) targeting, for embedded/offline use."""
         self._target = _Target(version=ruleset.version_hash(), ruleset=ruleset,
                                idents=ruleset_idents(ruleset))
-        self._matchers.clear()
+        self._evict_matchers(self._target.version)
         self._ack_pending = True
         self._pending_ids = None
+
+    def _evict_matchers(self, current_version: str) -> None:
+        """Bound the compiled-matcher cache on target change WITHOUT
+        wiping it: keys are version-scoped, so stale-version engines are
+        merely unreachable, not wrong.  Evicting eagerly would defeat the
+        pool-shared cache (worker B's install must not discard engines
+        worker A just compiled for the SAME version) — so stale versions
+        are dropped only once the cache actually grows."""
+        if len(self._matchers) <= 32:
+            return
+        for k in [k for k in list(self._matchers)
+                  if k[0] != current_version]:
+            self._matchers.pop(k, None)
 
     # -- delta computation -------------------------------------------------
     def segment_delta(self, seg) -> tuple:
@@ -179,14 +300,16 @@ class BackfillWorker:
         return sorted(delta), sorted(removed)
 
     def pending_segments(self) -> list:
-        """Sealed, enrichment-bearing segments not yet at the target
-        (exact, full rescan)."""
+        """Sealed, enrichment-bearing segments OF THIS WORKER'S SHARD not
+        yet at the target (exact, full rescan)."""
         if self._target is None:
             return []
         return [seg for seg in list(self.store.segments)
                 if self._segment_pending(seg)]
 
     def _segment_pending(self, seg) -> bool:
+        if not self.owns(seg.segment_id):
+            return False    # another shard's worker converges (and acks) it
         if ENRICH_COLUMN not in seg.meta["columns"]:
             return False
         delta, removed = self.segment_delta(seg)
@@ -234,20 +357,43 @@ class BackfillWorker:
             todo = todo[:max_segments]
         healed = []
         for seg in todo:
+            # lease the segment before touching it: sharding makes overlap
+            # unlikely, the lease makes it impossible — and the fencing
+            # token below makes even a lease we LOST mid-write harmless
+            lease = None
+            if self.leases is not None:
+                lease = self.leases.acquire(seg.segment_id, self.worker_id)
+                if lease is None:
+                    rep.segments_contended += 1
+                    continue        # held elsewhere; stays pending, retried
+            fence = self.leases.fence(lease) if lease is not None else None
             # per-segment isolation: one bad segment (corrupt spill file,
             # truncated column) must not crash the worker or stall the rest.
             # A failed segment stays in the pending set — so no ack happens
             # while it lags — and is retried next cycle; a half-applied
             # phase-1 withdraw is safe (queries fall back to scanning).
             try:
-                done = self.backfill_segment(seg)
+                state = self.backfill_segment(
+                    seg, max_rows=self._rows_budget(), fence=fence,
+                    report=rep)
+            except FencedWriteError:
+                # lost the lease race mid-write: the successor owns the
+                # segment now; nothing was mutated (the fence fires before
+                # the first byte), so just leave it to the new holder
+                rep.segments_contended += 1
+                continue
             except Exception as e:  # noqa: BLE001
                 rep.segments_failed += 1
                 self._failed_ids.add(seg.segment_id)
                 if len(rep.errors) < 8:
                     rep.errors.append((seg.segment_id, str(e)))
                 continue
-            if done:
+            finally:
+                if lease is not None:
+                    self.leases.release(lease)
+            if state == "partial":
+                rep.segments_partial += 1   # checkpointed; resumes next cycle
+            elif state == "done":
                 rep.segments_backfilled += 1
                 rep.records += seg.num_records
                 rep.bytes_rewritten += seg.nbytes([ENRICH_COLUMN])
@@ -277,35 +423,42 @@ class BackfillWorker:
         rep.seconds = time.perf_counter() - t0
         return rep
 
+    def _rows_budget(self):
+        """Per-segment row budget for one pass: the worker's own
+        ``rows_per_pass`` or the scheduler policy's
+        ``max_rows_per_segment_pass`` (whichever is set; worker wins)."""
+        if self.rows_per_pass is not None:
+            return self.rows_per_pass
+        if self.scheduler is not None:
+            return getattr(self.scheduler.policy,
+                           "max_rows_per_segment_pass", None)
+        return None
+
     def run_until_converged(self, *, max_cycles: int = 1000) -> BackfillReport:
-        """Drain: cycle until no sealed segment lags the target.  Returns
-        the totals across all cycles run."""
+        """Drain: cycle until no sealed segment in this worker's shard lags
+        the target.  Returns the totals across all cycles run."""
         total = BackfillReport()
         for _ in range(max_cycles):
             rep = self.run_cycle()
-            total.version = rep.version
-            total.messages += rep.messages
-            total.segments_backfilled += rep.segments_backfilled
-            total.segments_skipped = rep.segments_skipped
-            total.segments_failed += rep.segments_failed
-            total.errors.extend(rep.errors[:8 - len(total.errors)])
-            total.records += rep.records
-            total.bytes_rewritten += rep.bytes_rewritten
-            total.seconds += rep.seconds
-            total.pending_after = rep.pending_after
-            total.acked = total.acked or rep.acked
-            if rep.messages == 0 and (rep.pending_after == 0
-                                      or rep.segments_backfilled == 0):
-                # converged — or stuck (every remaining segment failing);
-                # don't spin max_cycles on a permanently bad segment
+            merge_reports(total, rep)
+            if rep.messages == 0 and (
+                    rep.pending_after == 0
+                    or (rep.segments_backfilled == 0
+                        and rep.segments_partial == 0)):
+                # converged — or stuck (every remaining segment failing or
+                # contended); don't spin max_cycles on a permanently bad
+                # segment.  Partial passes ARE progress: keep cycling.
                 break
         return total
 
-    def backfill_segment(self, seg) -> bool:
+    def backfill_segment(self, seg, *, max_rows: int = None, fence=None,
+                         report: BackfillReport = None) -> str:
         """Re-enrich one sealed segment to the target ruleset.  Matches only
         the delta rules, then atomically swaps bitmap + zone maps + counts +
-        postings + coverage metadata.  Returns False when the segment has no
-        enrichment column to rewrite.
+        postings + coverage metadata.  Returns ``"skip"`` when the segment
+        has no enrichment column to rewrite, ``"partial"`` when ``max_rows``
+        cut the pass short (progress checkpointed, resumed next pass), and
+        ``"done"`` on install.
 
         Two-phase when a previously-claimed rule's bits are REINTERPRETED
         (pattern changed or rule removed): first a meta-only update
@@ -313,10 +466,19 @@ class BackfillWorker:
         scanning for them — and only then is the new data installed and
         claimed.  A reader therefore never pairs an old claim with new bits
         (or vice versa); pure additions skip the extra phase because no old
-        plan can reference a rule the old metadata never claimed."""
+        plan can reference a rule the old metadata never claimed.
+
+        Incremental checkpointing: rows are matched in ``[start, stop)``
+        passes; an incomplete pass persists ``(target key, row high-water
+        mark, partial bitmap)`` next to the spill files and the next pass —
+        by this worker or a restarted replacement — resumes from the
+        watermark.  Checkpoints stage work OUTSIDE the segment's visible
+        artifacts; readers never observe a partially backfilled bitmap.
+        ``fence`` threads the lease's fencing token into every
+        ``apply_update`` (withdraw and install)."""
         t = self._target
         if ENRICH_COLUMN not in seg.meta["columns"]:
-            return False
+            return "skip"
         delta_ids, removed_ids = self.segment_delta(seg)
         seg_idents = seg.meta.get("rule_idents") or {}
         reinterpreted = ([r for r in delta_ids if str(r) in seg_idents]
@@ -329,19 +491,41 @@ class BackfillWorker:
                 "rule_idents": kept,
                 "rules_known": pack_known_bitmap(
                     kept, seg.meta["columns"][ENRICH_COLUMN][1][1]),
-            })
+            }, fence=fence)
+            # the withdraw changed coverage; re-derive the delta so the
+            # checkpoint key (and resume) see the post-withdraw world
+            seg_idents = seg.meta.get("rule_idents") or {}
+            delta_ids, removed_ids = self.segment_delta(seg)
         num_rules = t.ruleset.num_rules
         W = max(words_for_rules(max(num_rules, 1)),
                 seg.meta["columns"][ENRICH_COLUMN][1][1])
-        # cache=False: a maintenance pass streams each column once — it must
-        # not pin the whole spilled dataset in RAM
-        old = np.asarray(seg.column(ENRICH_COLUMN, cache=False))
-        bm = np.zeros((seg.num_records, W), np.uint32)
-        bm[:, :old.shape[1]] = old
-        # clear every bit we are about to recompute or retire
-        stale = [r for r in delta_ids + removed_ids if r < W * 32]
-        if stale:
-            bm &= ~rule_mask(stale, W * 32)
+        N = seg.num_records
+        ckpt_key = f"{t.version}:{','.join(map(str, delta_ids))}"
+        start, done_bm = self._load_checkpoint(seg, ckpt_key)
+        if report is not None and start:
+            report.rows_resumed += start
+        stop = N if max_rows is None else min(N, start + max(int(max_rows), 1))
+
+        def read_rows(name):
+            # cache=False: a maintenance pass streams each column range
+            # once — it must not pin the whole spilled dataset in RAM.
+            # Whole-segment passes (the common case) read the column
+            # directly; partial passes page in just the row range.
+            if start == 0 and stop == N:
+                return np.asarray(seg.column(name, cache=False))
+            return np.asarray(seg.column_rows(
+                name, np.arange(start, stop), cache=False))
+
+        old = read_rows(ENRICH_COLUMN)
+        part = np.zeros((stop - start, W), np.uint32)
+        part[:, :old.shape[1]] = old
+        # keep exactly the bits whose rule identity already matches the
+        # target; everything else (delta, removed, never-claimed strays) is
+        # cleared and — for the delta — recomputed below.  Idempotent
+        # across the withdraw above and across checkpoint resumes.
+        keep = [int(rid) for rid, ident in t.idents.items()
+                if seg_idents.get(rid) == ident and int(rid) < W * 32]
+        part &= rule_mask(keep, W * 32) if keep else np.uint32(0)
         if delta_ids:
             delta_rules = tuple(r for r in t.ruleset.rules
                                 if r.rule_id in set(delta_ids))
@@ -349,9 +533,14 @@ class BackfillWorker:
             for fieldname, engine in matchers.items():
                 if fieldname not in seg.meta["columns"]:
                     continue
-                sub = np.asarray(engine.match(
-                    seg.column(fieldname, cache=False)))
-                bm[:, :sub.shape[1]] |= sub
+                sub = np.asarray(engine.match(read_rows(fieldname)))
+                part[:, :sub.shape[1]] |= sub
+        if report is not None:
+            report.rows_matched += stop - start
+        bm = part if done_bm is None else np.concatenate([done_bm, part])
+        if stop < N:
+            self._save_checkpoint(seg, ckpt_key, stop, bm)
+            return "partial"
         enrich_meta, postings = derive_enrichment_meta(bm)
         meta_updates = {
             **enrich_meta,
@@ -359,8 +548,55 @@ class BackfillWorker:
             "rules_known": pack_known_bitmap(t.idents, W),
         }
         seg.apply_update(columns={ENRICH_COLUMN: bm},
-                         meta_updates=meta_updates, rule_postings=postings)
-        return True
+                         meta_updates=meta_updates, rule_postings=postings,
+                         fence=fence)
+        self._clear_checkpoint(seg)
+        return "done"
+
+    # -- checkpoint plane --------------------------------------------------
+    def _save_checkpoint(self, seg, key: str, hwm: int,
+                         bm: np.ndarray) -> None:
+        """Persist partial progress atomically (tmp + ``os.replace``), next
+        to the spill files.  Memory-only segments checkpoint in the worker
+        (survives budget cuts within a process, not a restart — but neither
+        does the segment)."""
+        if seg.path is None:
+            self._mem_ckpts[seg.segment_id] = (key, hwm, bm)
+            return
+        path = seg.path / CKPT_NAME
+        tmp = path.with_name(path.name + ".tmp")
+        with open(tmp, "wb") as f:
+            np.savez_compressed(f, key=np.asarray([key]),
+                                hwm=np.asarray([hwm], np.int64), bm=bm)
+        os.replace(tmp, path)
+
+    def _load_checkpoint(self, seg, key: str) -> tuple:
+        """-> (resume row, completed-prefix bitmap) — ``(0, None)`` when no
+        checkpoint matches the current target key (a moved target, or a
+        torn/corrupt file, restarts the segment from row 0)."""
+        if seg.path is None:
+            mem = self._mem_ckpts.get(seg.segment_id)
+            if mem is not None and mem[0] == key:
+                return mem[1], mem[2]
+            return 0, None
+        path = seg.path / CKPT_NAME
+        if not path.exists():
+            return 0, None
+        try:
+            with np.load(path, allow_pickle=False) as z:
+                if str(z["key"][0]) == key:
+                    return int(z["hwm"][0]), np.asarray(z["bm"])
+        except Exception:  # noqa: BLE001 — torn checkpoint == no checkpoint
+            pass
+        return 0, None
+
+    def _clear_checkpoint(self, seg) -> None:
+        self._mem_ckpts.pop(seg.segment_id, None)
+        if seg.path is not None:
+            try:
+                (seg.path / CKPT_NAME).unlink()
+            except OSError:
+                pass
 
     def _matchers_for(self, delta_rules: tuple, seg) -> dict:
         """Compile (and cache) matchers for a delta sub-ruleset, keeping the

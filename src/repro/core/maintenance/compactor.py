@@ -14,9 +14,19 @@ is known for the merged segment only if every input knew it with the same
 content identity), preserving the consistency invariant: queries return
 byte-identical results before, during, and after compaction.
 
-The swap is atomic: the merged segment is fully built (and spilled) first;
-input columns are pre-warmed into memory so in-flight queries holding the
-old segment list keep working even after the old spill dirs are retired.
+The swap is atomic AND crash-safe: the merged segment is fully built (and
+spilled, but NOT registered in the root manifest) first; only
+``SegmentStore.replace_segments`` commits "merged in, inputs out" — one
+atomic manifest write — so a hard kill at any point leaves a reload
+counting every record exactly once.  Input columns are pre-warmed into
+memory so in-flight queries holding the old segment list keep working even
+after the old spill dirs are retired (the ``SpillGC`` deletes them later).
+
+The compactor is also the retention plane's muscle: a segment stamped with
+a ``retention_cutoff`` (see ``maintenance.retention``) has its expired rows
+physically dropped during the rewrite — such segments are compaction
+candidates even solo, so a straddler is purged without waiting for small
+neighbors.
 """
 from __future__ import annotations
 
@@ -26,6 +36,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core.maintenance.lease import FencedWriteError, LeaseManager
+from repro.core.maintenance.retention import RETENTION_CUTOFF
 from repro.core.query.store import (Segment, SegmentStore, pack_known_bitmap,
                                     rules_known_for_versions)
 from repro.core.records import RecordBatch
@@ -36,10 +48,12 @@ from repro.core.stream_processor import ENRICH_COLUMN
 class CompactionReport:
     merges: int = 0
     merges_failed: int = 0      # group raised (e.g. corrupt spill file)
+    merges_contended: int = 0   # a group member was leased elsewhere
     errors: list = None         # (segment ids, error) pairs, capped
     segments_in: int = 0
     segments_out: int = 0
     records: int = 0
+    rows_purged: int = 0        # retention-tombstoned rows dropped
     bytes_rewritten: int = 0
     seconds: float = 0.0
 
@@ -51,15 +65,22 @@ class CompactionReport:
 class Compactor:
     """``min_records``: a sealed segment smaller than this is a merge
     candidate (default: half the store's seal size).  ``target_records``:
-    stop growing a merge group at this size (default: the seal size)."""
+    stop growing a merge group at this size (default: the seal size).
+    ``leases``: when the distributed maintenance plane is live, group
+    members are leased before the rewrite so compaction never races a
+    backfill/retention writer on the same segment (contended groups are
+    skipped, retried next cycle)."""
 
     def __init__(self, store: SegmentStore, *, min_records: int = None,
-                 target_records: int = None):
+                 target_records: int = None, leases: LeaseManager = None,
+                 worker_id: str = "compactor-0"):
         self.store = store
         self.min_records = (min_records if min_records is not None
                             else max(1, store.segment_size // 2))
         self.target_records = (target_records if target_records is not None
                                else store.segment_size)
+        self.leases = leases
+        self.worker_id = worker_id
         # failure memory (mirrors BackfillWorker._failed_ids): a permanently
         # failing merge group (e.g. corrupt spill file) must not be fully
         # re-read and re-failed every cycle, nor starve healthy groups
@@ -73,25 +94,39 @@ class Compactor:
         return {name: (dtype, tuple(shape[1:]))
                 for name, (dtype, shape) in seg.meta["columns"].items()}
 
+    @staticmethod
+    def _needs_purge(seg) -> bool:
+        """Retention stamped this segment: expired rows await the rewrite."""
+        return (RETENTION_CUTOFF in seg.meta
+                and "timestamp" in seg.meta["columns"])
+
     def candidate_groups(self) -> list:
-        """Runs of >= 2 adjacent undersized segments with identical schemas
+        """Runs of adjacent compactable segments with identical schemas
         (column names AND dtypes/widths), greedily grown up to
-        ``target_records``."""
+        ``target_records``.  A run qualifies with >= 2 undersized members
+        (the merge case) or with ANY retention-tombstoned member (the purge
+        case — a straddler is rewritten solo rather than waiting for small
+        neighbors)."""
         groups, run, run_n = [], [], 0
+
+        def close(r):
+            if len(r) >= 2 or any(self._needs_purge(s) for s in r):
+                groups.append(r)
+
         for seg in list(self.store.segments):
-            small = seg.num_records < self.min_records
-            fits = run_n + seg.num_records <= self.target_records
+            purge = self._needs_purge(seg)
+            small = seg.num_records < self.min_records or purge
+            fits = (run_n + seg.num_records <= self.target_records
+                    or (purge and not run))
             same_schema = (not run
                            or self._schema(seg) == self._schema(run[0]))
             if small and fits and same_schema:
                 run.append(seg)
                 run_n += seg.num_records
             else:
-                if len(run) >= 2:
-                    groups.append(run)
+                close(run)
                 run, run_n = ([seg], seg.num_records) if small else ([], 0)
-        if len(run) >= 2:
-            groups.append(run)
+        close(run)
         return groups
 
     def run_cycle(self, *, max_merges: int = None,
@@ -114,7 +149,7 @@ class Compactor:
             # the cycle for the remaining groups (same contract as the
             # BackfillWorker's per-segment isolation)
             try:
-                ok = self._merge(group)
+                state, purged = self._merge(group)
             except Exception as e:  # noqa: BLE001
                 rep.merges_failed += 1
                 self._failed_keys.add(self._key(group))
@@ -123,11 +158,14 @@ class Compactor:
                         ([s.segment_id for s in group], str(e)))
                 continue
             self._failed_keys.discard(self._key(group))
-            if ok:
+            if state == "contended":
+                rep.merges_contended += 1
+            elif state == "merged":
                 rep.merges += 1
                 rep.segments_in += len(group)
                 rep.segments_out += 1
                 rep.records += sum(s.num_records for s in group)
+                rep.rows_purged += purged
                 rep.bytes_rewritten += cost
                 used += cost
         rep.seconds = time.perf_counter() - t0
@@ -137,25 +175,71 @@ class Compactor:
     def _key(group: list) -> tuple:
         return tuple(s.segment_id for s in group)
 
-    def _merge(self, group: list) -> bool:
+    def _merge(self, group: list) -> tuple:
+        """-> (state, rows purged); state in {"merged", "raced",
+        "contended"}.  Leases every member first (when a LeaseManager is
+        wired) so no backfill/retention writer can swap a member's
+        enrichment between our column reads and the list swap; the commit
+        itself re-checks every lease INSIDE the store lock (the fence), so
+        a merge that outlived its lease TTL — its columns possibly read
+        before a successor's install — can never commit."""
+        leases = []
+        fence = None
+        if self.leases is not None:
+            for s in group:
+                lease = self.leases.acquire(s.segment_id, self.worker_id)
+                if lease is None:
+                    for held in leases:
+                        self.leases.release(held)
+                    return "contended", 0
+                leases.append(lease)
+
+            def fence():
+                for held in leases:
+                    self.leases.check(held)
+        try:
+            return self._merge_leased(group, fence)
+        except FencedWriteError:
+            return "contended", 0
+        finally:
+            for held in leases:
+                self.leases.release(held)
+
+    def _merge_leased(self, group: list, fence=None) -> tuple:
+        # retention purge: drop rows below a member's tombstone cutoff; the
+        # merged segment re-derives every artifact from the survivors
+        masks, purged = [], 0
+        for s in group:
+            if self._needs_purge(s):
+                ts = np.asarray(s.column("timestamp", cache=True))
+                m = ts >= s.meta[RETENTION_CUTOFF]
+                purged += int(len(m) - m.sum())
+                masks.append(m)
+            else:
+                masks.append(None)
         # pre-warm every input column so readers holding the old segment
         # list stay served after the old spill dirs are retired
         names = sorted(group[0].meta["columns"])
         cols = {}
         for name in names:
             parts = [np.asarray(s.column(name, cache=True)) for s in group]
+            parts = [p if m is None else p[m]
+                     for p, m in zip(parts, masks)]
             if name == ENRICH_COLUMN:
                 W = max(p.shape[1] for p in parts)
                 parts = [np.pad(p, ((0, 0), (0, W - p.shape[1])))
                          for p in parts]
             cols[name] = np.concatenate(parts)
+        # the merged segment spills UNREGISTERED: replace_segments' single
+        # manifest commit below is the crash-safety commit point
         merged = self.store.make_segment_from_batch(RecordBatch(cols))
         try:
             self._fix_coverage(merged, group)
-            swapped = self.store.replace_segments(group, merged)
+            swapped = self.store.replace_segments(group, merged, fence=fence)
         except Exception:
-            # never leave an orphaned merged spill dir behind: load() would
-            # pick it up ALONGSIDE the un-retired inputs and double-count
+            # never leave an orphaned merged spill dir behind: a
+            # pre-manifest load() would pick it up ALONGSIDE the un-retired
+            # inputs and double-count
             if merged.path is not None:
                 shutil.rmtree(merged.path, ignore_errors=True)
             raise
@@ -163,8 +247,8 @@ class Compactor:
             # raced with another maintenance action — discard our artifact
             if merged.path is not None:
                 shutil.rmtree(merged.path, ignore_errors=True)
-            return False
-        return True
+            return "raced", 0
+        return "merged", purged
 
     def _fix_coverage(self, merged: Segment, group: list) -> None:
         """Merged ``rules_known`` = intersection of the inputs' rule-ident

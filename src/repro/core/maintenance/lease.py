@@ -1,0 +1,173 @@
+"""Per-segment leases with epoch fencing — the maintenance plane's mutual
+exclusion primitive.
+
+Distributed maintenance workers (``MaintenanceWorkerPool``) shard work by
+segment-id hash, so under a correct configuration two workers never target
+the same segment.  Sharding alone, however, is a *policy*, not a guarantee:
+a misconfigured pool, a worker restarted under a stale shard map, or a
+paused worker resuming after its shard was reassigned can all aim two
+writers at one segment.  Leases make exclusion explicit, and **epoch
+fencing** makes it crash-safe:
+
+  * ``acquire(segment_id, holder)`` grants a time-bounded lease and bumps
+    the segment's **fencing epoch** — a monotonic per-segment counter that
+    never moves backwards, persisted through the segment store's crash-safe
+    manifest when one is attached (a process restart cannot re-issue an
+    old epoch);
+  * a crashed (or descheduled) worker's lease simply *expires*: the next
+    ``acquire`` succeeds with a higher epoch instead of wedging the shard;
+  * every segment **write** carries its lease's epoch as a fencing token
+    (``Segment.apply_update(fence=...)``): the token is checked against the
+    highest epoch ever issued for that segment, inside the segment's write
+    lock, immediately before the first byte is mutated.  A worker that lost
+    its lease — however late it wakes up — gets ``FencedWriteError`` rather
+    than silently clobbering its successor's install.
+
+This is the classic fencing-token discipline (Chubby / ZooKeeper lock
+services): expiry alone never rejects a write — only the existence of a
+*successor* epoch does — so a slow-but-uncontended worker is never failed
+by clock skew, while a superseded one can never interleave with the new
+holder.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+
+class FencedWriteError(RuntimeError):
+    """A segment write presented a stale fencing token: the writer's lease
+    was superseded (its epoch is below the highest issued for the segment).
+    Workers treat this as "lost the race" — skip, never retry the write
+    with the same lease."""
+
+
+@dataclass
+class Lease:
+    """One granted lease.  ``epoch`` is the fencing token its writes carry;
+    ``expires_at`` is advisory for the *next acquirer* (expiry makes the
+    segment re-acquirable; it does not by itself invalidate writes)."""
+    segment_id: int
+    holder: str
+    epoch: int
+    expires_at: float
+    released: bool = field(default=False, compare=False)
+
+
+def shard_of(segment_id: int, num_shards: int) -> int:
+    """Stable segment-id -> shard hash (Knuth multiplicative), shared by
+    the pool and by anything that needs to predict worker ownership.  A
+    plain modulo would correlate with the store's round-robin id
+    allocation; the multiplicative mix keeps shards balanced under any id
+    stride."""
+    if num_shards <= 1:
+        return 0
+    return ((int(segment_id) * 2654435761) & 0xFFFFFFFF) % num_shards
+
+
+class LeaseManager:
+    """Thread-safe lease table + fencing-epoch registry.
+
+    One instance coordinates every maintenance writer over a store
+    (backfill workers, compactor, retention).  When ``manifest`` is given
+    (the SegmentStore's crash-safe root manifest) an epoch is never
+    granted above what is durably reserved on disk, so epochs survive
+    process restarts — the manifest doubles as the durable fencing-token
+    store.  Reservation is done in BLOCKS of ``epoch_block``: the
+    persisted value is an upper bound on epochs ever issued, written once
+    per block rather than once per acquire — N pool workers do not
+    serialize on per-segment manifest I/O on the very path this plane
+    parallelizes, and a restarted manager simply resumes ABOVE the bound
+    (unused reserved epochs are skipped, monotonicity holds).
+
+    ``clock`` is injectable (tests drive expiry deterministically)."""
+
+    def __init__(self, *, ttl: float = 30.0, clock=time.monotonic,
+                 manifest=None, epoch_block: int = 64):
+        self.ttl = float(ttl)
+        self.clock = clock
+        self.manifest = manifest
+        self.epoch_block = max(int(epoch_block), 1)
+        self._lock = threading.Lock()
+        self._leases: dict = {}     # segment_id -> Lease (latest granted)
+        self._epochs: dict = {}     # segment_id -> highest issued epoch
+        self._reserved: dict = {}   # segment_id -> highest epoch durable
+        if manifest is not None:
+            for sid, epoch in manifest.fences().items():
+                self._epochs[int(sid)] = int(epoch)
+                self._reserved[int(sid)] = int(epoch)
+
+    # -- grant plane -------------------------------------------------------
+    def acquire(self, segment_id: int, holder: str) -> Lease:
+        """Try to lease ``segment_id``.  Returns ``None`` while another
+        holder's unexpired lease stands (the caller skips the segment this
+        cycle); otherwise grants a fresh lease one epoch above every epoch
+        ever issued for the segment — which *immediately* fences any
+        still-running previous holder."""
+        sid = int(segment_id)
+        with self._lock:
+            now = self.clock()
+            cur = self._leases.get(sid)
+            if (cur is not None and not cur.released
+                    and cur.holder != holder and cur.expires_at > now):
+                return None
+            epoch = self._epochs.get(sid, 0) + 1
+            if self.manifest is not None and \
+                    epoch > self._reserved.get(sid, 0):
+                # durability first: a covering reservation must be on disk
+                # before any write can carry this epoch, or a crash+restart
+                # could re-issue it.  Reserving a block amortizes the
+                # manifest write to once per epoch_block acquires.
+                bound = epoch + self.epoch_block - 1
+                self.manifest.commit(fences={sid: bound})
+                self._reserved[sid] = bound
+            self._epochs[sid] = epoch
+            lease = Lease(segment_id=sid, holder=holder, epoch=epoch,
+                          expires_at=now + self.ttl)
+            self._leases[sid] = lease
+            return lease
+
+    def renew(self, lease: Lease) -> bool:
+        """Extend a still-current lease's expiry.  False once superseded."""
+        with self._lock:
+            if (lease.released
+                    or self._epochs.get(lease.segment_id, 0) != lease.epoch):
+                return False
+            lease.expires_at = self.clock() + self.ttl
+            return True
+
+    def release(self, lease: Lease) -> None:
+        """Give the lease up early (normal end-of-write path).  The epoch
+        registry is untouched: fencing history never rewinds."""
+        with self._lock:
+            lease.released = True
+            if self._leases.get(lease.segment_id) is lease:
+                del self._leases[lease.segment_id]
+
+    # -- fencing plane -----------------------------------------------------
+    def check(self, lease: Lease) -> None:
+        """The write barrier: raise ``FencedWriteError`` if ``lease`` was
+        superseded by a higher epoch (or released).  Called by
+        ``Segment.apply_update`` via ``fence=``, inside the segment's write
+        lock, before the first mutation."""
+        with self._lock:
+            current = self._epochs.get(lease.segment_id, 0)
+            if lease.released or lease.epoch < current:
+                raise FencedWriteError(
+                    f"segment {lease.segment_id}: fencing token "
+                    f"{lease.epoch} (holder {lease.holder!r}) superseded by "
+                    f"epoch {current} — write rejected")
+
+    def fence(self, lease: Lease):
+        """Zero-arg fencing callable for ``Segment.apply_update(fence=)``."""
+        return lambda: self.check(lease)
+
+    def holder_of(self, segment_id: int):
+        """Current unexpired holder (None when free) — observability."""
+        with self._lock:
+            cur = self._leases.get(int(segment_id))
+            if (cur is None or cur.released
+                    or cur.expires_at <= self.clock()):
+                return None
+            return cur.holder

@@ -1,0 +1,240 @@
+"""Retention (TTL age-out) and spill-dir garbage collection.
+
+The maintenance plane is the natural home for age-out: observability data
+has a retention horizon, and enforcing it belongs off the ingest and query
+paths, under the same lease/fencing discipline as every other segment
+writer.
+
+Two levels, LSM-style:
+
+  * **segment expiry** — a sealed segment whose entire timestamp range
+    predates the horizon is retired outright: one atomic
+    ``SegmentStore.retire_segments`` (manifest commit is the commit point,
+    a maintenance epoch is published, the spill dir is tombstoned for the
+    GC).  In-flight readers holding the old segment list stay correct —
+    the objects and files remain valid until the GC collects them;
+  * **row tombstoning** — a segment *straddling* the horizon is stamped
+    with a ``retention_cutoff`` in its metadata (a fenced, meta-only
+    ``apply_update``).  Rows below the cutoff are logically expired; the
+    :class:`~repro.core.maintenance.compactor.Compactor` physically drops
+    them on its next rewrite of the segment (straddlers become compaction
+    candidates even solo), re-deriving every index and zone map from the
+    surviving rows.  Until that rewrite the rows remain visible on every
+    query path — retention here is an eventual, compaction-enforced bound
+    (the LSM tombstone model), never a torn per-path filter.
+
+The horizon is **event time** (the ``timestamp`` column's units), computed
+watermark-style from the newest sealed data — so tests and replays are
+deterministic and a stalled ingest never silently expires the whole store.
+
+``SpillGC`` closes the loop from PR 1's tombstone-don't-delete decision:
+RETIRED spill dirs are kept on disk for in-flight readers, and deleted
+only once (1) the manifest no longer lists the segment, (2) no leased
+arrangement pins it (``ArrangementStore.pinned_segment_ids`` — the
+epoch-drain signal), and (3) a grace window has passed since tombstoning
+(covers readers outside the arrangement plane, e.g. cold copy-mode scans).
+"""
+from __future__ import annotations
+
+import re
+import shutil
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.maintenance.lease import FencedWriteError, LeaseManager
+from repro.core.query.store import RETIRED_MARKER
+
+_SEGDIR_RE = re.compile(r"segment-(\d+)$")
+
+# meta key: rows with timestamp < this value are logically expired and are
+# physically dropped by the Compactor's next rewrite of the segment
+RETENTION_CUTOFF = "retention_cutoff"
+
+
+@dataclass(frozen=True)
+class RetentionPolicy:
+    """``max_age``: event-time units (the ``timestamp`` column's) a record
+    stays queryable past the store's newest sealed timestamp.  ``horizon``
+    overrides the watermark computation with an absolute cutoff."""
+    max_age: int = None
+    horizon: int = None
+
+
+@dataclass
+class RetentionReport:
+    horizon: int = None
+    segments_expired: int = 0   # whole segments retired
+    segments_marked: int = 0    # straddlers stamped with a cutoff
+    rows_tombstoned: int = 0    # logically expired rows awaiting compaction
+    records_expired: int = 0
+    segments_contended: int = 0
+    seconds: float = 0.0
+    errors: list = field(default_factory=list)
+
+
+class RetentionWorker:
+    """One retention pass per ``run_cycle``; safe to co-run with backfill
+    and compaction (writes are leased + fenced when ``leases`` is given,
+    and ``retire_segments`` no-ops on races either way)."""
+
+    def __init__(self, store, policy: RetentionPolicy, *,
+                 leases: LeaseManager = None,
+                 worker_id: str = "retention-0"):
+        self.store = store
+        self.policy = policy
+        self.leases = leases
+        self.worker_id = worker_id
+
+    def horizon(self) -> int:
+        """The event-time cutoff: explicit policy horizon, else watermark
+        (newest sealed ``ts_max``) minus ``max_age``.  None = nothing to
+        expire (no policy, or no timestamped segments yet)."""
+        if self.policy.horizon is not None:
+            return int(self.policy.horizon)
+        if self.policy.max_age is None:
+            return None
+        newest = [s.meta["ts_max"] for s in list(self.store.segments)
+                  if s.meta.get("ts_max") is not None]
+        if not newest:
+            return None
+        return int(max(newest)) - int(self.policy.max_age)
+
+    def run_cycle(self) -> RetentionReport:
+        rep = RetentionReport()
+        t0 = time.perf_counter()
+        horizon = self.horizon()
+        rep.horizon = horizon
+        if horizon is None:
+            rep.seconds = time.perf_counter() - t0
+            return rep
+        for seg in list(self.store.segments):
+            ts_min = seg.meta.get("ts_min")
+            ts_max = seg.meta.get("ts_max")
+            if ts_min is None or ts_max is None:
+                continue    # untimestamped segments never age out
+            try:
+                if ts_max < horizon:
+                    self._expire(seg, rep)
+                elif ts_min < horizon and \
+                        seg.meta.get(RETENTION_CUTOFF) != horizon:
+                    self._mark(seg, horizon, rep)
+            except FencedWriteError:
+                rep.segments_contended += 1
+            except Exception as e:  # noqa: BLE001 — per-segment isolation
+                if len(rep.errors) < 8:
+                    rep.errors.append((seg.segment_id, str(e)))
+        rep.seconds = time.perf_counter() - t0
+        return rep
+
+    def _expire(self, seg, rep: RetentionReport) -> None:
+        lease = self._acquire(seg)
+        if lease is None and self.leases is not None:
+            rep.segments_contended += 1
+            return
+        try:
+            fence = self.leases.fence(lease) if lease is not None else None
+            if self.store.retire_segments([seg], fence=fence):
+                rep.segments_expired += 1
+                rep.records_expired += seg.num_records
+        finally:
+            if lease is not None:
+                self.leases.release(lease)
+
+    def _mark(self, seg, horizon: int, rep: RetentionReport) -> None:
+        lease = self._acquire(seg)
+        if lease is None and self.leases is not None:
+            rep.segments_contended += 1
+            return
+        try:
+            fence = self.leases.fence(lease) if lease is not None else None
+            seg.apply_update(meta_updates={RETENTION_CUTOFF: int(horizon)},
+                             fence=fence)
+            ts = np.asarray(seg.column("timestamp", cache=False))
+            expired = int((ts < horizon).sum())
+            rep.segments_marked += 1
+            rep.rows_tombstoned += expired
+        finally:
+            if lease is not None:
+                self.leases.release(lease)
+
+    def _acquire(self, seg):
+        if self.leases is None:
+            return None
+        return self.leases.acquire(seg.segment_id, self.worker_id)
+
+
+@dataclass
+class GCReport:
+    dirs_deleted: int = 0
+    bytes_deleted: int = 0
+    dirs_kept_pinned: int = 0   # a leased arrangement still references it
+    dirs_kept_grace: int = 0    # tombstone younger than the grace window
+    seconds: float = 0.0
+
+
+class SpillGC:
+    """Deletes RETIRED spill dirs once no reader can reference them.
+
+    A dir qualifies when its segment id is absent from the root manifest
+    (membership already atomically revoked), no arrangement store reports
+    it pinned (``pinned_segment_ids`` — segment ids referenced by
+    refcounted device columns of in-flight leases; the deterministic
+    epoch-drain signal), and its RETIRED tombstone is at least ``grace_s``
+    old (readers outside the arrangement plane — cold copy-mode
+    materialization, direct column reads — finish well inside it).
+
+    ``arrangements`` accepts one ``ArrangementStore`` or an iterable of
+    them (one per engine is common)."""
+
+    def __init__(self, store, *, arrangements=None, grace_s: float = 60.0,
+                 clock=time.time):
+        self.store = store
+        if arrangements is None:
+            self.arrangements = ()
+        elif hasattr(arrangements, "pinned_segment_ids"):
+            self.arrangements = (arrangements,)
+        else:
+            self.arrangements = tuple(arrangements)
+        self.grace_s = float(grace_s)
+        self.clock = clock
+
+    def run_cycle(self) -> GCReport:
+        rep = GCReport()
+        t0 = time.perf_counter()
+        root = self.store.root
+        if root is None:
+            rep.seconds = time.perf_counter() - t0
+            return rep
+        valid = (self.store.manifest.segment_ids()
+                 if self.store.manifest is not None else set())
+        pinned = set()
+        for arr in self.arrangements:
+            pinned |= arr.pinned_segment_ids()
+        now = self.clock()
+        for d in sorted(Path(root).glob("segment-*")):
+            marker = d / RETIRED_MARKER
+            if not marker.exists():
+                continue
+            m = _SEGDIR_RE.search(d.name)
+            sid = int(m.group(1)) if m else None
+            if sid is not None and sid in valid:
+                continue    # tombstone raced a re-adoption; manifest wins
+            if sid is not None and sid in pinned:
+                rep.dirs_kept_pinned += 1
+                continue
+            try:
+                if now - marker.stat().st_mtime < self.grace_s:
+                    rep.dirs_kept_grace += 1
+                    continue
+                size = sum(f.stat().st_size
+                           for f in d.glob("*") if f.is_file())
+                shutil.rmtree(d)
+                rep.dirs_deleted += 1
+                rep.bytes_deleted += size
+            except OSError:
+                continue    # raced another GC / busy file; retry next cycle
+        rep.seconds = time.perf_counter() - t0
+        return rep

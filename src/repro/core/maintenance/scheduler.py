@@ -17,10 +17,18 @@ from dataclasses import dataclass
 
 @dataclass(frozen=True)
 class MaintenancePolicy:
-    """Per-cycle budget.  ``None`` disables that bound."""
+    """Per-cycle budget.  ``None`` disables that bound.
+
+    ``max_rows_per_segment_pass`` bounds how many ROWS one cycle matches
+    within a single segment: a segment bigger than the budget is processed
+    incrementally, each pass persisting a row-watermark checkpoint (see
+    ``BackfillWorker.backfill_segment``), so even one oversized segment
+    cannot blow the cycle's latency envelope — the mid-segment analogue of
+    the admit-at-least-one rule below."""
     max_bytes_per_cycle: int = None
     max_records_per_cycle: int = None
     max_segments_per_cycle: int = None
+    max_rows_per_segment_pass: int = None
 
 
 class MaintenanceScheduler:

@@ -285,6 +285,18 @@ class ArrangementStore:
         with self._lock:
             return dict(self.uploads)
 
+    def pinned_segment_ids(self) -> set:
+        """Segment ids still referenced by in-flight readers — the
+        epoch-drain signal the spill GC consults before deleting a RETIRED
+        segment's directory.  A pooled column with ``refs > 0`` belongs to
+        at least one live arrangement (every pooled build refs its
+        columns, and an arrangement's columns drain exactly when its last
+        lease releases), so scanning referenced columns covers every
+        leased arrangement, retired or live."""
+        with self._lock:
+            return {ck[0][0] for ck, col in self._columns.items()
+                    if col.refs > 0}
+
     # -- internals ---------------------------------------------------------
     def _make_lease_locked(self, arr, owner):
         self._lease_owners[owner] += 1

@@ -26,6 +26,22 @@ and re-plans segments the maintenance plane swapped mid-query.
 Consistency (paper §3.4 step 4) is preserved: records ingested under an
 engine version that did not know a rule fall back to full scan for that
 segment (hybrid execution), so enrichment never changes results.
+
+The plane's invariants, each asserted in tests:
+
+  * results are byte-identical across ``full_scan`` / ``text_index`` /
+    ``fluxsieve`` and across every fluxsieve path class — before, during,
+    and after any maintenance action;
+  * ONE counted D2H transfer per query on the stacked bitmap path
+    (``executor.transfer_count``, under ``jax.transfer_guard``), ONE fused
+    matcher D2H for all fallback/full-scan segments of a query;
+  * ONE H2D upload per enrichment word column per maintenance epoch,
+    shared by all concurrent clients and shards
+    (``ArrangementStore.upload_counts`` — every value == 1);
+  * enriched-path results re-validate the meta snapshot their
+    classification used (meta-flips-last on the writer side makes the
+    check sufficient); swapped segments re-plan individually, full scans
+    return directly because they never read enrichment state.
 """
 from __future__ import annotations
 

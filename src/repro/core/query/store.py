@@ -18,6 +18,19 @@ Zone maps kept per segment:
   * min/max ``engine_version_id`` — consistency propagation (§3.4 step 4):
     the mapper only uses the enriched path on segments whose records were all
     ingested with an engine that knew the rule.
+
+Durability invariants (maintenance plane v2):
+  * **meta-flips-last** — ``Segment.apply_update`` installs data before
+    flipping ``meta`` and bumps the cache token after, so no stale derived
+    state can ever be cached under a live token;
+  * **manifest is the commit point** — segment-set membership (seal
+    registration, compaction swap, retention retire) changes as ONE atomic
+    :class:`Manifest` write; ``SegmentStore.load`` trusts it, closing the
+    crash window where a merged segment and its un-retired inputs coexist
+    on disk (RETIRED tombstones are advisory: legacy loads + GC keys);
+  * **fenced writes** — ``apply_update(fence=...)`` runs the maintenance
+    plane's epoch-fencing barrier inside the write lock, before the first
+    mutation (see ``repro.core.maintenance.lease``).
 """
 from __future__ import annotations
 
@@ -40,12 +53,113 @@ _TOKEN_RE = re.compile(r"[A-Za-z0-9_\-./:]+")
 # fraction of a segment above which a rule is "dense" and gets no posting list
 POSTING_DENSITY_CUT = 0.1
 
-# tombstone file marking a spill dir replaced by compaction: load() skips it
+# tombstone file marking a spill dir replaced by compaction/retention: load()
+# skips it (pre-manifest stores), SpillGC deletes it once no reader remains
 RETIRED_MARKER = "RETIRED"
+
+# root manifest: the authoritative valid-segment set + fencing-epoch registry
+MANIFEST_NAME = "manifest.json"
 
 
 def tokenize(text: str) -> list:
     return _TOKEN_RE.findall(text)
+
+
+class Manifest:
+    """Crash-safe root manifest for a spilled ``SegmentStore``.
+
+    A hard kill between a compactor spilling its merged segment and
+    tombstoning the inputs used to leave BOTH on disk, so a later
+    ``SegmentStore.load`` would double-count every merged record.  The
+    manifest closes that window by making segment-set membership a single
+    atomic commit: the valid segment set (plus the id allocator's
+    high-water mark and the maintenance plane's fencing epochs) lives in
+    one small JSON document, rewritten via tmp + ``os.replace`` — a reload
+    sees either the pre-swap or the post-swap world, never a mix.
+
+    Commit protocol (writers):
+      * a sealed segment spills FIRST, then registers — a crash in between
+        leaves an unregistered dir that ``load`` ignores;
+      * compaction materializes its merged segment *unregistered*
+        (``make_segment_from_batch``), and ``replace_segments`` commits
+        "new in, old out" as ONE manifest write — the commit point; the
+        RETIRED tombstones written afterwards are advisory (for
+        pre-manifest readers and the GC), not load-bearing;
+      * lease epochs persist here too (``fences``), so a restarted process
+        can never re-issue a fencing token an earlier holder already wrote
+        under (see ``maintenance.lease.LeaseManager``).
+
+    Thread-safe; state is held in memory and every ``commit`` rewrites the
+    full (small) document atomically.
+    """
+
+    def __init__(self, root):
+        self.root = Path(root)
+        self.path = self.root / MANIFEST_NAME
+        self._lock = threading.Lock()
+        self._state = {"segments": {}, "next_id": 0, "fences": {}}
+
+    @staticmethod
+    def read(root) -> dict:
+        """The on-disk manifest state, or None when no manifest exists
+        (pre-manifest store — ``load`` falls back to directory scanning)."""
+        path = Path(root) / MANIFEST_NAME
+        if not path.exists():
+            return None
+        return json.loads(path.read_text())
+
+    def adopt(self, state: dict) -> None:
+        """Install previously persisted state (``SegmentStore.load``)."""
+        with self._lock:
+            self._state = {"segments": dict(state.get("segments", {})),
+                           "next_id": int(state.get("next_id", 0)),
+                           "fences": dict(state.get("fences", {}))}
+
+    def commit(self, *, add: dict = None, remove=None, next_id: int = None,
+               fences: dict = None) -> None:
+        """Atomically apply a membership/epoch delta and persist.
+
+        ``add``: {segment_id: dirname}; ``remove``: segment ids;
+        ``next_id``: id-allocator high-water mark (monotonic);
+        ``fences``: {segment_id: epoch} (monotonic per segment)."""
+        with self._lock:
+            seg = self._state["segments"]
+            if add:
+                for sid, name in add.items():
+                    seg[str(int(sid))] = str(name)
+            for sid in (remove or ()):
+                seg.pop(str(int(sid)), None)
+            if next_id is not None:
+                self._state["next_id"] = max(self._state["next_id"],
+                                             int(next_id))
+            if fences:
+                f = self._state["fences"]
+                for sid, epoch in fences.items():
+                    key = str(int(sid))
+                    f[key] = max(int(f.get(key, 0)), int(epoch))
+            _atomic_write_text(self.path,
+                               json.dumps(self._state, sort_keys=True))
+
+    # -- readers -----------------------------------------------------------
+    def segment_dirs(self) -> list:
+        """Valid spill dirs in segment-id order (the load set)."""
+        with self._lock:
+            items = sorted(self._state["segments"].items(),
+                           key=lambda kv: int(kv[0]))
+            return [self.root / name for _, name in items]
+
+    def segment_ids(self) -> set:
+        with self._lock:
+            return {int(s) for s in self._state["segments"]}
+
+    def next_id(self) -> int:
+        with self._lock:
+            return self._state["next_id"]
+
+    def fences(self) -> dict:
+        with self._lock:
+            return {int(s): int(e)
+                    for s, e in self._state["fences"].items()}
 
 
 def build_text_index(data: np.ndarray) -> dict:
@@ -234,7 +348,7 @@ class Segment:
     # -- maintenance -------------------------------------------------------
     def apply_update(self, *, columns: dict = None, meta_updates: dict = None,
                      rule_postings: dict = None,
-                     text_index: dict = None) -> None:
+                     text_index: dict = None, fence=None) -> None:
         """Atomically swap enrichment artifacts of a sealed segment.
 
         Maintenance-plane entry point (backfill rewrites ``rule_bitmap`` +
@@ -246,7 +360,16 @@ class Segment:
           * in-memory columns/postings/indexes are installed *before* the
             metadata flips, and ``self.meta`` is replaced by a single
             attribute assignment — a reader that still sees the old meta
-            takes the old (fallback/scan) path, which stays byte-identical.
+            takes the old (fallback/scan) path, which stays byte-identical
+            (**meta-flips-last** ordering: install happens-before flip
+            happens-before token bump).
+
+        ``fence`` is the maintenance plane's write barrier: a zero-arg
+        callable (``LeaseManager.fence(lease)``) invoked inside the write
+        lock before the first mutation.  A writer whose lease was
+        superseded raises ``FencedWriteError`` here and the segment is
+        untouched — two maintenance workers can never interleave writes on
+        one segment.
 
         Safe on its own only when the new data is a pure *extension* (old
         claims still hold over the new bits).  When previously-claimed bits
@@ -262,6 +385,8 @@ class Segment:
         # reader could have loaded the OLD file and install it as the cache
         # entry AFTER the swap below, poisoning every later query
         with self._io_lock:
+            if fence is not None:
+                fence()     # raises FencedWriteError on a superseded lease
             if self.path is not None:
                 for name, arr in columns.items():
                     _atomic_save_npy(self.path / f"{name}.npy", arr)
@@ -406,6 +531,11 @@ class SegmentStore:
         self._active_count = 0
         self._next_id = 0           # monotonic (compaction retires ids)
         self._lock = threading.RLock()
+        # crash-safe root manifest (spilled stores only): authoritative
+        # valid-segment set + durable fencing epochs.  A FRESH store over a
+        # root starts with an empty manifest (first commit overwrites any
+        # stale file); SegmentStore.load adopts the persisted one instead.
+        self.manifest = Manifest(self.root) if self.root is not None else None
         # maintenance-epoch listeners (shared-arrangement stores): every
         # apply_update / drop_caches / replace_segments publishes the
         # affected segment ids here instead of invalidating caches in place
@@ -465,7 +595,8 @@ class SegmentStore:
         self._active_count = len(tail)
         self.segments.append(self._make_segment(head))
 
-    def _make_segment(self, batch: RecordBatch) -> Segment:
+    def _make_segment(self, batch: RecordBatch,
+                      register: bool = True) -> Segment:
         sid = self._next_id
         self._next_id += 1
         meta = {"columns": {k: (str(v.dtype), list(v.shape))
@@ -501,24 +632,45 @@ class SegmentStore:
             if f in batch.columns:
                 seg._text_index[f] = build_text_index(batch.columns[f])
         if self.root is not None:
+            # spill FIRST, register second: a crash in between leaves an
+            # unregistered dir that a manifest-guarded load simply ignores
             seg.spill(self.root)
+            if register:
+                self.manifest.commit(add={sid: seg.path.name},
+                                     next_id=self._next_id)
         return seg
 
     # -- maintenance -------------------------------------------------------
     def make_segment_from_batch(self, batch: RecordBatch) -> Segment:
         """Build (and spill) a sealed segment outside the append path — the
         Compactor uses this to materialize a merged segment before swapping
-        it into the segment list."""
-        with self._lock:
-            return self._make_segment(batch)
+        it into the segment list.
 
-    def replace_segments(self, old: list, new: Segment) -> bool:
+        The segment is deliberately NOT registered in the manifest: until
+        ``replace_segments`` commits "merged in, inputs out" as one atomic
+        manifest write, a crash leaves the spilled artifact invisible to
+        ``SegmentStore.load`` — never loaded ALONGSIDE its un-retired
+        inputs (the double-count window the manifest closes)."""
+        with self._lock:
+            return self._make_segment(batch, register=False)
+
+    def replace_segments(self, old: list, new: Segment,
+                         *, fence=None) -> bool:
         """Atomically substitute a contiguous run of sealed segments with
         one merged segment.  Returns False (no-op) if any of ``old`` is no
         longer present or the run is not contiguous — the caller simply
         retries next cycle.  Readers that grabbed the previous list keep
-        querying the old segment objects, which stay fully valid."""
+        querying the old segment objects, which stay fully valid.
+
+        ``fence`` (a zero-arg callable, e.g. the compactor's check over
+        every group member's lease) runs INSIDE the store lock before the
+        swap: a writer whose leases were superseded mid-merge raises here
+        and commits nothing — without it, a long merge outliving its lease
+        TTL could install columns read before a newer fenced install,
+        silently undoing it."""
         with self._lock:
+            if fence is not None:
+                fence()     # raises FencedWriteError on a superseded lease
             try:
                 idx = [self.segments.index(s) for s in old]
             except ValueError:
@@ -527,20 +679,61 @@ class SegmentStore:
                 return False
             self.segments = (self.segments[:idx[0]] + [new]
                              + self.segments[idx[0] + len(idx):])
+            if self.manifest is not None:
+                # THE commit point: "merged in, inputs out" lands as one
+                # atomic manifest write.  A crash before this line leaves
+                # the (unregistered) merged dir invisible; a crash after it
+                # leaves the inputs excluded even when their RETIRED
+                # tombstones below were never written — either way a reload
+                # counts every record exactly once.
+                self.manifest.commit(
+                    add={new.segment_id: new.path.name}
+                    if new.path is not None else None,
+                    remove=[s.segment_id for s in old],
+                    next_id=self._next_id)
         # compactor retire is a maintenance epoch: arrangements over the
         # replaced segments retire (in-flight leases pin them; the old
         # segment objects and spill files stay valid for those readers)
         self._publish_epoch([s.segment_id for s in old])
+        self._tombstone_all(old)
+        return True
+
+    def retire_segments(self, old: list, *, fence=None) -> bool:
+        """Atomically remove sealed segments with no replacement — the
+        retention plane's age-out path.  Same commit discipline as
+        ``replace_segments`` (one manifest write is the commit point,
+        tombstones are advisory, ``fence`` runs inside the lock before the
+        commit); returns False when any of ``old`` is no longer present
+        (raced another maintenance action — retry next cycle).  Readers
+        holding the previous segment list keep querying the old objects,
+        which stay fully valid until the GC collects their drained spill
+        dirs."""
+        with self._lock:
+            if fence is not None:
+                fence()     # raises FencedWriteError on a superseded lease
+            if any(s not in self.segments for s in old):
+                return False
+            self.segments = [s for s in self.segments if s not in old]
+            if self.manifest is not None:
+                self.manifest.commit(
+                    remove=[s.segment_id for s in old])
+        self._publish_epoch([s.segment_id for s in old])
+        self._tombstone_all(old)
+        return True
+
+    def _tombstone_all(self, old: list) -> None:
         failed = [s.segment_id for s in old if not self._retire_spill(s)]
-        if failed:
-            # a live un-tombstoned input would be double-loaded (and its
-            # records double-counted) by the next SegmentStore.load — this
-            # must not pass silently
+        if failed and self.manifest is None:
+            # pre-manifest stores rely on the tombstone alone: a live
+            # un-tombstoned input would be double-loaded (and its records
+            # double-counted) by the next SegmentStore.load — this must
+            # not pass silently.  Manifest-guarded stores are safe either
+            # way (membership already committed); the GC just loses the
+            # marker it keys on.
             warnings.warn(
                 f"segments {failed}: failed to tombstone replaced spill "
                 f"dirs; SegmentStore.load would double-count their records",
                 RuntimeWarning, stacklevel=2)
-        return True
 
     def _retire_spill(self, seg: Segment) -> bool:
         """Tombstone a replaced segment's spill dir so ``load`` skips it.
@@ -572,13 +765,44 @@ class SegmentStore:
 
     @staticmethod
     def load(root) -> "SegmentStore":
+        """Reopen a spilled store.  When a root manifest exists it is
+        authoritative: exactly the manifest's valid-segment set is loaded
+        (closing the compaction double-count window — a crash between
+        spilling a merged segment and tombstoning its inputs leaves both
+        on disk, but only one side is ever in the manifest).  Pre-manifest
+        stores fall back to directory scanning with RETIRED-tombstone
+        skipping, and are upgraded: the adopted set is committed as their
+        first manifest."""
         store = SegmentStore(root=root)
-        for d in sorted(Path(root).glob("segment-*")):
-            if (d / RETIRED_MARKER).exists():
-                continue        # replaced by compaction, kept for readers
+        persisted = Manifest.read(root)
+        if persisted is not None:
+            store.manifest.adopt(persisted)
+            dirs = []
+            for d in store.manifest.segment_dirs():
+                if d.exists():
+                    dirs.append(d)
+                else:
+                    # the manifest is the authority on what SHOULD exist:
+                    # a listed dir gone missing is data loss (external
+                    # deletion, partial restore) and must not reload as a
+                    # silently smaller store — the mirror hazard of the
+                    # double-count window the manifest closes
+                    warnings.warn(
+                        f"manifest lists {d.name} but the spill dir is "
+                        f"missing; its records are LOST from this load",
+                        RuntimeWarning, stacklevel=2)
+        else:
+            dirs = [d for d in sorted(Path(root).glob("segment-*"))
+                    if not (d / RETIRED_MARKER).exists()]
+        for d in dirs:
             seg = Segment.load(d)
             seg._on_swap = store._publish_epoch
             store.segments.append(seg)
-        store._next_id = 1 + max(
-            (s.segment_id for s in store.segments), default=-1)
+        store._next_id = max(
+            store.manifest.next_id(),
+            1 + max((s.segment_id for s in store.segments), default=-1))
+        if persisted is None and store.segments:
+            store.manifest.commit(
+                add={s.segment_id: s.path.name for s in store.segments},
+                next_id=store._next_id)
         return store

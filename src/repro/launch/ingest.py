@@ -13,8 +13,10 @@ import time
 import numpy as np
 
 from repro.core.control_plane import ControlBus
-from repro.core.maintenance import (BackfillWorker, Compactor,
-                                    MaintenancePolicy, MaintenanceScheduler)
+from repro.core.maintenance import (Compactor, MaintenancePolicy,
+                                    MaintenanceScheduler,
+                                    MaintenanceWorkerPool, RetentionPolicy,
+                                    RetentionWorker, SpillGC)
 from repro.core.matcher import compile_bundle
 from repro.core.object_store import ObjectStore
 from repro.core.patterns import Rule, RuleSet
@@ -54,6 +56,17 @@ def main(argv=None) -> int:
                     help="run the segment maintenance plane after ingest: "
                          "hold back one rule, activate it late, backfill "
                          "sealed segments (plus a compaction pass)")
+    ap.add_argument("--maintenance-workers", type=int, default=1,
+                    metavar="N",
+                    help="distributed maintenance: N leased backfill "
+                         "workers sharding segments by id hash, each with "
+                         "its own consumer-group offsets and per-shard "
+                         "convergence ack")
+    ap.add_argument("--retention", type=int, default=None, metavar="AGE",
+                    help="event-time TTL (timestamp-column units): after "
+                         "maintenance, retire segments older than AGE past "
+                         "the newest sealed timestamp, purge straddling "
+                         "rows via compaction, and GC drained spill dirs")
     args = ap.parse_args(argv)
 
     spec = WorkloadSpec(num_records=args.records,
@@ -124,13 +137,16 @@ def main(argv=None) -> int:
               f"{r_pre.latency_s * 1e3:.2f} ms")
         scheduler = MaintenanceScheduler(
             profiler, MaintenancePolicy(max_records_per_cycle=args.segment_size))
-        worker = BackfillWorker(store, bus, ostore, scheduler=scheduler,
-                                backend=args.backend)
-        rep = worker.run_until_converged()
+        pool = MaintenanceWorkerPool(store, bus, ostore,
+                                     num_workers=args.maintenance_workers,
+                                     scheduler=scheduler,
+                                     backend=args.backend)
+        rep = pool.run_until_converged()
         print(f"maintenance: backfilled {rep.segments_backfilled} segments "
               f"({rep.records} records, {rep.bytes_rewritten / 1e6:.1f} MB) "
+              f"across {len(pool.workers)} worker(s) "
               f"in {rep.seconds:.2f}s; acked={rep.acked}")
-        status = updater.await_maintenance(rep.version, [worker.worker_id])
+        status = updater.await_maintenance(rep.version, pool.worker_ids)
         r_post = qe.execute(q, path="fluxsieve")
         print(f"maintenance: post-backfill count={r_post.count} "
               f"fallback_segments={r_post.segments_fallback} "
@@ -138,12 +154,27 @@ def main(argv=None) -> int:
               f"(rollout complete={status.complete})")
         assert r_post.count == r_pre.count == late_truth
         assert r_post.segments_fallback == 0
-        crep = Compactor(store).run_cycle()
+        crep = Compactor(store, leases=pool.leases).run_cycle()
         print(f"maintenance: compaction merged {crep.segments_in} -> "
               f"{crep.segments_out} segments "
               f"({len(store.segments)} total now)")
         r_c = qe.execute(q)
         assert r_c.count == late_truth
+        if args.retention is not None:
+            before = store.num_records
+            ret = RetentionWorker(store,
+                                  RetentionPolicy(max_age=args.retention),
+                                  leases=pool.leases)
+            rrep = ret.run_cycle()
+            prep = Compactor(store, leases=pool.leases).run_cycle()
+            grep_ = SpillGC(store, arrangements=qe.arrangements,
+                            grace_s=0.0).run_cycle()
+            print(f"retention: horizon={rrep.horizon} expired "
+                  f"{rrep.segments_expired} segments "
+                  f"({rrep.records_expired} records), purged "
+                  f"{prep.rows_purged} straddler rows, GC deleted "
+                  f"{grep_.dirs_deleted} spill dirs "
+                  f"({store.num_records}/{before} records retained)")
     return 0
 
 

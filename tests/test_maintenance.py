@@ -4,7 +4,13 @@ cases (rollback to the initial version, rule removal, mixed-coverage stores).
 
 The invariant under test throughout: a query's result set is byte-identical
 whether a segment is served via backfilled bitmap, postings, metadata counts,
-or full-scan fallback — before, during, and after maintenance."""
+or full-scan fallback — before, during, and after maintenance.
+
+``FLUXSIEVE_MAINT_WORKERS=N`` (CI's distributed matrix leg) runs every
+end-to-end convergence path below through an N-worker sharded
+``MaintenanceWorkerPool`` instead of a single ``BackfillWorker`` — same
+assertions, distributed execution."""
+import os
 import threading
 
 import numpy as np
@@ -12,7 +18,20 @@ import pytest
 
 from repro.core.control_plane import ControlBus, SEGMENT_MAINTENANCE
 from repro.core.maintenance import (BackfillWorker, Compactor,
-                                    MaintenancePolicy, MaintenanceScheduler)
+                                    MaintenancePolicy, MaintenanceScheduler,
+                                    MaintenanceWorkerPool)
+
+MAINT_WORKERS = int(os.environ.get("FLUXSIEVE_MAINT_WORKERS", "1") or "1")
+
+
+def make_backfill(store, bus, ostore, **kw):
+    """A BackfillWorker, or (under the CI matrix's distributed leg) a
+    sharded+leased pool with the same run_cycle/run_until_converged/
+    worker_ids surface."""
+    if MAINT_WORKERS > 1:
+        return MaintenanceWorkerPool(store, bus, ostore,
+                                     num_workers=MAINT_WORKERS, **kw)
+    return BackfillWorker(store, bus, ostore, **kw)
 from repro.core.matcher import compile_bundle
 from repro.core.object_store import ObjectStore
 from repro.core.patterns import Rule, RuleSet
@@ -91,8 +110,8 @@ def test_backfill_late_rule_end_to_end(tmp_path):
     assert r_pre.count == truth
     assert r_pre.segments_fallback == len(w["store"].segments)
 
-    worker = BackfillWorker(w["store"], w["bus"], w["ostore"],
-                            scheduler=MaintenanceScheduler(w["profiler"]))
+    worker = make_backfill(w["store"], w["bus"], w["ostore"],
+                           scheduler=MaintenanceScheduler(w["profiler"]))
     rep = worker.run_until_converged()
     assert rep.segments_backfilled == len(w["store"].segments)
     assert rep.pending_after == 0 and rep.acked
@@ -110,9 +129,10 @@ def test_backfill_late_rule_end_to_end(tmp_path):
              for p, r in recs.items()}
     assert texts["fluxsieve"] == texts["full_scan"] == texts["text_index"]
 
-    # ack flow: updater sees the maintenance rollout as complete
+    # ack flow: updater sees the maintenance rollout as complete (one ack
+    # per worker/shard under the distributed leg)
     status = w["updater"].await_maintenance(rep.version,
-                                            [worker.worker_id], timeout=2)
+                                            worker.worker_ids, timeout=2)
     assert status.complete
 
 
@@ -123,7 +143,7 @@ def test_backfill_survives_spill_reload(tmp_path):
     late = w["late"]
     truth = w["gen"].true_count(late)
     activate_late_rule(w)
-    BackfillWorker(w["store"], w["bus"], w["ostore"]).run_until_converged()
+    make_backfill(w["store"], w["bus"], w["ostore"]).run_until_converged()
 
     reloaded = SegmentStore.load(tmp_path)
     engine = QueryEngine(reloaded, mapper=w["mapper"])
@@ -159,7 +179,7 @@ def test_backfill_concurrent_with_ingest_and_queries(tmp_path):
     late = w["late"]
     q = Query(terms=((late.fieldname, late.term),), mode="count")
     activate_late_rule(w)
-    worker = BackfillWorker(
+    worker = make_backfill(
         w["store"], w["bus"], w["ostore"],
         scheduler=MaintenanceScheduler(
             w["profiler"], MaintenancePolicy(max_segments_per_cycle=2)))
@@ -191,7 +211,7 @@ def test_backfill_thread_safe_against_queries(tmp_path):
     truth = w["gen"].true_count(late)
     q = Query(terms=((late.fieldname, late.term),), mode="count")
     activate_late_rule(w)
-    worker = BackfillWorker(w["store"], w["bus"], w["ostore"])
+    worker = make_backfill(w["store"], w["bus"], w["ostore"])
     errors = []
 
     def drain():
@@ -352,7 +372,7 @@ def test_coverage_after_rule_removal(tmp_path):
     w = make_world(tmp_path, num_records=3000, segment_size=1000,
                    hold_back=0)
     activate_late_rule(w)
-    BackfillWorker(w["store"], w["bus"], w["ostore"]).run_until_converged()
+    make_backfill(w["store"], w["bus"], w["ostore"]).run_until_converged()
 
     victim = w["spec"].planted[1]
     removed = w["full"].without_ids([1])
@@ -367,7 +387,7 @@ def test_coverage_after_rule_removal(tmp_path):
     assert r.path != "fluxsieve"
     assert r.count == w["gen"].true_count(victim)
 
-    worker = BackfillWorker(w["store"], w["bus"], w["ostore"])
+    worker = make_backfill(w["store"], w["bus"], w["ostore"])
     worker.run_until_converged()
     for seg in w["store"].segments:
         assert "1" not in seg.meta["rule_idents"]
@@ -404,7 +424,7 @@ def test_coverage_rule_changed_pattern_not_trusted(tmp_path):
     assert r.count == 2                          # stale bits NOT trusted
     assert r.segments_fallback == 1              # pre-change segment scanned
 
-    BackfillWorker(store, bus, ostore).run_until_converged()
+    make_backfill(store, bus, ostore).run_until_converged()
     r2 = engine.execute(q, path="fluxsieve")
     assert r2.count == 2 and r2.segments_fallback == 0
 
@@ -415,10 +435,10 @@ def test_rollback_to_initial_version(tmp_path):
     the initial coverage."""
     w = make_world(tmp_path, num_records=2000, segment_size=1000)
     h = activate_late_rule(w)
-    worker = BackfillWorker(w["store"], w["bus"], w["ostore"])
+    worker = make_backfill(w["store"], w["bus"], w["ostore"])
     worker.run_until_converged()
     assert w["updater"].await_maintenance(
-        h.version, [worker.worker_id], timeout=2).complete
+        h.version, worker.worker_ids, timeout=2).complete
 
     rb = w["updater"].rollback()
     assert rb.published, rb.error
@@ -434,7 +454,7 @@ def test_rollback_to_initial_version(tmp_path):
     # a fresh convergence ack, or await_maintenance hangs to timeout
     assert rep.acked
     assert w["updater"].await_maintenance(
-        rb.version, [worker.worker_id], timeout=2).complete
+        rb.version, worker.worker_ids, timeout=2).complete
     # the de-activated rule no longer plans; other rules still serve fast
     other = w["spec"].planted[1]
     q = Query(terms=((other.fieldname, other.term),), mode="count")

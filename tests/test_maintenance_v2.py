@@ -1,0 +1,533 @@
+"""Maintenance plane v2 — crash injection and distribution.
+
+What a durable maintenance plane must survive, each simulated here:
+
+  * a worker killed mid-backfill resumes from its row-watermark checkpoint
+    (never re-matches from row 0);
+  * a hard kill between a compactor spilling its merged segment and
+    retiring the inputs must not double-count on reload (the root manifest
+    is the single commit point);
+  * two workers racing one segment: the fenced loser's write is REJECTED
+    at the write barrier, the winner's install stands;
+  * retention age-out, compaction row purge, and spill-dir GC cooperate
+    without breaking in-flight readers.
+
+``FLUXSIEVE_MAINT_WORKERS`` (also honored by ``test_maintenance.py``) runs
+the end-to-end paths through a sharded ``MaintenanceWorkerPool`` instead
+of a single worker — CI exercises the distributed plane on every PR.
+"""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.control_plane import ControlBus
+from repro.core.maintenance import (BackfillWorker, Compactor,
+                                    FencedWriteError, LeaseManager,
+                                    MaintenanceWorkerPool, RetentionPolicy,
+                                    RetentionWorker, SpillGC, shard_of)
+from repro.core.maintenance.backfill import CKPT_NAME
+from repro.core.matcher import compile_bundle
+from repro.core.object_store import ObjectStore
+from repro.core.patterns import Rule, RuleSet
+from repro.core.query.arrangement import ArrangementStore
+from repro.core.query.engine import Query, QueryEngine
+from repro.core.query.mapper import QueryMapper
+from repro.core.query.store import (RETIRED_MARKER, Manifest, SegmentStore)
+from repro.core.records import RecordBatch
+from repro.core.stream_processor import StreamProcessor
+from repro.core.updater import MatcherUpdater
+from repro.data.generator import LogGenerator, WorkloadSpec
+from repro.data.pipeline import IngestPipeline
+
+MAINT_WORKERS = int(os.environ.get("FLUXSIEVE_MAINT_WORKERS", "1") or "1")
+
+
+def make_world(tmp_path, *, num_records=6000, segment_size=1500, seed=13,
+               hold_back=0, root=True):
+    spec = WorkloadSpec(num_records=num_records, ultra_rate=1e-3,
+                        high_rate=1e-2, seed=seed, text_width=256)
+    gen = LogGenerator(spec)
+    full = RuleSet(tuple(Rule(i, t.term, t.term, fields=(t.fieldname,))
+                         for i, t in enumerate(spec.planted)))
+    initial = full.without_ids([hold_back])
+    bus, ostore = ControlBus(), ObjectStore()
+    proc = StreamProcessor(compile_bundle(initial, spec.content_fields),
+                           bus=bus, store=ostore)
+    store = SegmentStore(segment_size=segment_size,
+                         root=tmp_path if root else None)
+    updater = MatcherUpdater(ostore, bus, spec.content_fields,
+                             initial=initial)
+    IngestPipeline(gen, store, proc).run(batch_size=1000)
+    mapper = QueryMapper(initial, version_id=0)
+    engine = QueryEngine(store, mapper=mapper)
+    return dict(spec=spec, gen=gen, full=full, initial=initial, bus=bus,
+                ostore=ostore, proc=proc, store=store, updater=updater,
+                mapper=mapper, engine=engine, late=spec.planted[hold_back])
+
+
+def activate_late_rule(w):
+    h = w["updater"].submit(w["full"], asynchronous=False)
+    assert h.published, h.error
+    w["proc"].poll_updates()
+    w["mapper"].notify(w["full"], version_id=w["proc"].active_version_id)
+    return h
+
+
+def late_query(w):
+    late = w["late"]
+    return (Query(terms=((late.fieldname, late.term),), mode="count"),
+            w["gen"].true_count(late))
+
+
+# ---------------------------------------------------------------------------
+# Incremental checkpointing: watermark resume, not row 0
+# ---------------------------------------------------------------------------
+
+def test_watermark_resume_after_worker_kill(tmp_path):
+    """Kill a worker mid-backfill (after a partial, checkpointed pass); a
+    FRESH worker — no shared memory, the restart case — resumes every
+    segment from its row watermark instead of re-matching from row 0."""
+    w = make_world(tmp_path)
+    activate_late_rule(w)
+    q, truth = late_query(w)
+    n_seg = len(w["store"].segments)
+    seg_rows = w["store"].segments[0].num_records
+
+    worker = BackfillWorker(w["store"], w["bus"], w["ostore"],
+                            rows_per_pass=600)
+    rep1 = worker.run_cycle()
+    # every segment got exactly one 600-row partial pass, none installed
+    assert rep1.segments_partial == n_seg
+    assert rep1.segments_backfilled == 0
+    assert rep1.rows_matched == 600 * n_seg
+    for seg in w["store"].segments:
+        assert (seg.path / CKPT_NAME).exists()
+    # partially backfilled state is invisible: queries still consistent
+    assert w["engine"].execute(q, path="fluxsieve").count == truth
+
+    # "kill" the worker: a brand-new instance has no in-memory state and
+    # must pick the on-disk checkpoints up
+    worker2 = BackfillWorker(w["store"], w["bus"], w["ostore"])
+    rep2 = worker2.run_until_converged()
+    assert rep2.segments_backfilled == n_seg
+    assert rep2.rows_resumed == 600 * n_seg
+    # the decisive assertion: only the REMAINING rows were re-matched
+    assert rep2.rows_matched == (seg_rows - 600) * n_seg
+    assert rep2.pending_after == 0 and rep2.acked
+
+    r = w["engine"].execute(q, path="fluxsieve")
+    assert r.count == truth and r.segments_fallback == 0
+    # checkpoints are consumed by the install
+    for seg in w["store"].segments:
+        assert not (seg.path / CKPT_NAME).exists()
+
+
+def test_checkpoint_invalidated_by_moved_target(tmp_path):
+    """A checkpoint written for target A must not seed a resume toward
+    target B: the key includes version + delta, so the segment restarts
+    from row 0 under the new target."""
+    w = make_world(tmp_path)
+    seg = w["store"].segments[0]
+    n = seg.num_records
+
+    worker = BackfillWorker(w["store"], w["bus"], w["ostore"],
+                            rows_per_pass=500)
+    worker.set_target(w["full"])
+    rep = worker.run_cycle(max_segments=1)
+    assert rep.segments_partial == 1 and rep.rows_matched == 500
+
+    # target moves: the late rule's PATTERN changes, so the delta (and the
+    # checkpoint key) differ — the stale checkpoint must not seed a resume
+    moved = RuleSet(tuple(
+        Rule(r.rule_id, r.name, r.pattern + "X", fields=r.fields)
+        if r.rule_id == 0 else r for r in w["full"].rules))
+    worker2 = BackfillWorker(w["store"], w["bus"], w["ostore"])
+    worker2.set_target(moved)
+    rep2 = BackfillWorkerDrain(worker2, seg)
+    assert rep2.rows_resumed == 0
+    assert rep2.rows_matched >= n     # full re-match, stale ckpt ignored
+
+
+def BackfillWorkerDrain(worker, seg):
+    """Drain one segment through a worker, returning the merged report."""
+    from repro.core.maintenance import BackfillReport, merge_reports
+    total = BackfillReport()
+    for _ in range(100):
+        rep = worker.run_cycle()
+        merge_reports(total, rep)
+        if rep.pending_after == 0:
+            break
+    return total
+
+
+def test_budget_cut_resumes_within_one_worker(tmp_path):
+    """A mid-segment budget cut (scheduler policy rows budget) resumes at
+    the watermark on the next cycle of the SAME worker."""
+    from repro.core.maintenance import MaintenancePolicy, MaintenanceScheduler
+    w = make_world(tmp_path)
+    activate_late_rule(w)
+    q, truth = late_query(w)
+    sched = MaintenanceScheduler(
+        None, MaintenancePolicy(max_rows_per_segment_pass=700))
+    worker = BackfillWorker(w["store"], w["bus"], w["ostore"],
+                            scheduler=sched)
+    rep = worker.run_until_converged()
+    n_rows = sum(s.num_records for s in w["store"].segments)
+    assert rep.segments_backfilled == len(w["store"].segments)
+    # total matched rows across all passes == store rows, exactly once
+    assert rep.rows_matched == n_rows
+    assert rep.segments_partial > 0       # the budget actually cut passes
+    r = w["engine"].execute(q, path="fluxsieve")
+    assert r.count == truth and r.segments_fallback == 0
+
+
+# ---------------------------------------------------------------------------
+# Crash-safe manifest: the compaction double-count window
+# ---------------------------------------------------------------------------
+
+def test_manifest_no_double_count_after_crash_between_spill_and_retire(
+        tmp_path):
+    """Hard-kill simulation: the compactor spills its merged segment and
+    dies BEFORE the swap commits.  Both the merged artifact and the inputs
+    are on disk; a manifest-guarded load must count every record once."""
+    w = make_world(tmp_path, num_records=4000, segment_size=1000)
+    store = w["store"]
+    n_before = store.num_records
+    group = store.segments[:2]
+
+    # the crash: materialize the merged segment (spilled, UNREGISTERED),
+    # then stop — no replace_segments, no tombstones
+    names = sorted(group[0].meta["columns"])
+    cols = {name: np.concatenate([np.asarray(s.column(name))
+                                  for s in group]) for name in names}
+    merged = store.make_segment_from_batch(RecordBatch(cols))
+    assert merged.path.exists()
+
+    reloaded = SegmentStore.load(tmp_path)
+    assert reloaded.num_records == n_before
+    assert merged.segment_id not in {s.segment_id for s in reloaded.segments}
+
+    # ...and the other side of the window: the swap commits but the
+    # process dies before tombstoning — simulate by deleting the markers
+    comp = Compactor(store, min_records=1001, target_records=4000)
+    rep = comp.run_cycle()
+    assert rep.merges >= 1
+    for d in tmp_path.glob(f"segment-*/{RETIRED_MARKER}"):
+        d.unlink()      # crash erased the advisory tombstones
+    reloaded2 = SegmentStore.load(tmp_path)
+    assert reloaded2.num_records == n_before
+
+
+def test_manifest_upgrades_legacy_store(tmp_path):
+    """A pre-manifest spill tree (RETIRED tombstones only) loads via the
+    directory scan and is upgraded: the adopted set becomes its first
+    manifest, so the next load is manifest-guarded."""
+    w = make_world(tmp_path, num_records=3000, segment_size=1000)
+    n = w["store"].num_records
+    manifest_path = tmp_path / "manifest.json"
+    manifest_path.unlink()          # legacy store: no manifest on disk
+
+    reloaded = SegmentStore.load(tmp_path)
+    assert reloaded.num_records == n
+    assert manifest_path.exists()   # upgraded
+    assert Manifest.read(tmp_path)["segments"]
+    # id allocator survives the round trip past the highest on-disk id
+    assert reloaded._next_id > max(s.segment_id
+                                   for s in reloaded.segments)
+
+
+# ---------------------------------------------------------------------------
+# Leases + epoch fencing
+# ---------------------------------------------------------------------------
+
+def test_fencing_rejects_stale_lease_holder(tmp_path):
+    """Two workers race one segment: A's lease expires mid-write, B
+    acquires (higher epoch) and installs; A's late write is rejected at
+    the barrier and the segment keeps B's data."""
+    w = make_world(tmp_path, num_records=1500, segment_size=1500)
+    seg = w["store"].segments[0]
+    now = [0.0]
+    lm = LeaseManager(ttl=10.0, clock=lambda: now[0],
+                      manifest=w["store"].manifest)
+
+    lease_a = lm.acquire(seg.segment_id, "worker-A")
+    assert lease_a is not None
+    # B cannot intrude while A's lease stands
+    assert lm.acquire(seg.segment_id, "worker-B") is None
+    assert lm.holder_of(seg.segment_id) == "worker-A"
+
+    now[0] = 11.0                   # A crashes; its lease expires
+    lease_b = lm.acquire(seg.segment_id, "worker-B")
+    assert lease_b is not None and lease_b.epoch > lease_a.epoch
+
+    seg.apply_update(meta_updates={"winner": "B"}, fence=lm.fence(lease_b))
+    meta_before = seg.meta
+    with pytest.raises(FencedWriteError):
+        seg.apply_update(meta_updates={"winner": "A"},
+                         fence=lm.fence(lease_a))
+    assert seg.meta is meta_before          # loser mutated NOTHING
+    assert seg.meta["winner"] == "B"
+
+    # fencing epochs are durable: a restarted manager cannot re-issue A's
+    lm2 = LeaseManager(ttl=10.0, clock=lambda: now[0],
+                       manifest=Manifest_reload(w["store"]))
+    lease_c = lm2.acquire(seg.segment_id, "worker-C")
+    assert lease_c.epoch > lease_b.epoch
+
+
+def Manifest_reload(store):
+    m = Manifest(store.root)
+    m.adopt(Manifest.read(store.root))
+    return m
+
+
+def test_two_workers_racing_one_segment_install_once(tmp_path):
+    """Overlapping shards (misconfiguration) on one store: leases serialize
+    the writers, fencing rejects any zombie, and the store converges with
+    every query correct.  At-least-once, never interleaved."""
+    w = make_world(tmp_path)
+    activate_late_rule(w)
+    q, truth = late_query(w)
+    lm = LeaseManager(manifest=w["store"].manifest)
+    # BOTH workers own every segment (num_shards=1) — worst case overlap
+    workers = [BackfillWorker(w["store"], w["bus"], w["ostore"],
+                              worker_id=f"racer-{i}", leases=lm)
+               for i in range(2)]
+    reps, errs = [], []
+
+    def drain(wk):
+        try:
+            reps.append(wk.run_until_converged())
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    ts = [threading.Thread(target=drain, args=(wk,)) for wk in workers]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errs
+    assert sum(r.segments_failed for r in reps) == 0
+    # every segment converged (>= once — duplicates are idempotent)
+    assert sum(r.segments_backfilled for r in reps) >= len(
+        w["store"].segments)
+    r = w["engine"].execute(q, path="fluxsieve")
+    assert r.count == truth and r.segments_fallback == 0
+
+
+def test_shard_of_partitions_and_balances():
+    shards = {shard_of(sid, 4) for sid in range(1000)}
+    assert shards == {0, 1, 2, 3}
+    counts = np.bincount([shard_of(sid, 4) for sid in range(1000)])
+    assert counts.min() > 150       # roughly balanced under sequential ids
+    assert all(shard_of(s, 1) == 0 for s in range(10))
+
+
+# ---------------------------------------------------------------------------
+# Distributed pool: sharded convergence + per-worker acks
+# ---------------------------------------------------------------------------
+
+def test_pool_shards_converge_and_ack(tmp_path):
+    w = make_world(tmp_path)
+    h = activate_late_rule(w)
+    q, truth = late_query(w)
+    pool = MaintenanceWorkerPool(w["store"], w["bus"], w["ostore"],
+                                 num_workers=3)
+    rep = pool.run_until_converged()
+    assert rep.segments_backfilled == len(w["store"].segments)
+    assert rep.pending_after == 0 and rep.acked
+    # the work actually partitioned: every non-empty shard converged by
+    # its own worker, each acking independently
+    status = w["updater"].await_maintenance(h.version, pool.worker_ids,
+                                            timeout=2)
+    assert status.complete
+    assert set(status.acked) == set(pool.worker_ids)
+    r = w["engine"].execute(q, path="fluxsieve")
+    assert r.count == truth and r.segments_fallback == 0
+
+
+def test_pool_survives_one_worker_crash(tmp_path):
+    """A worker that dies after a partial pass neither wedges its shard
+    nor loses progress: a replacement pool (fresh lease manager — epochs
+    come from the manifest) finishes from the checkpoints."""
+    w = make_world(tmp_path)
+    activate_late_rule(w)
+    q, truth = late_query(w)
+    pool = MaintenanceWorkerPool(w["store"], w["bus"], w["ostore"],
+                                 num_workers=2, rows_per_pass=600)
+    rep1 = pool.run_cycle()
+    assert rep1.segments_partial == len(w["store"].segments)
+
+    # the whole pool crashes; a replacement converges from checkpoints
+    pool2 = MaintenanceWorkerPool(w["store"], w["bus"], w["ostore"],
+                                  num_workers=2)
+    rep2 = pool2.run_until_converged()
+    assert rep2.segments_backfilled == len(w["store"].segments)
+    assert rep2.rows_resumed == 600 * len(w["store"].segments)
+    r = w["engine"].execute(q, path="fluxsieve")
+    assert r.count == truth and r.segments_fallback == 0
+
+
+# ---------------------------------------------------------------------------
+# Retention + GC
+# ---------------------------------------------------------------------------
+
+def test_retention_expires_marks_and_purges(tmp_path):
+    """Event-time TTL: whole segments below the horizon retire atomically,
+    straddlers are stamped and physically purged by compaction, and every
+    query path agrees afterwards."""
+    w = make_world(tmp_path, num_records=6000, segment_size=1500)
+    store = w["store"]
+    ts_all = np.concatenate([np.asarray(s.column("timestamp"))
+                             for s in store.segments])
+    # mid-data AND mid-segment, so at least one segment straddles it
+    horizon = int(np.sort(ts_all)[len(ts_all) // 2 + len(ts_all) // 8])
+
+    ret = RetentionWorker(store, RetentionPolicy(horizon=horizon))
+    rep = ret.run_cycle()
+    assert rep.segments_expired >= 1
+    assert rep.segments_marked >= 1
+    assert rep.rows_tombstoned > 0
+    # retired segments are out of the manifest immediately
+    reloaded = SegmentStore.load(tmp_path)
+    assert len(reloaded.segments) == len(store.segments)
+
+    crep = Compactor(store).run_cycle()
+    assert crep.rows_purged == rep.rows_tombstoned
+    surviving = np.concatenate([np.asarray(s.column("timestamp"))
+                                for s in store.segments])
+    assert (surviving >= horizon).all()
+    assert len(surviving) == int((ts_all >= horizon).sum())
+
+    # a second retention pass is a no-op (idempotent at the same horizon)
+    rep2 = RetentionWorker(store,
+                           RetentionPolicy(horizon=horizon)).run_cycle()
+    assert rep2.segments_expired == 0 and rep2.rows_tombstoned == 0
+
+
+def test_retention_watermark_horizon(tmp_path):
+    """max_age retention is anchored to the newest sealed timestamp (event
+    time), so a stalled ingest never silently expires the whole store."""
+    w = make_world(tmp_path, num_records=3000, segment_size=1000)
+    store = w["store"]
+    newest = max(s.meta["ts_max"] for s in store.segments)
+    ret = RetentionWorker(store, RetentionPolicy(max_age=10**18))
+    assert ret.horizon() == newest - 10**18
+    assert ret.run_cycle().segments_expired == 0    # nothing that old
+
+
+def test_spill_gc_respects_pins_and_grace(tmp_path):
+    """GC deletes a RETIRED dir only after (1) the manifest dropped it,
+    (2) no leased arrangement pins it, (3) the grace window passed."""
+    w = make_world(tmp_path, num_records=3000, segment_size=1000)
+    store = w["store"]
+    victim = store.segments[0]
+    arr = w["engine"].arrangements
+
+    # pin the victim through a live arrangement lease (an in-flight query)
+    from repro.core.query.arrangement import ArrangementItem
+    item = ArrangementItem(token=victim.meta_token(),
+                           num_records=victim.num_records,
+                           load=lambda: np.asarray(
+                               victim.column("rule_bitmap")))
+    lease = arr.lease([item], (0,), owner="pinning-query")
+    assert victim.segment_id in arr.pinned_segment_ids()
+
+    assert store.retire_segments([victim])
+    assert victim.path.joinpath(RETIRED_MARKER).exists()
+
+    now = [1000.0]
+    gc = SpillGC(store, arrangements=arr, grace_s=30.0,
+                 clock=lambda: now[0])
+    rep = gc.run_cycle()
+    assert rep.dirs_deleted == 0 and rep.dirs_kept_pinned == 1
+    assert victim.path.exists()
+
+    lease.release()                 # reader drains; pin lifts
+    assert victim.segment_id not in arr.pinned_segment_ids()
+    # ...but the tombstone is fresh relative to the fake clock? the marker
+    # mtime is real wall time, so push the fake clock far past it
+    now[0] = victim.path.joinpath(RETIRED_MARKER).stat().st_mtime + 31.0
+    rep2 = gc.run_cycle()
+    assert rep2.dirs_deleted == 1
+    assert not victim.path.exists()
+    # the store (and a reload) never miss a beat
+    assert SegmentStore.load(tmp_path).num_records == store.num_records
+
+
+def test_gc_keeps_fresh_tombstones(tmp_path):
+    w = make_world(tmp_path, num_records=2000, segment_size=1000)
+    store = w["store"]
+    victim = store.segments[0]
+    assert store.retire_segments([victim])
+    gc = SpillGC(store, grace_s=3600.0)     # real clock, huge grace
+    rep = gc.run_cycle()
+    assert rep.dirs_deleted == 0 and rep.dirs_kept_grace == 1
+    assert victim.path.exists()
+
+
+def test_membership_commits_are_fenced(tmp_path):
+    """replace_segments / retire_segments run the caller's fence INSIDE
+    the store lock before committing: a compactor or retention writer
+    whose leases were superseded mid-operation commits NOTHING."""
+    w = make_world(tmp_path, num_records=3000, segment_size=1000)
+    store = w["store"]
+    n = store.num_records
+    segs_before = list(store.segments)
+
+    def tripped():
+        raise FencedWriteError("superseded mid-merge")
+
+    group = store.segments[:2]
+    cols = {name: np.concatenate([np.asarray(s.column(name))
+                                  for s in group])
+            for name in sorted(group[0].meta["columns"])}
+    merged = store.make_segment_from_batch(RecordBatch(cols))
+    with pytest.raises(FencedWriteError):
+        store.replace_segments(group, merged, fence=tripped)
+    with pytest.raises(FencedWriteError):
+        store.retire_segments([store.segments[0]], fence=tripped)
+    assert store.segments == segs_before          # nothing committed
+    assert SegmentStore.load(tmp_path).num_records == n
+
+
+def test_epoch_block_reservation_survives_restart(tmp_path):
+    """Epoch reservations amortize manifest writes (one per block, not per
+    acquire) while a restarted manager still always resumes ABOVE every
+    epoch ever issued."""
+    w = make_world(tmp_path, num_records=1500, segment_size=1500)
+    store = w["store"]
+    sid = store.segments[0].segment_id
+    lm = LeaseManager(manifest=store.manifest, epoch_block=16)
+    epochs = []
+    for _ in range(5):      # same holder re-acquires: 5 epochs, ONE write
+        lease = lm.acquire(sid, "w")
+        epochs.append(lease.epoch)
+        lm.release(lease)
+    assert epochs == [1, 2, 3, 4, 5]
+    assert Manifest.read(tmp_path)["fences"][str(sid)] == 16  # the block
+
+    lm2 = LeaseManager(manifest=Manifest_reload(store), epoch_block=16)
+    lease = lm2.acquire(sid, "w2")
+    assert lease.epoch > max(epochs)      # resumes above the bound
+
+
+# ---------------------------------------------------------------------------
+# Compactor under leases
+# ---------------------------------------------------------------------------
+
+def test_compactor_skips_leased_group(tmp_path):
+    w = make_world(tmp_path, num_records=4000, segment_size=1000)
+    store = w["store"]
+    lm = LeaseManager(manifest=store.manifest)
+    held = lm.acquire(store.segments[1].segment_id, "backfill-elsewhere")
+    assert held is not None
+    comp = Compactor(store, min_records=1001, target_records=4000,
+                     leases=lm)
+    rep = comp.run_cycle()
+    assert rep.merges == 0 and rep.merges_contended >= 1
+    lm.release(held)
+    rep2 = comp.run_cycle()
+    assert rep2.merges >= 1
