@@ -42,6 +42,9 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None)
     ap.add_argument("--json", default=None, metavar="OUT.json",
                     help="also write machine-readable results")
+    ap.add_argument("--telemetry-dump", default=None, metavar="DIR",
+                    help="write metrics.prom / snapshot.json / trace.json "
+                         "for the whole run into DIR (CI artifact)")
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_backfill, bench_layout_grid, bench_matcher,
@@ -120,20 +123,29 @@ def main(argv=None) -> int:
                   f"(smoke runs: {', '.join(smoke_names)})", file=sys.stderr)
             return 1
         suite = {k: suite[k] for k in smoke_names}
+    from repro.core import telemetry
+
     failures = 0
     results = {}
     ran_params = {}
+    suite_telemetry = {}
     for name, (fn, params) in suite.items():
         if args.only and name != args.only:
             continue
         print(f"# === {name} ===", flush=True)
         t0 = time.time()
+        # per-suite telemetry isolation: metrics zero in place (cached
+        # handles stay valid), so each suite's snapshot carries ITS
+        # counters — provenance alongside timings in BENCH_*.json
+        telemetry.metrics.reset()
+        telemetry.events.reset()
         try:
             rows = fn()
             print_rows(rows)
             results[name] = [m.to_dict() for m in rows]
             ran_params[name] = {k: list(v) if isinstance(v, tuple) else v
                                 for k, v in params.items()}
+            suite_telemetry[name] = telemetry.metrics.snapshot()
         except Exception:
             failures += 1
             traceback.print_exc()
@@ -146,10 +158,15 @@ def main(argv=None) -> int:
                              else "quick" if args.quick else "full"),
                    "suites": ran_params,
                },
-               "benches": results}
+               "benches": results,
+               "telemetry": suite_telemetry}
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)
         print(f"# wrote {args.json}", flush=True)
+    if args.telemetry_dump:
+        paths = telemetry.write_dump(args.telemetry_dump)
+        print(f"# telemetry dump: {', '.join(sorted(paths.values()))}",
+              flush=True)
     return 1 if failures else 0
 
 

@@ -1,0 +1,136 @@
+#!/usr/bin/env python
+"""Prometheus text exposition format checker (CI gate for telemetry dumps).
+
+Validates the ``metrics.prom`` artifact our exporters write (see
+``src/repro/core/telemetry/export.py``): every non-comment line must be a
+well-formed sample, every ``# TYPE`` must name a known metric kind, every
+sample must belong to a declared metric (histogram samples via their
+``_bucket``/``_sum``/``_count`` suffixes), histogram bucket series must be
+cumulative with a terminal ``le="+Inf"``, and metric/label names must match
+the Prometheus grammar.  Deliberately dependency-free — the point is that
+any scraper would accept the file, checked without shipping one.
+
+    python scripts/check_prom_format.py /tmp/telemetry/metrics.prom
+"""
+from __future__ import annotations
+
+import math
+import re
+import sys
+
+NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>.*)\})?"
+    r" (?P<value>[^ ]+)"
+    r"(?: (?P<ts>-?\d+))?$")
+LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+KINDS = {"counter", "gauge", "histogram", "summary", "untyped"}
+HIST_SUFFIXES = ("_bucket", "_sum", "_count")
+
+
+def _parse_labels(raw: str, err) -> dict:
+    labels = {}
+    matched = "".join(m.group(0) for m in LABEL_RE.finditer(raw))
+    if raw.replace(",", "").replace(" ", "") != \
+            matched.replace(",", "").replace(" ", ""):
+        err(f"malformed label set {{{raw}}}")
+    for m in LABEL_RE.finditer(raw):
+        labels[m.group(1)] = m.group(2)
+    return labels
+
+
+def _base_name(name: str, types: dict) -> str:
+    """Resolve a sample name to its declared metric (histogram samples
+    carry suffixes the TYPE line does not)."""
+    if name in types:
+        return name
+    for suf in HIST_SUFFIXES:
+        if name.endswith(suf) and name[: -len(suf)] in types:
+            return name[: -len(suf)]
+    return name
+
+
+def check_text(text: str) -> list:
+    """-> list of 'line N: message' problems (empty = valid)."""
+    problems = []
+    types = {}      # metric name -> kind
+    buckets = {}    # (name, non-le labels) -> [(le, cum)]
+    for n, line in enumerate(text.splitlines(), 1):
+        def err(msg, n=n):
+            problems.append(f"line {n}: {msg}")
+        if not line.strip():
+            continue
+        if line.startswith("#"):
+            parts = line.split(None, 3)
+            if len(parts) < 3 or parts[1] not in ("HELP", "TYPE"):
+                err(f"unrecognized comment {line!r} "
+                    "(only # HELP / # TYPE carry meaning)")
+                continue
+            if parts[1] == "TYPE":
+                name, kind = parts[2], (parts[3] if len(parts) > 3 else "")
+                if not NAME_RE.match(name):
+                    err(f"invalid metric name {name!r}")
+                if kind not in KINDS:
+                    err(f"invalid TYPE {kind!r} for {name}")
+                if name in types:
+                    err(f"duplicate TYPE for {name}")
+                types[name] = kind
+            continue
+        m = SAMPLE_RE.match(line)
+        if not m:
+            err(f"malformed sample line {line!r}")
+            continue
+        name = m.group("name")
+        labels = _parse_labels(m.group("labels"), err) \
+            if m.group("labels") is not None else {}
+        try:
+            value = float(m.group("value"))
+        except ValueError:
+            err(f"non-numeric value {m.group('value')!r}")
+            continue
+        base = _base_name(name, types)
+        if base not in types:
+            err(f"sample {name} has no preceding # TYPE")
+            continue
+        if types[base] == "histogram" and name == f"{base}_bucket":
+            if "le" not in labels:
+                err(f"{name} sample missing the le label")
+                continue
+            le = math.inf if labels["le"] == "+Inf" else float(labels["le"])
+            key = (base, tuple(sorted((k, v) for k, v in labels.items()
+                                      if k != "le")))
+            buckets.setdefault(key, []).append((le, value, n))
+    for (name, series), rows in sorted(buckets.items()):
+        rows.sort(key=lambda r: r[0])
+        if rows[-1][0] != math.inf:
+            problems.append(f"line {rows[-1][2]}: histogram {name}"
+                            f"{dict(series)} lacks an le=\"+Inf\" bucket")
+        cums = [v for _, v, _ in rows]
+        if cums != sorted(cums):
+            problems.append(f"line {rows[0][2]}: histogram {name}"
+                            f"{dict(series)} buckets are not cumulative")
+    return problems
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    if len(argv) != 1:
+        print(__doc__, file=sys.stderr)
+        return 2
+    text = open(argv[0]).read()
+    problems = check_text(text)
+    for p in problems:
+        print(f"{argv[0]}: {p}", file=sys.stderr)
+    if problems:
+        print(f"prometheus format check FAILED: {len(problems)} problem(s)",
+              file=sys.stderr)
+        return 1
+    samples = sum(1 for line in text.splitlines()
+                  if line.strip() and not line.startswith("#"))
+    print(f"prometheus format check OK ({argv[0]}: {samples} samples)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -53,6 +53,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core import telemetry
 from repro.core.automaton import words_for_rules
 from repro.core.control_plane import (ControlBus, MAINTENANCE_ACKS,
                                       SEGMENT_MAINTENANCE)
@@ -69,6 +70,22 @@ from repro.core.stream_processor import ENRICH_COLUMN
 # per-segment backfill checkpoint, stored NEXT TO the spill files (swapped
 # atomically via tmp+os.replace); never part of the segment's visible state
 CKPT_NAME = "backfill.ckpt.npz"
+
+_BF_SEGMENTS = telemetry.counter(
+    "fluxsieve_maintenance_segments_backfilled_total",
+    help="Segments fully re-enriched by the backfill plane.")
+_BF_ROWS = telemetry.counter(
+    "fluxsieve_maintenance_rows_matched_total",
+    help="Rows re-matched by backfill passes.")
+_BF_ROWS_RESUMED = telemetry.counter(
+    "fluxsieve_maintenance_rows_resumed_total",
+    help="Rows skipped thanks to a backfill checkpoint resume.")
+_BF_BYTES = telemetry.counter(
+    "fluxsieve_maintenance_bytes_rewritten_total",
+    help="Enrichment bytes rewritten by backfill installs.")
+_BF_CHECKPOINTS = telemetry.counter(
+    "fluxsieve_maintenance_checkpoints_total",
+    help="Partial backfill passes persisted as checkpoints.")
 
 
 @dataclass(frozen=True)
@@ -228,6 +245,10 @@ class BackfillWorker:
         if not msgs and self._target is None:
             msgs = self.bus.messages(SEGMENT_MAINTENANCE, 0)
             recovering = True
+            if msgs:
+                telemetry.emit("target_recovered", plane="maintenance",
+                               worker=self.worker_id,
+                               replayed=len(msgs))
         if not msgs:
             return 0
         installed_offset = None
@@ -337,6 +358,16 @@ class BackfillWorker:
     def run_cycle(self, *, max_segments: int = None) -> BackfillReport:
         """One maintenance cycle: poll control topic, backfill up to the
         scheduler budget (hottest segments first), ack when converged."""
+        with telemetry.span("maintenance/backfill_cycle", cat="maintenance",
+                            worker=self.worker_id):
+            rep = self._run_cycle(max_segments=max_segments)
+        _BF_SEGMENTS.inc(rep.segments_backfilled)
+        _BF_ROWS.inc(rep.rows_matched)
+        _BF_ROWS_RESUMED.inc(rep.rows_resumed)
+        _BF_BYTES.inc(rep.bytes_rewritten)
+        return rep
+
+    def _run_cycle(self, *, max_segments: int = None) -> BackfillReport:
         rep = BackfillReport()
         t0 = time.perf_counter()
         rep.messages = self.poll_target()
@@ -420,6 +451,9 @@ class BackfillWorker:
             })
             self._ack_pending = False
             rep.acked = True
+            telemetry.emit("convergence_ack", plane="maintenance",
+                           worker=self.worker_id,
+                           version=self._target.version)
         rep.seconds = time.perf_counter() - t0
         return rep
 
@@ -560,6 +594,9 @@ class BackfillWorker:
         to the spill files.  Memory-only segments checkpoint in the worker
         (survives budget cuts within a process, not a restart — but neither
         does the segment)."""
+        _BF_CHECKPOINTS.inc()
+        telemetry.emit("backfill_checkpoint", plane="maintenance",
+                       segment=seg.segment_id, rows_done=int(hwm))
         if seg.path is None:
             self._mem_ckpts[seg.segment_id] = (key, hwm, bm)
             return

@@ -36,12 +36,23 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core import telemetry
 from repro.core.maintenance.lease import FencedWriteError, LeaseManager
 from repro.core.maintenance.retention import RETENTION_CUTOFF
 from repro.core.query.store import (Segment, SegmentStore, pack_known_bitmap,
                                     rules_known_for_versions)
 from repro.core.records import RecordBatch
 from repro.core.stream_processor import ENRICH_COLUMN
+
+_MERGES = telemetry.counter(
+    "fluxsieve_maintenance_compaction_merges_total",
+    help="Compaction merges committed.")
+_ROWS_PURGED = telemetry.counter(
+    "fluxsieve_maintenance_rows_purged_total",
+    help="Retention-tombstoned rows physically dropped by compaction.")
+_COMPACT_BYTES = telemetry.counter(
+    "fluxsieve_maintenance_compaction_bytes_total",
+    help="Bytes rewritten by compaction merges.")
 
 
 @dataclass
@@ -133,6 +144,16 @@ class Compactor:
                   max_bytes: int = None) -> CompactionReport:
         rep = CompactionReport()
         t0 = time.perf_counter()
+        with telemetry.span("maintenance/compaction_cycle",
+                            cat="maintenance", worker=self.worker_id):
+            self._run_cycle(rep, max_merges, max_bytes)
+        _MERGES.inc(rep.merges)
+        _ROWS_PURGED.inc(rep.rows_purged)
+        _COMPACT_BYTES.inc(rep.bytes_rewritten)
+        rep.seconds = time.perf_counter() - t0
+        return rep
+
+    def _run_cycle(self, rep: CompactionReport, max_merges, max_bytes):
         used = 0
         groups = self.candidate_groups()
         # previously-failed groups only get budget once every fresh group
@@ -168,8 +189,6 @@ class Compactor:
                 rep.rows_purged += purged
                 rep.bytes_rewritten += cost
                 used += cost
-        rep.seconds = time.perf_counter() - t0
-        return rep
 
     @staticmethod
     def _key(group: list) -> tuple:

@@ -35,6 +35,18 @@ import threading
 import time
 from dataclasses import dataclass, field
 
+from repro.core import telemetry
+
+_ACQUIRED = telemetry.counter(
+    "fluxsieve_maintenance_leases_acquired_total",
+    help="Maintenance leases granted.")
+_CONTENDED = telemetry.counter(
+    "fluxsieve_maintenance_leases_contended_total",
+    help="Lease acquisitions refused while another holder's lease stood.")
+_FENCED = telemetry.counter(
+    "fluxsieve_maintenance_fencing_rejections_total",
+    help="Writes rejected at the fencing barrier (stale epoch token).")
+
 
 class FencedWriteError(RuntimeError):
     """A segment write presented a stale fencing token: the writer's lease
@@ -111,6 +123,7 @@ class LeaseManager:
             cur = self._leases.get(sid)
             if (cur is not None and not cur.released
                     and cur.holder != holder and cur.expires_at > now):
+                _CONTENDED.inc()
                 return None
             epoch = self._epochs.get(sid, 0) + 1
             if self.manifest is not None and \
@@ -126,7 +139,10 @@ class LeaseManager:
             lease = Lease(segment_id=sid, holder=holder, epoch=epoch,
                           expires_at=now + self.ttl)
             self._leases[sid] = lease
-            return lease
+        _ACQUIRED.inc()
+        telemetry.emit("lease_acquired", plane="maintenance",
+                       segment=sid, holder=holder, epoch=epoch)
+        return lease
 
     def renew(self, lease: Lease) -> bool:
         """Extend a still-current lease's expiry.  False once superseded."""
@@ -154,6 +170,11 @@ class LeaseManager:
         with self._lock:
             current = self._epochs.get(lease.segment_id, 0)
             if lease.released or lease.epoch < current:
+                _FENCED.inc()
+                telemetry.emit("fencing_rejection", plane="maintenance",
+                               segment=lease.segment_id,
+                               holder=lease.holder, token=lease.epoch,
+                               current_epoch=current)
                 raise FencedWriteError(
                     f"segment {lease.segment_id}: fencing token "
                     f"{lease.epoch} (holder {lease.holder!r}) superseded by "

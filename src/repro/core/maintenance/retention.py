@@ -44,10 +44,27 @@ from pathlib import Path
 
 import numpy as np
 
+from repro.core import telemetry
 from repro.core.maintenance.lease import FencedWriteError, LeaseManager
 from repro.core.query.store import RETIRED_MARKER
 
 _SEGDIR_RE = re.compile(r"segment-(\d+)$")
+
+_RET_EXPIRED = telemetry.counter(
+    "fluxsieve_maintenance_segments_expired_total",
+    help="Whole segments retired by the retention plane.")
+_RET_ROWS = telemetry.counter(
+    "fluxsieve_maintenance_rows_tombstoned_total",
+    help="Rows logically expired, awaiting compaction.")
+_GC_DIRS = telemetry.counter(
+    "fluxsieve_maintenance_gc_dirs_deleted_total",
+    help="Drained RETIRED spill dirs deleted by the GC.")
+_GC_BYTES = telemetry.counter(
+    "fluxsieve_maintenance_gc_bytes_deleted_total",
+    help="Bytes reclaimed by spill-dir GC.")
+_GC_ORPHANS = telemetry.counter(
+    "fluxsieve_maintenance_gc_orphans_deleted_total",
+    help="Orphaned (never-registered) spill dirs swept by the GC.")
 
 # meta key: rows with timestamp < this value are logically expired and are
 # physically dropped by the Compactor's next rewrite of the segment
@@ -105,27 +122,31 @@ class RetentionWorker:
     def run_cycle(self) -> RetentionReport:
         rep = RetentionReport()
         t0 = time.perf_counter()
-        horizon = self.horizon()
-        rep.horizon = horizon
-        if horizon is None:
-            rep.seconds = time.perf_counter() - t0
-            return rep
-        for seg in list(self.store.segments):
-            ts_min = seg.meta.get("ts_min")
-            ts_max = seg.meta.get("ts_max")
-            if ts_min is None or ts_max is None:
-                continue    # untimestamped segments never age out
-            try:
-                if ts_max < horizon:
-                    self._expire(seg, rep)
-                elif ts_min < horizon and \
-                        seg.meta.get(RETENTION_CUTOFF) != horizon:
-                    self._mark(seg, horizon, rep)
-            except FencedWriteError:
-                rep.segments_contended += 1
-            except Exception as e:  # noqa: BLE001 — per-segment isolation
-                if len(rep.errors) < 8:
-                    rep.errors.append((seg.segment_id, str(e)))
+        with telemetry.span("maintenance/retention_cycle", cat="maintenance",
+                            worker=self.worker_id):
+            horizon = self.horizon()
+            rep.horizon = horizon
+            if horizon is None:
+                rep.seconds = time.perf_counter() - t0
+                return rep
+            for seg in list(self.store.segments):
+                ts_min = seg.meta.get("ts_min")
+                ts_max = seg.meta.get("ts_max")
+                if ts_min is None or ts_max is None:
+                    continue    # untimestamped segments never age out
+                try:
+                    if ts_max < horizon:
+                        self._expire(seg, rep)
+                    elif ts_min < horizon and \
+                            seg.meta.get(RETENTION_CUTOFF) != horizon:
+                        self._mark(seg, horizon, rep)
+                except FencedWriteError:
+                    rep.segments_contended += 1
+                except Exception as e:  # noqa: BLE001 — per-segment isolation
+                    if len(rep.errors) < 8:
+                        rep.errors.append((seg.segment_id, str(e)))
+        _RET_EXPIRED.inc(rep.segments_expired)
+        _RET_ROWS.inc(rep.rows_tombstoned)
         rep.seconds = time.perf_counter() - t0
         return rep
 
@@ -139,6 +160,9 @@ class RetentionWorker:
             if self.store.retire_segments([seg], fence=fence):
                 rep.segments_expired += 1
                 rep.records_expired += seg.num_records
+                telemetry.emit("segment_expired", plane="maintenance",
+                               segment=seg.segment_id,
+                               records=seg.num_records)
         finally:
             if lease is not None:
                 self.leases.release(lease)
@@ -172,6 +196,7 @@ class GCReport:
     bytes_deleted: int = 0
     dirs_kept_pinned: int = 0   # a leased arrangement still references it
     dirs_kept_grace: int = 0    # tombstone younger than the grace window
+    orphans_deleted: int = 0    # never-registered dirs past the horizon
     seconds: float = 0.0
 
 
@@ -186,11 +211,20 @@ class SpillGC:
     old (readers outside the arrangement plane — cold copy-mode
     materialization, direct column reads — finish well inside it).
 
+    **Orphan sweep**: a crash between a segment's spill and its manifest
+    registration leaves a ``segment-*`` dir that no manifest lists and no
+    tombstone marks — invisible to ``load``, untouched by the RETIRED
+    path, leaked forever.  The sweep collects such dirs once they are
+    older than ``orphan_grace_s`` (dir mtime — a *generous* horizon, far
+    beyond any spill-to-commit window, so an in-flight seal is never shot
+    down) — and ONLY when a root manifest actually exists on disk: in a
+    pre-manifest store the unregistered dirs ARE the data.
+
     ``arrangements`` accepts one ``ArrangementStore`` or an iterable of
     them (one per engine is common)."""
 
     def __init__(self, store, *, arrangements=None, grace_s: float = 60.0,
-                 clock=time.time):
+                 orphan_grace_s: float = 3600.0, clock=time.time):
         self.store = store
         if arrangements is None:
             self.arrangements = ()
@@ -199,42 +233,76 @@ class SpillGC:
         else:
             self.arrangements = tuple(arrangements)
         self.grace_s = float(grace_s)
+        self.orphan_grace_s = float(orphan_grace_s)
         self.clock = clock
 
     def run_cycle(self) -> GCReport:
         rep = GCReport()
         t0 = time.perf_counter()
-        root = self.store.root
-        if root is None:
-            rep.seconds = time.perf_counter() - t0
-            return rep
-        valid = (self.store.manifest.segment_ids()
-                 if self.store.manifest is not None else set())
-        pinned = set()
-        for arr in self.arrangements:
-            pinned |= arr.pinned_segment_ids()
-        now = self.clock()
-        for d in sorted(Path(root).glob("segment-*")):
-            marker = d / RETIRED_MARKER
-            if not marker.exists():
-                continue
-            m = _SEGDIR_RE.search(d.name)
-            sid = int(m.group(1)) if m else None
-            if sid is not None and sid in valid:
-                continue    # tombstone raced a re-adoption; manifest wins
-            if sid is not None and sid in pinned:
-                rep.dirs_kept_pinned += 1
-                continue
-            try:
-                if now - marker.stat().st_mtime < self.grace_s:
-                    rep.dirs_kept_grace += 1
+        with telemetry.span("maintenance/gc_cycle", cat="maintenance"):
+            root = self.store.root
+            if root is None:
+                rep.seconds = time.perf_counter() - t0
+                return rep
+            manifest = self.store.manifest
+            valid = (manifest.segment_ids()
+                     if manifest is not None else set())
+            # the orphan sweep needs a durable authority on membership: a
+            # manifest object always exists on a rooted store, but only an
+            # on-disk manifest FILE proves this store registers its spills
+            sweep_orphans = manifest is not None and manifest.path.exists()
+            pinned = set()
+            for arr in self.arrangements:
+                pinned |= arr.pinned_segment_ids()
+            now = self.clock()
+            for d in sorted(Path(root).glob("segment-*")):
+                marker = d / RETIRED_MARKER
+                m = _SEGDIR_RE.search(d.name)
+                sid = int(m.group(1)) if m else None
+                if sid is not None and sid in valid:
+                    continue    # manifest-listed: live, never collectable
+                if not marker.exists():
+                    # unregistered, untombstoned: an orphan from a crash
+                    # between spill and manifest registration
+                    if not sweep_orphans or sid is None:
+                        continue
+                    if sid in pinned:
+                        rep.dirs_kept_pinned += 1
+                        continue
+                    try:
+                        if now - d.stat().st_mtime < self.orphan_grace_s:
+                            rep.dirs_kept_grace += 1
+                            continue
+                        size = sum(f.stat().st_size
+                                   for f in d.glob("*") if f.is_file())
+                        shutil.rmtree(d)
+                        rep.orphans_deleted += 1
+                        rep.bytes_deleted += size
+                        _GC_ORPHANS.inc()
+                        _GC_BYTES.inc(size)
+                    except OSError:
+                        continue
                     continue
-                size = sum(f.stat().st_size
-                           for f in d.glob("*") if f.is_file())
-                shutil.rmtree(d)
-                rep.dirs_deleted += 1
-                rep.bytes_deleted += size
-            except OSError:
-                continue    # raced another GC / busy file; retry next cycle
+                if sid is not None and sid in pinned:
+                    rep.dirs_kept_pinned += 1
+                    continue
+                try:
+                    if now - marker.stat().st_mtime < self.grace_s:
+                        rep.dirs_kept_grace += 1
+                        continue
+                    size = sum(f.stat().st_size
+                               for f in d.glob("*") if f.is_file())
+                    shutil.rmtree(d)
+                    rep.dirs_deleted += 1
+                    rep.bytes_deleted += size
+                    _GC_DIRS.inc()
+                    _GC_BYTES.inc(size)
+                except OSError:
+                    continue    # raced another GC / busy file; retry next
+        if rep.dirs_deleted or rep.orphans_deleted:
+            telemetry.emit("gc_sweep", plane="maintenance",
+                           dirs_deleted=rep.dirs_deleted,
+                           orphans_deleted=rep.orphans_deleted,
+                           bytes_deleted=rep.bytes_deleted)
         rep.seconds = time.perf_counter() - t0
         return rep

@@ -34,6 +34,7 @@ from __future__ import annotations
 
 from concurrent.futures import ThreadPoolExecutor
 
+from repro.core import telemetry
 from repro.core.maintenance.backfill import (BackfillReport, BackfillWorker,
                                              merge_reports)
 from repro.core.maintenance.lease import LeaseManager
@@ -117,9 +118,11 @@ class MaintenanceWorkerPool:
             rep = self.workers[0].run_cycle(max_segments=max_segments)
             rep.acked = self._all_acked()
             return rep
-        reps = list(self._pool.map(
-            lambda w: w.run_cycle(max_segments=max_segments),
-            self.workers))
+        with telemetry.span("maintenance/pool_cycle", cat="maintenance",
+                            workers=len(self.workers)):
+            reps = list(self._pool.map(
+                lambda w: w.run_cycle(max_segments=max_segments),
+                self.workers))
         total = BackfillReport()
         for rep in reps:
             merge_reports(total, rep, sequential=False)

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import telemetry
 from repro.core.automaton import CompiledEngine, compile_rules, words_for_rules
 from repro.core.patterns import RuleSet
 from repro.kernels.dfa_scan.ops import (dfa_scan, dfa_scan_fused,
@@ -45,17 +46,25 @@ FUSED_BACKENDS = ("dfa", "dfa_ref", "parallel")
 
 # -- device->host accounting -------------------------------------------------
 # The enrich path must perform exactly ONE D2H transfer per batch; tests
-# assert this via the counter below.
-_TRANSFER_COUNT = 0
+# assert this via ``transfer_count`` (now an alias over the process-wide
+# telemetry registry — deltas, which is what the tests take, are unchanged).
+_D2H = telemetry.counter(
+    "fluxsieve_match_d2h_total",
+    help="Device-to-host transfers on the match plane (one per batch).")
+_DISPATCH = telemetry.counter(
+    "fluxsieve_match_dispatch_total",
+    help="Fused device dispatches on the match plane.")
+_MATCH_RECORDS = telemetry.counter(
+    "fluxsieve_match_records_total",
+    help="Records pushed through the fused match path.")
 
 
 def transfer_count() -> int:
-    return _TRANSFER_COUNT
+    return int(_D2H.value)
 
 
 def _to_host(x):
-    global _TRANSFER_COUNT
-    _TRANSFER_COUNT += 1
+    _D2H.inc()
     return jax.device_get(x)
 
 
@@ -336,8 +345,13 @@ class FusedMatcher:
                 m = np.pad(np.asarray(m), ((0, 0), (0, L - m.shape[1])))
             mats.append(np.asarray(m))
         data = np.stack(mats)                       # (F, N, L): one H2D
-        bm, mask = dfa_scan_fused(data, plan.luts, plan.deltas, plan.emits,
-                                  eng_idx=plan.eng_idx,
-                                  backend=self._kernel, block_n=self.block_n,
-                                  interpret=self.interpret)
+        with telemetry.span("match/dispatch", cat="match", n=int(n),
+                            fields=len(plan.cols)):
+            bm, mask = dfa_scan_fused(data, plan.luts, plan.deltas,
+                                      plan.emits, eng_idx=plan.eng_idx,
+                                      backend=self._kernel,
+                                      block_n=self.block_n,
+                                      interpret=self.interpret)
+        _DISPATCH.inc()
+        _MATCH_RECORDS.inc(int(n))
         return MatchResult(bm, mask)

@@ -38,6 +38,45 @@ import warnings
 from collections import Counter
 from dataclasses import dataclass
 
+from repro.core import telemetry
+
+# Process-wide telemetry ALONGSIDE the per-object accounting: tests and
+# benchmarks keep reading per-store ``uploads``/``h2d_bytes``/... values;
+# the registry aggregates across every store in the process.
+_T_UPLOADS = telemetry.counter(
+    "fluxsieve_arrangement_uploads_total",
+    help="Word-column H2D uploads into the shared device pool.")
+_T_H2D_BYTES = telemetry.counter(
+    "fluxsieve_arrangement_h2d_bytes_total",
+    help="Bytes crossing the H2D link for arrangement columns.")
+_T_BUILDS = telemetry.counter(
+    "fluxsieve_arrangement_builds_total",
+    help="Arrangement assemblies (stack builds).")
+_T_LEASE_HITS = telemetry.counter(
+    "fluxsieve_arrangement_lease_hits_total",
+    help="Leases served from an already-live arrangement.")
+_T_EVICT_ARR = telemetry.counter(
+    "fluxsieve_arrangement_evictions_total",
+    labels={"kind": "arrangement"},
+    help="Evictions from the shared device plane, by kind.")
+_T_EVICT_COL = telemetry.counter(
+    "fluxsieve_arrangement_evictions_total", labels={"kind": "column"})
+_T_EPOCHS = telemetry.counter(
+    "fluxsieve_arrangement_epochs_total",
+    help="Maintenance epochs published to the device plane.")
+_T_RETIRED = telemetry.counter(
+    "fluxsieve_arrangement_epoch_retirements_total",
+    help="Arrangements retired by an epoch publication.")
+_T_LEAKS = telemetry.counter(
+    "fluxsieve_arrangement_lease_leaks_total",
+    help="Leases released at finalization instead of by their owner.")
+_DEV_BYTES = telemetry.gauge(
+    "fluxsieve_arrangement_device_bytes",
+    help="Device bytes resident across all arrangement stores.")
+_DEV_PEAK = telemetry.gauge(
+    "fluxsieve_arrangement_device_bytes_peak",
+    help="High-water mark of resident arrangement device bytes.")
+
 
 @dataclass(frozen=True)
 class ArrangementItem:
@@ -125,6 +164,13 @@ class ArrangementLease:
         if not self._released:
             if self._store is not None:
                 self._store.leaks += 1
+            try:    # interpreter teardown may have torn telemetry down
+                _T_LEAKS.inc()
+                telemetry.emit("lease_leak", plane="arrangement",
+                               owner=self.owner,
+                               key=repr(self.arrangement.key))
+            except Exception:
+                pass
             warnings.warn(
                 f"ArrangementLease leaked by {self.owner!r} "
                 f"(key={self.arrangement.key!r}) — released at finalization",
@@ -186,9 +232,11 @@ class ArrangementStore:
 
         with self._lock:
             self._epoch += 1
+            _T_EPOCHS.inc()
             for key in [k for k, a in self._live.items()
                         if touches(a.tokens)]:
                 self._retire_locked(self._live.pop(key))
+                _T_RETIRED.inc()
             # a build in flight over the published segments must not enter
             # _live as a fresh entry: its key is marked doomed and the
             # finished arrangement installs already-retired (its lease
@@ -218,6 +266,7 @@ class ArrangementStore:
                 if arr is not None:
                     arr.refcount += 1
                     self.lease_hits += 1
+                    _T_LEASE_HITS.inc()
                     return self._make_lease_locked(arr, owner)
                 ev = self._building.get(key)
                 if ev is None:
@@ -345,26 +394,31 @@ class ArrangementStore:
             col = self._columns[ck]
             if col.refs == 0 and not col.retired:
                 self._remove_column_locked(col)
+                _T_EVICT_COL.inc()
 
     def _evict_locked(self) -> None:
         while len(self._live) > self.max_live:
             # retire the oldest key; leased readers keep it alive
             key = next(iter(self._live))
             self._retire_locked(self._live.pop(key))
+            _T_EVICT_ARR.inc()
 
     def _alloc_bytes(self, n: int) -> None:
         self.device_bytes += int(n)
         self.device_bytes_peak = max(self.device_bytes_peak,
                                      self.device_bytes)
+        _DEV_PEAK.track_max(_DEV_BYTES.inc(int(n)))
 
     def _free_bytes(self, n: int) -> None:
         self.device_bytes -= int(n)
+        _DEV_BYTES.dec(int(n))
 
     def _build(self, key, items, words, block_n) -> Arrangement:
         stack, row_seg, lens, nbytes = self._assemble(
             items, words, block_n, pooled=True)
         with self._lock:
             self.builds += 1
+            _T_BUILDS.inc()
             cols = []
             for it in items:
                 for w in words:
@@ -443,6 +497,8 @@ class ArrangementStore:
             self._pool_index[iw] = col
             self.uploads[ck] += 1
             self.h2d_bytes += nbytes
+            _T_UPLOADS.inc()
+            _T_H2D_BYTES.inc(nbytes)
             self._alloc_bytes(nbytes)
             self._evict_columns_locked()
             return dev

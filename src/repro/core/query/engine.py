@@ -50,6 +50,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core import telemetry
 from repro.core.records import RecordBatch
 from repro.core.query.arrangement import ArrangementStore
 from repro.core.query.executor import (PlanExecutor, ShardedQueryExecutor,
@@ -58,6 +59,19 @@ from repro.core.query.planner import PhysicalPlan, QueryPlanner
 from repro.core.query.store import Segment, SegmentStore  # noqa: F401
 
 PATHS = ("full_scan", "text_index", "fluxsieve")
+
+# per-path latency histograms: the paper's Fig-6/7 axis in snapshot form
+_QUERY_LATENCY = {
+    p: telemetry.histogram("fluxsieve_query_latency_seconds",
+                           labels={"path": p},
+                           help="End-to-end query latency by logical path.")
+    for p in PATHS
+}
+_QUERY_TOTAL = telemetry.counter(
+    "fluxsieve_query_total", help="Queries executed.")
+_QUERY_BYTES = telemetry.counter(
+    "fluxsieve_query_bytes_read_total",
+    help="Bytes read from spill by queries (cold-path I/O).")
 
 
 @dataclass(frozen=True)
@@ -163,11 +177,18 @@ class QueryEngine:
             raise ValueError("query not covered by registered rules; "
                              "no fluxsieve plan")
         t0 = time.perf_counter()
-        plan = self.planner.plan(query, list(self.store.segments),
-                                 path=path, flux=flux, cache=not cold)
-        res = self._run(plan, cache=not cold)
+        with telemetry.span("query/execute", cat="query",
+                            mode=query.mode, query=query.name):
+            plan = self.planner.plan(query, list(self.store.segments),
+                                     path=path, flux=flux, cache=not cold)
+            res = self._run(plan, cache=not cold)
         res.latency_s = time.perf_counter() - t0
         res.path = plan.path
+        _QUERY_TOTAL.inc()
+        _QUERY_BYTES.inc(res.bytes_read)
+        hist = _QUERY_LATENCY.get(res.path)
+        if hist is not None:
+            hist.observe(res.latency_s)
         if self.profiler is not None:
             self.profiler.record(query, res)
         return res

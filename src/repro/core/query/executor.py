@@ -48,6 +48,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core import telemetry
 from repro.core.stream_processor import ENRICH_COLUMN
 from repro.core.query.arrangement import ArrangementItem, ArrangementStore
 from repro.core.query.planner import (BITMAP, FALLBACK, FULL_SCAN,
@@ -56,17 +57,22 @@ from repro.core.query.planner import (BITMAP, FALLBACK, FULL_SCAN,
 
 # -- device->host accounting -------------------------------------------------
 # The batched bitmap path performs exactly ONE D2H transfer per query; tests
-# assert this via the counter below (mirrors core.matcher.transfer_count).
-_TRANSFER_COUNT = 0
+# assert this via ``transfer_count`` — now an alias over the process-wide
+# telemetry registry (mirrors core.matcher.transfer_count).
+_D2H = telemetry.counter(
+    "fluxsieve_query_d2h_total",
+    help="Device-to-host transfers on the query plane (one per query).")
+_STACKED_DISPATCH = telemetry.counter(
+    "fluxsieve_query_stacked_dispatch_total",
+    help="Stacked bitmap-class device dispatches.")
 
 
 def transfer_count() -> int:
-    return _TRANSFER_COUNT
+    return int(_D2H.value)
 
 
 def _to_host(x):
-    global _TRANSFER_COUNT
-    _TRANSFER_COUNT += 1
+    _D2H.inc()
     import jax
     return jax.device_get(x)
 
@@ -202,11 +208,14 @@ class PlanExecutor:
             bits = self._device_bits(plan.flux.rule_ids, bits_np)
             copy_mode = plan.query.mode == "copy"
             with_counts = not copy_mode and self._use_device_counts()
-            match_dev, counts_dev = bitmap_query_words(
-                arr.stack, bits, arr.row_seg, num_segments=len(tasks),
-                backend="pallas" if self.backend == "pallas" else "ref",
-                block_n=self.block_n, interpret=self.interpret,
-                with_counts=with_counts)
+            with telemetry.span("query/stacked_dispatch", cat="query",
+                                segments=len(tasks), owner=owner):
+                match_dev, counts_dev = bitmap_query_words(
+                    arr.stack, bits, arr.row_seg, num_segments=len(tasks),
+                    backend="pallas" if self.backend == "pallas" else "ref",
+                    block_n=self.block_n, interpret=self.interpret,
+                    with_counts=with_counts)
+            _STACKED_DISPATCH.inc()
             # the ONE counted D2H per query: on accelerators the
             # device-side segment_sum shrinks it from N bytes to S ints;
             # on XLA CPU the mask transfer is the measured win

@@ -14,7 +14,30 @@ from __future__ import annotations
 import threading
 from dataclasses import dataclass, field
 
+from repro.core import telemetry
 from repro.core.patterns import Rule, RuleSet, escape
+
+# the profiler's per-path-class accounting, bridged into the registry so a
+# snapshot carries "which physical path burned the time" without asking a
+# live profiler object
+_CLASS_SEGMENTS = {}        # class -> Counter, created lazily per class
+_CLASS_SECONDS = {}         # class -> Histogram of attributed latency share
+_BRIDGE_LOCK = threading.Lock()
+
+
+def _class_metrics(cls: str):
+    with _BRIDGE_LOCK:
+        seg = _CLASS_SEGMENTS.get(cls)
+        if seg is None:
+            seg = _CLASS_SEGMENTS[cls] = telemetry.counter(
+                "fluxsieve_query_segments_total",
+                labels={"path_class": cls},
+                help="Segments served, by physical path class.")
+            _CLASS_SECONDS[cls] = telemetry.histogram(
+                "fluxsieve_query_class_seconds",
+                labels={"path_class": cls},
+                help="Per-query latency share attributed to a path class.")
+        return seg, _CLASS_SECONDS[cls]
 
 
 @dataclass
@@ -71,6 +94,9 @@ class QueryProfiler:
                 st["queries"] += 1
                 st["segments"] += nseg
                 st["seconds"] += result.latency_s * (nseg / total)
+                seg_ctr, sec_hist = _class_metrics(cls)
+                seg_ctr.inc(nseg)
+                sec_hist.observe(result.latency_s * (nseg / total))
 
     def path_class_stats(self) -> dict:
         """class -> {queries, segments, seconds}: how often each physical

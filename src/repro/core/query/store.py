@@ -45,8 +45,22 @@ from pathlib import Path
 
 import numpy as np
 
+from repro.core import telemetry
 from repro.core.records import RecordBatch, decode_texts
 from repro.core.stream_processor import ENGINE_VERSION_COLUMN, ENRICH_COLUMN
+
+_SEALED = telemetry.counter(
+    "fluxsieve_store_segments_sealed_total",
+    help="Segments sealed out of the active append buffer.")
+_COMMITS = telemetry.counter(
+    "fluxsieve_store_manifest_commits_total",
+    help="Atomic root-manifest commits.")
+_EPOCH_PUBLISHES = telemetry.counter(
+    "fluxsieve_store_epoch_publishes_total",
+    help="Maintenance epochs published to subscribers.")
+_SEGMENTS_MISSING = telemetry.counter(
+    "fluxsieve_store_segments_missing_total",
+    help="Manifest-listed spill dirs found missing at load (data loss).")
 
 _TOKEN_RE = re.compile(r"[A-Za-z0-9_\-./:]+")
 
@@ -139,6 +153,10 @@ class Manifest:
                     f[key] = max(int(f.get(key, 0)), int(epoch))
             _atomic_write_text(self.path,
                                json.dumps(self._state, sort_keys=True))
+        _COMMITS.inc()
+        telemetry.emit("manifest_commit", plane="store",
+                       added=len(add or ()), removed=len(tuple(remove or ())),
+                       fenced=len(fences or ()))
 
     # -- readers -----------------------------------------------------------
     def segment_dirs(self) -> list:
@@ -562,6 +580,9 @@ class SegmentStore:
                 s._on_swap = self._publish_epoch
 
     def _publish_epoch(self, segment_ids) -> None:
+        _EPOCH_PUBLISHES.inc()
+        telemetry.emit("epoch_publish", plane="store",
+                       segments=[int(s) for s in segment_ids])
         dead = False
         for r in list(self._maintenance_listeners):
             fn = r()
@@ -624,6 +645,7 @@ class SegmentStore:
                 meta["rule_idents"] = idents
                 meta["rules_known"] = pack_known_bitmap(
                     idents, batch.columns[ENRICH_COLUMN].shape[1])
+        _SEALED.inc()
         seg = Segment(segment_id=sid, num_records=len(batch), meta=meta,
                       _columns=dict(batch.columns),
                       _rule_postings=seg_postings,
@@ -787,6 +809,9 @@ class SegmentStore:
                     # deletion, partial restore) and must not reload as a
                     # silently smaller store — the mirror hazard of the
                     # double-count window the manifest closes
+                    _SEGMENTS_MISSING.inc()
+                    telemetry.emit("segment_missing", plane="store",
+                                   dir=d.name, root=str(root))
                     warnings.warn(
                         f"manifest lists {d.name} but the spill dir is "
                         f"missing; its records are LOST from this load",

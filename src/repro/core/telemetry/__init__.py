@@ -1,0 +1,41 @@
+"""FluxSieve's unified telemetry plane.
+
+One process-wide registry of counters/gauges/histograms, one span tracer
+with Chrome-trace export, one structured event log, and the exporters that
+serialize all three.  Every plane (ingest, match, query, arrangement,
+maintenance) reports through this package; see docs/TELEMETRY.md for the
+naming scheme and snapshot schema.
+
+Typical call-site idiom — cache handles at import time, mutate on the hot
+path, never look up:
+
+    from repro.core.telemetry import metrics, trace
+
+    _DISPATCH = metrics.counter("fluxsieve_match_dispatch_total",
+                                help="Fused device dispatches.")
+    ...
+    with trace.span("match/dispatch", batch=n):
+        _DISPATCH.inc()
+"""
+from repro.core.telemetry import events, export, metrics, trace
+from repro.core.telemetry.events import emit
+from repro.core.telemetry.export import prometheus_text, snapshot, write_dump
+from repro.core.telemetry.metrics import (counter, enabled, gauge, histogram,
+                                          set_enabled)
+from repro.core.telemetry.trace import export_chrome_trace, span
+
+
+def reset() -> None:
+    """Zero all metrics in place, clear spans and events.  Cached metric
+    handles stay valid (benchmark suites and tests isolate this way)."""
+    metrics.reset()
+    trace.reset()
+    events.reset()
+
+
+__all__ = [
+    "counter", "gauge", "histogram", "enabled", "set_enabled",
+    "span", "export_chrome_trace", "emit",
+    "prometheus_text", "snapshot", "write_dump", "reset",
+    "metrics", "trace", "events", "export",
+]

@@ -1,0 +1,76 @@
+"""Structured event log for the control-plane moments that matter.
+
+Counters say *how many*; the event log says *what happened, when, with what
+identifiers* — epoch publishes, lease acquisitions and fencing rejections,
+manifest commits, crash-recovery actions, GC sweeps.  Each event is one
+JSON-able dict in a bounded ring buffer:
+
+    {"ts": <unix seconds>, "kind": "fencing_rejection", "plane":
+     "maintenance", "worker": "bf-1", "epoch": 3, ...}
+
+Every ``emit`` also bumps ``fluxsieve_events_total{kind=...}`` so the
+aggregate rate shows up in the metrics snapshot even after the ring has
+wrapped.  The log is capped (default 4096 events) — a stuck retry loop
+cannot grow memory; ``dropped`` counts what fell off.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+
+from repro.core.telemetry import metrics
+
+
+class EventLog:
+    def __init__(self, *, capacity: int = 4096):
+        self._events = deque(maxlen=int(capacity))
+        self._lock = threading.Lock()
+        self.dropped = 0
+        self._counter = metrics.REGISTRY
+
+    def emit(self, kind: str, *, plane: str = "", **fields) -> None:
+        """Record one structured event.  ``fields`` must be JSON-able."""
+        if not metrics.enabled():
+            return
+        ev = {"ts": time.time(), "kind": kind, "plane": plane}
+        ev.update(fields)
+        metrics.counter("fluxsieve_events_total",
+                        labels={"kind": kind},
+                        help="Structured events emitted, by kind.").inc()
+        with self._lock:
+            if len(self._events) == self._events.maxlen:
+                self.dropped += 1
+            self._events.append(ev)
+
+    def events(self, *, kind: str = None) -> list:
+        with self._lock:
+            evs = list(self._events)
+        if kind is not None:
+            evs = [e for e in evs if e["kind"] == kind]
+        return evs
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._events)
+
+    def reset(self) -> None:
+        with self._lock:
+            self._events.clear()
+            self.dropped = 0
+
+
+# -- the process-wide default event log ---------------------------------------
+EVENTS = EventLog()
+
+
+def emit(kind: str, *, plane: str = "", **fields) -> None:
+    EVENTS.emit(kind, plane=plane, **fields)
+
+
+def events(*, kind: str = None) -> list:
+    return EVENTS.events(kind=kind)
+
+
+def reset() -> None:
+    EVENTS.reset()

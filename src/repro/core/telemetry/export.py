@@ -1,0 +1,96 @@
+"""Exporters: Prometheus text exposition format + JSON snapshot + trace dump.
+
+``prometheus_text()`` renders the whole registry in the text format every
+Prometheus-compatible scraper understands (`# HELP` / `# TYPE` headers,
+``name{label="v"} value`` samples, histograms as cumulative ``_bucket{le=}``
+series plus ``_sum``/``_count``).  ``snapshot()`` is the JSON-able dict the
+benchmarks embed per suite; ``write_dump(dir)`` writes all three artifacts
+(``metrics.prom``, ``snapshot.json``, ``trace.json``) for offline
+inspection — the trace loads directly in https://ui.perfetto.dev.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.core.telemetry import events as _events
+from repro.core.telemetry import metrics
+from repro.core.telemetry import trace as _trace
+
+
+def _escape(v: str) -> str:
+    return str(v).replace("\\", r"\\").replace('"', r'\"').replace("\n", r"\n")
+
+
+def _labels_text(labels: dict, extra: dict = None) -> str:
+    pairs = dict(labels or {})
+    if extra:
+        pairs.update(extra)
+    if not pairs:
+        return ""
+    body = ",".join(f'{k}="{_escape(v)}"' for k, v in sorted(pairs.items()))
+    return "{" + body + "}"
+
+
+def prometheus_text(registry: "metrics.MetricsRegistry" = None) -> str:
+    """Render the registry in Prometheus text exposition format."""
+    reg = registry if registry is not None else metrics.REGISTRY
+    # group series under one HELP/TYPE header per metric name
+    by_name = {}
+    for kind, name, m in reg.collect():
+        by_name.setdefault(name, (kind, []))[1].append(m)
+    lines = []
+    for name in sorted(by_name):
+        kind, series = by_name[name]
+        help_text = reg.help_text(name)
+        if help_text:
+            lines.append(f"# HELP {name} {_escape(help_text)}")
+        lines.append(f"# TYPE {name} {kind}")
+        for m in series:
+            if kind in ("counter", "gauge"):
+                lines.append(f"{name}{_labels_text(m.labels)} {m.value}")
+            else:
+                cum = 0
+                with m._lock:
+                    counts = list(m._counts)
+                    count, total = m._count, m._sum
+                for i, c in enumerate(counts):
+                    if not c:
+                        continue
+                    cum += c
+                    le = f"{m.bucket_bounds(i)[1]:.9g}"
+                    lines.append(f"{name}_bucket"
+                                 f"{_labels_text(m.labels, {'le': le})} {cum}")
+                lines.append(f"{name}_bucket"
+                             f"{_labels_text(m.labels, {'le': '+Inf'})} "
+                             f"{count}")
+                lines.append(f"{name}_sum{_labels_text(m.labels)} {total}")
+                lines.append(f"{name}_count{_labels_text(m.labels)} {count}")
+    return "\n".join(lines) + "\n"
+
+
+def snapshot() -> dict:
+    """Full JSON-able telemetry snapshot: metrics + recent events."""
+    out = metrics.snapshot()
+    out["events"] = _events.events()
+    out["generated_at"] = time.time()
+    return out
+
+
+def write_dump(directory, *, prefix: str = "") -> dict:
+    """Write metrics.prom, snapshot.json, and trace.json into ``directory``.
+    Returns {artifact name: path} for logging."""
+    d = Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    paths = {}
+    prom = d / f"{prefix}metrics.prom"
+    prom.write_text(prometheus_text())
+    paths["metrics"] = str(prom)
+    snap = d / f"{prefix}snapshot.json"
+    snap.write_text(json.dumps(snapshot(), indent=2, default=str))
+    paths["snapshot"] = str(snap)
+    tr = d / f"{prefix}trace.json"
+    tr.write_text(json.dumps(_trace.export_chrome_trace()))
+    paths["trace"] = str(tr)
+    return paths

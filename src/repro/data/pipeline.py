@@ -18,12 +18,31 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core import enrichment
+from repro.core import enrichment, telemetry
 from repro.core.records import RecordBatch
 from repro.core.stream_processor import ENRICH_COLUMN, StreamProcessor
 from repro.core.query.store import SegmentStore
 from repro.data import tokenizer
 from repro.data.generator import LogGenerator
+
+# per-batch stage latencies (one observe per batch, not per record) plus
+# throughput/overlap counters — the snapshot-side view of StageTimes
+_STAGE_HIST = {
+    stage: telemetry.histogram(
+        "fluxsieve_ingest_stage_seconds", labels={"stage": stage},
+        help="Per-batch host seconds by ingest stage.")
+    for stage in ("generate", "dispatch", "finalize_wait", "store")
+}
+_INGEST_RECORDS = telemetry.counter(
+    "fluxsieve_ingest_records_total",
+    help="Records ingested through the pipeline.")
+_INGEST_BATCHES = telemetry.counter(
+    "fluxsieve_ingest_batches_total",
+    help="Batches pushed through the ingest loop.")
+_OVERLAP_S = telemetry.counter(
+    "fluxsieve_ingest_overlap_seconds_total",
+    help="Host seconds spent generating/storing while a dispatched match "
+         "was still in flight (double-buffering overlap).")
 
 
 @dataclass
@@ -78,10 +97,15 @@ class IngestPipeline:
     def _flush(self, pending) -> tuple:
         """finalize + append one pending batch; -> (wait_s, store_s)."""
         t0 = time.perf_counter()
-        out = self.processor.finalize(pending)
+        with telemetry.span("ingest/finalize_wait", cat="ingest"):
+            out = self.processor.finalize(pending)
         t1 = time.perf_counter()
-        self.store.append(out)
-        return t1 - t0, time.perf_counter() - t1
+        with telemetry.span("ingest/store", cat="ingest"):
+            self.store.append(out)
+        t2 = time.perf_counter()
+        _STAGE_HIST["finalize_wait"].observe(t1 - t0)
+        _STAGE_HIST["store"].observe(t2 - t1)
+        return t1 - t0, t2 - t1
 
     def run(self, *, batch_size: int = 4096, limit: int = None,
             poll_updates: bool = True, target_rate: float = None,
@@ -99,22 +123,31 @@ class IngestPipeline:
         while start < total:
             n = min(batch_size, total - start)
             t0 = time.perf_counter()
-            batch = self.generator.batch(start, n)
+            with telemetry.span("ingest/generate", cat="ingest", n=n):
+                batch = self.generator.batch(start, n)
             t1 = time.perf_counter()
             t.generate_s += t1 - t0
+            _STAGE_HIST["generate"].observe(t1 - t0)
             # only device-side results can actually be in flight; host
             # backends (dfa_selective) matched synchronously at dispatch
             if pending is not None and pending.result.on_device:
                 t.overlap_s += t1 - t0          # generated while k-1 matched
+                _OVERLAP_S.inc(t1 - t0)
             if self.processor is None:
-                self.store.append(batch)
-                t.store_s += time.perf_counter() - t1
+                with telemetry.span("ingest/store", cat="ingest"):
+                    self.store.append(batch)
+                store_s = time.perf_counter() - t1
+                t.store_s += store_s
+                _STAGE_HIST["store"].observe(store_s)
             else:
                 td = time.perf_counter()
                 if poll_updates:
                     self.processor.poll_updates()  # control topology
-                pb = self.processor.process_async(batch)
-                t.process_s += time.perf_counter() - td
+                with telemetry.span("ingest/dispatch", cat="ingest", n=n):
+                    pb = self.processor.process_async(batch)
+                dispatch_s = time.perf_counter() - td
+                t.process_s += dispatch_s
+                _STAGE_HIST["dispatch"].observe(dispatch_s)
                 if pipelined:
                     if pending is not None:
                         wait_s, store_s = self._flush(pending)
@@ -122,12 +155,15 @@ class IngestPipeline:
                         t.store_s += store_s
                         if pb.result.on_device:
                             t.overlap_s += store_s  # stored k-1, k in flight
+                            _OVERLAP_S.inc(store_s)
                     pending = pb
                 else:
                     wait_s, store_s = self._flush(pb)
                     t.process_s += wait_s
                     t.store_s += store_s
             t.records += n
+            _INGEST_RECORDS.inc(n)
+            _INGEST_BATCHES.inc()
             start += n
             if target_rate:
                 ahead = start / target_rate - (time.perf_counter() - wall0)

@@ -8,10 +8,12 @@ with the updater feedback loop live (profiler promotes hot predicates).
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 import numpy as np
 
+from repro.core import telemetry
 from repro.core.control_plane import ControlBus
 from repro.core.maintenance import (Compactor, MaintenancePolicy,
                                     MaintenanceScheduler,
@@ -67,7 +69,25 @@ def main(argv=None) -> int:
                          "maintenance, retire segments older than AGE past "
                          "the newest sealed timestamp, purge straddling "
                          "rows via compaction, and GC drained spill dirs")
+    ap.add_argument("--metrics-dump", default=None, metavar="DIR",
+                    help="write metrics.prom / snapshot.json / trace.json "
+                         "into DIR at the end of the run")
+    ap.add_argument("--metrics-interval", type=float, default=None,
+                    metavar="S",
+                    help="with --metrics-dump: additionally rewrite "
+                         "metrics.prom every S seconds while running")
     args = ap.parse_args(argv)
+
+    stop_dumper = None
+    if args.metrics_dump and args.metrics_interval:
+        stop_dumper = threading.Event()
+
+        def _periodic():
+            while not stop_dumper.wait(args.metrics_interval):
+                telemetry.write_dump(args.metrics_dump)
+
+        threading.Thread(target=_periodic, daemon=True,
+                         name="metrics-dumper").start()
 
     spec = WorkloadSpec(num_records=args.records,
                         num_content_fields=args.fields)
@@ -175,6 +195,11 @@ def main(argv=None) -> int:
                   f"{prep.rows_purged} straddler rows, GC deleted "
                   f"{grep_.dirs_deleted} spill dirs "
                   f"({store.num_records}/{before} records retained)")
+    if stop_dumper is not None:
+        stop_dumper.set()
+    if args.metrics_dump:
+        paths = telemetry.write_dump(args.metrics_dump)
+        print(f"telemetry: wrote {', '.join(sorted(paths.values()))}")
     return 0
 
 
