@@ -67,6 +67,7 @@ def run(num_records: int = 60_000, num_rules: int = 1000,
         }))
     rows.extend(telemetry_overhead(num_records=num_records,
                                    num_rules=num_rules))
+    rows.extend(wal_overhead(num_records=num_records, num_rules=num_rules))
     return rows
 
 
@@ -113,6 +114,50 @@ def telemetry_overhead(num_records: int = 60_000, num_rules: int = 1000,
         runs=repeats,
         derived={"overhead_pct": f"{pct:.2f}", "budget_pct": "2.00",
                  "within_budget": str(pct < 2.0).lower()}))
+    return rows
+
+
+def wal_overhead(num_records: int = 60_000, num_rules: int = 1000,
+                 repeats: int = 5) -> list:
+    """Crash-safe ingest must stay nearly free: journaling every raw batch
+    (atomic npz next to the spill dirs) may cost at most 5% over the same
+    wait-inclusive fluxsieve-sync lane without the WAL.  Same ABAB
+    discipline as ``telemetry_overhead``; both arms run rooted stores (the
+    WAL needs one, and spill cost must hit both arms equally), comparing
+    median total ingest seconds (generate + wal + match + store)."""
+    spec = WorkloadSpec(num_records=num_records, text_width=256)
+    ruleset = planted_ruleset(spec, num_rules)
+    bundle = compile_bundle(ruleset, spec.content_fields)
+    samples = {False: [], True: []}
+
+    def one(wal: bool) -> float:
+        gen = LogGenerator(spec)
+        with tempfile.TemporaryDirectory() as root:
+            store = SegmentStore(segment_size=num_records + 1, root=root)
+            proc = StreamProcessor(bundle, backend="dfa_ref")
+            times = IngestPipeline(gen, store, proc, wal=wal).run(
+                batch_size=4096, pipelined=False)
+            return (times.generate_s + times.wal_s + times.process_s
+                    + times.store_s)
+
+    one(True)                           # warmup: jit + allocator caches
+    for _ in range(repeats):
+        samples[False].append(one(False))
+        samples[True].append(one(True))
+    off = statistics.median(samples[False])
+    on = statistics.median(samples[True])
+    pct = (on / off - 1.0) * 100.0
+    rows = []
+    for wal, med in ((False, off), (True, on)):
+        rows.append(Measurement(
+            name=f"overhead/wal_{'on' if wal else 'off'}",
+            median_s=med / num_records, ci_lo=0, ci_hi=0, runs=repeats,
+            derived={"ingest_s": f"{med:.3f}"}))
+    rows.append(Measurement(
+        name="overhead/wal_delta", median_s=0, ci_lo=0, ci_hi=0,
+        runs=repeats,
+        derived={"overhead_pct": f"{pct:.2f}", "budget_pct": "5.00",
+                 "within_budget": str(pct < 5.0).lower()}))
     return rows
 
 

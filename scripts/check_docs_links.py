@@ -47,6 +47,18 @@ def check(doc: str) -> list:
     return missing
 
 
+def check_fault_sites() -> list:
+    """Every fault-injection site the code defines must appear in the
+    failure-domain matrix (docs/ROBUSTNESS.md) — an undocumented site is a
+    blast radius nobody reasoned about.  Parsed textually (no import, so
+    the check stays dependency-free)."""
+    src = (ROOT / "src/repro/core/faults.py").read_text()
+    m = re.search(r"^SITES = \((?P<body>.*?)\)", src, re.S | re.M)
+    sites = re.findall(r'"([a-z_]+\.[a-z_]+)"', m.group("body"))
+    doc = (ROOT / "docs/ROBUSTNESS.md").read_text()
+    return [s for s in sites if f"`{s}`" not in doc]
+
+
 def main() -> int:
     failures = 0
     for doc in DOCS:
@@ -54,6 +66,10 @@ def main() -> int:
         for ref in missing:
             print(f"{doc}: missing path {ref!r}", file=sys.stderr)
         failures += len(missing)
+    for site in check_fault_sites():
+        print(f"docs/ROBUSTNESS.md: fault site `{site}` is not documented "
+              f"in the failure-domain matrix", file=sys.stderr)
+        failures += 1
     if failures:
         print(f"docs link check FAILED: {failures} dead reference(s)",
               file=sys.stderr)

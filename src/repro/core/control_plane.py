@@ -11,6 +11,8 @@ import threading
 import time
 from dataclasses import dataclass, field
 
+from repro.core import faults
+
 MATCHER_UPDATES = "matcher-updates"
 MATCHER_ACKS = "matcher-acks"
 # maintenance plane: engine updates fan out to backfill workers on their own
@@ -44,11 +46,26 @@ class ControlBus:
 
     def poll(self, topic: str, group: str, max_messages: int = 100) -> list:
         """At-least-once: returns messages past the committed offset; the
-        same messages are returned again until ``commit`` advances it."""
+        same messages are returned again until ``commit`` advances it.
+
+        The ``bus.deliver`` fault site perturbs the polled window the ways
+        a real broker can: ``drop`` (delayed delivery — nothing is lost,
+        the uncommitted window redelivers next poll), ``dup`` (the window
+        arrives twice — consumers must be idempotent under at-least-once),
+        ``reorder`` (the window arrives reversed)."""
         with self._lock:
             log = self._topics.get(topic, [])
             start = self._offsets.get((topic, group), 0)
-            return list(log[start:start + max_messages])
+            msgs = list(log[start:start + max_messages])
+        if faults.armed() and msgs:
+            action = faults.act("bus.deliver", topic=topic, group=group)
+            if action == "drop":
+                msgs = []
+            elif action == "dup":
+                msgs = msgs + msgs
+            elif action == "reorder":
+                msgs = list(reversed(msgs))
+        return msgs
 
     def commit(self, topic: str, group: str, offset: int) -> None:
         with self._lock:

@@ -1,0 +1,360 @@
+"""Deterministic fault-injection plane — named sites, seedable specs,
+zero cost when disarmed.
+
+FluxSieve moves filtering into the ingestion path, which turns ingest
+failures into *data-loss* failures; the only way to trust the recovery
+machinery (WAL replay, circuit breaking, partial queries) is to exercise it
+deterministically.  This module is the process-wide registry the planes
+consult at named **injection sites**:
+
+    ``match.dispatch``          fused device dispatch (StreamProcessor)
+    ``match.fallback``          degraded oracle-lane dispatch
+    ``match.d2h``               result D2H transfer (finalize)
+    ``ingest.wal_append``       write-ahead journal write
+    ``ingest.append``           store append of an enriched batch
+    ``store.spill``             sealed-segment spill I/O
+    ``store.manifest_commit``   root-manifest commit
+    ``bus.deliver``             control-bus delivery (drop/dup/reorder)
+    ``maintenance.checkpoint``  backfill checkpoint write
+    ``query.shard``             sharded query-executor shard entry
+
+Design mirrors ``telemetry.set_enabled``'s zero-cost-when-off discipline:
+``fire``/``act`` early-return on a module-level flag, so a disarmed
+production path pays one attribute read per site.  Specs are deterministic
+(``every``/``times``/``after`` counters, or ``prob`` driven by a seeded
+PRNG over the per-spec call sequence) so chaos tests replay exactly.
+
+Two exception classes:
+
+  * :class:`InjectedFault` (``RuntimeError``) — a *recoverable* simulated
+    error; retry/breaker/fallback machinery is expected to absorb it;
+  * :class:`InjectedCrash` (``BaseException``) — a simulated **process
+    kill**.  It deliberately does NOT derive from ``Exception`` so no
+    broad ``except Exception`` recovery handler can swallow it: the test
+    harness catches it at top level, abandons the process state, and
+    "restarts" by reloading from disk.
+
+Profiles load from the ``FLUXSIEVE_FAULTS`` environment variable at import
+(grammar: ``site:kind@key=val,key=val;site2:kind``), so CI can run the
+whole tier-1 suite under periodic injected faults without code changes.
+
+Every injected action bumps ``fluxsieve_faults_injected_total{site}`` and
+emits a ``fault_injected`` event, so a chaos run's telemetry dump is the
+record of what was actually injected.
+"""
+from __future__ import annotations
+
+import os
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+
+from repro.core import telemetry
+
+ENV_VAR = "FLUXSIEVE_FAULTS"
+
+SITES = (
+    "match.dispatch",
+    "match.fallback",
+    "match.d2h",
+    "ingest.wal_append",
+    "ingest.append",
+    "store.spill",
+    "store.manifest_commit",
+    "bus.deliver",
+    "maintenance.checkpoint",
+    "query.shard",
+)
+
+# error/crash/stall raise or sleep at the site; drop/dup/reorder are
+# *actions* interpreted by the control bus (``act``)
+KINDS = ("error", "crash", "stall", "drop", "dup", "reorder")
+_SPEC_KEYS = ("every", "times", "after", "prob", "seed", "delay")
+
+
+class InjectedFault(RuntimeError):
+    """A recoverable simulated failure (retry/fallback paths absorb it)."""
+
+
+class InjectedCrash(BaseException):
+    """A simulated hard process kill.  Derives from ``BaseException`` so
+    broad ``except Exception`` recovery handlers cannot swallow it — only
+    the chaos harness's top-level catch may."""
+
+
+@dataclass
+class FaultSpec:
+    """One armed fault.  Fires on calls to ``site`` whose context matches
+    ``where`` (string-compared), subject to:
+
+      ``after``  skip the first N matching calls;
+      ``every``  then fire every Nth matching call;
+      ``prob``   else fire with probability p (seeded, deterministic in
+                 call order);
+      (neither)  fire on every matching call;
+      ``times``  stop after N total fires (spec goes inert).
+    """
+    site: str
+    kind: str = "error"
+    every: int = None
+    times: int = None
+    after: int = 0
+    prob: float = None
+    seed: int = 0
+    delay: float = 0.05         # stall kinds: seconds slept per fire
+    where: dict = field(default_factory=dict)
+    calls: int = 0              # matching calls seen
+    fired: int = 0              # injections performed
+    _rng: random.Random = None
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        self._rng = random.Random(self.seed)
+
+    def matches(self, ctx: dict) -> bool:
+        return all(str(ctx.get(k)) == str(v) for k, v in self.where.items())
+
+    def should_fire(self) -> bool:
+        """Advance the per-spec call counter; decide.  Caller holds the
+        registry lock, so the counter sequence (and thus the PRNG draw
+        order) is deterministic under a fixed call order."""
+        self.calls += 1
+        if self.times is not None and self.fired >= self.times:
+            return False
+        if self.calls <= self.after:
+            return False
+        if self.every is not None:
+            fire = (self.calls - self.after) % self.every == 0
+        elif self.prob is not None:
+            fire = self._rng.random() < self.prob
+        else:
+            fire = True
+        if fire:
+            self.fired += 1
+        return fire
+
+
+_ARMED = False                  # zero-cost-when-off: the ONLY hot-path read
+_LOCK = threading.Lock()
+_SPECS: list = []
+
+_INJECTED = {}                  # site -> counter handle (lazy per site)
+
+
+def _injected_counter(site: str):
+    c = _INJECTED.get(site)
+    if c is None:
+        c = telemetry.counter("fluxsieve_faults_injected_total",
+                              labels={"site": site},
+                              help="Faults injected, by site.")
+        _INJECTED[site] = c
+    return c
+
+
+def armed() -> bool:
+    return _ARMED
+
+
+def inject(site: str, kind: str = "error", **kw) -> FaultSpec:
+    """Arm one fault spec.  Keyword args split into spec parameters
+    (``every``/``times``/``after``/``prob``/``seed``/``delay``) and
+    context filters (everything else, e.g. ``topic="segment-maintenance"``
+    — matched against the ``fire``/``act`` call's context)."""
+    if site not in SITES:
+        raise ValueError(f"unknown fault site {site!r} (sites: {SITES})")
+    params = {k: kw.pop(k) for k in _SPEC_KEYS if k in kw}
+    spec = FaultSpec(site=site, kind=kind, where=kw, **params)
+    global _ARMED
+    with _LOCK:
+        _SPECS.append(spec)
+        _ARMED = True
+    return spec
+
+
+def reset() -> None:
+    """Disarm everything (tests call this in teardown)."""
+    global _ARMED
+    with _LOCK:
+        _SPECS.clear()
+        _ARMED = False
+
+
+def specs() -> list:
+    with _LOCK:
+        return list(_SPECS)
+
+
+def _select(site: str, ctx: dict) -> FaultSpec:
+    with _LOCK:
+        for spec in _SPECS:
+            if spec.site == site and spec.matches(ctx) and spec.should_fire():
+                return spec
+    return None
+
+
+def _record(spec: FaultSpec, ctx: dict) -> None:
+    _injected_counter(spec.site).inc()
+    telemetry.emit("fault_injected", plane=spec.site.split(".", 1)[0],
+                   site=spec.site, fault=spec.kind, call=spec.calls, **{
+                       k: v for k, v in ctx.items()
+                       if isinstance(v, (str, int, float, bool))})
+
+
+def fire(site: str, **ctx) -> None:
+    """Hot-path injection point for error/crash/stall kinds.  Free when
+    disarmed.  Raises :class:`InjectedFault`/:class:`InjectedCrash` or
+    sleeps ``delay`` seconds (stall); drop/dup/reorder specs never fire
+    here (they are bus actions — see ``act``)."""
+    if not _ARMED:
+        return
+    spec = _select(site, ctx)
+    if spec is None or spec.kind in ("drop", "dup", "reorder"):
+        return
+    _record(spec, ctx)
+    if spec.kind == "stall":
+        time.sleep(spec.delay)
+        return
+    detail = f"injected {spec.kind} at {site} (call {spec.calls})"
+    if spec.kind == "crash":
+        raise InjectedCrash(detail)
+    raise InjectedFault(detail)
+
+
+def act(site: str, **ctx) -> str:
+    """Bus-delivery injection point: returns ``"drop"``/``"dup"``/
+    ``"reorder"`` when an armed spec of that kind fires, else None.
+    error/crash/stall specs at the same site behave as in ``fire``."""
+    if not _ARMED:
+        return None
+    spec = _select(site, ctx)
+    if spec is None:
+        return None
+    _record(spec, ctx)
+    if spec.kind == "stall":
+        time.sleep(spec.delay)
+        return None
+    if spec.kind == "crash":
+        raise InjectedCrash(f"injected crash at {site} (call {spec.calls})")
+    if spec.kind == "error":
+        raise InjectedFault(f"injected error at {site} (call {spec.calls})")
+    return spec.kind
+
+
+# -- env profile ---------------------------------------------------------------
+def load_profile(profile: str) -> list:
+    """Parse and arm a ``FLUXSIEVE_FAULTS`` profile string.
+
+    Grammar: ``site:kind[@key=val[,key=val...]][;...]`` — e.g.::
+
+        match.dispatch:error@every=97;bus.deliver:dup@times=1,topic=segment-maintenance
+
+    Numeric values parse as int/float; everything unrecognized as a spec
+    parameter becomes a context filter."""
+    armed_specs = []
+    for part in profile.split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        head, _, tail = part.partition("@")
+        site, _, kind = head.partition(":")
+        kw = {}
+        for pair in filter(None, tail.split(",")):
+            k, _, v = pair.partition("=")
+            kw[k.strip()] = _coerce(v.strip())
+        armed_specs.append(inject(site.strip(), (kind or "error").strip(),
+                                  **kw))
+    return armed_specs
+
+
+def _coerce(v: str):
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            continue
+    return v
+
+
+if os.environ.get(ENV_VAR):
+    load_profile(os.environ[ENV_VAR])
+
+
+# -- circuit breaker -----------------------------------------------------------
+class CircuitBreaker:
+    """CLOSED -> OPEN -> HALF_OPEN breaker with batch-count-based probing
+    (deterministic under test — no wall-clock cooldowns).
+
+    CLOSED: primary lane allowed; ``failure_threshold`` *consecutive*
+    batch failures (each already past its bounded retries) trip to OPEN.
+    OPEN: every batch takes the fallback lane; every ``probe_interval``-th
+    batch becomes a HALF_OPEN probe through the primary.  A probe success
+    closes the breaker; a probe failure re-opens it.
+
+    State is surfaced on ``fluxsieve_breaker_state{site}`` (0 closed,
+    1 open, 2 half-open) plus ``breaker_trip``/``breaker_probe``/
+    ``breaker_close`` events."""
+
+    CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
+    _STATE_CODE = {CLOSED: 0, OPEN: 1, HALF_OPEN: 2}
+
+    def __init__(self, *, site: str = "match.dispatch",
+                 failure_threshold: int = 3, probe_interval: int = 8):
+        self.site = site
+        self.failure_threshold = int(failure_threshold)
+        self.probe_interval = max(1, int(probe_interval))
+        self.state = self.CLOSED
+        self.trips = 0
+        self._consecutive_failures = 0
+        self._open_calls = 0
+        self._lock = threading.Lock()
+        self._gauge = telemetry.gauge(
+            "fluxsieve_breaker_state", labels={"site": site},
+            help="Circuit-breaker state (0 closed, 1 open, 2 half-open).")
+        self._gauge.set(0)
+
+    def _set_state(self, state: str) -> None:
+        self.state = state
+        self._gauge.set(self._STATE_CODE[state])
+
+    def allow_primary(self) -> bool:
+        """Per batch: may this batch try the primary lane?  In OPEN state
+        every ``probe_interval``-th call transitions to HALF_OPEN and is
+        let through as the probe."""
+        with self._lock:
+            if self.state == self.CLOSED:
+                return True
+            if self.state == self.HALF_OPEN:
+                return False        # one probe in flight; rest use fallback
+            self._open_calls += 1
+            if self._open_calls % self.probe_interval == 0:
+                self._set_state(self.HALF_OPEN)
+                telemetry.emit("breaker_probe", plane="match",
+                               site=self.site, after_calls=self._open_calls)
+                return True
+            return False
+
+    def record_success(self) -> None:
+        with self._lock:
+            self._consecutive_failures = 0
+            if self.state != self.CLOSED:
+                self._set_state(self.CLOSED)
+                self._open_calls = 0
+                telemetry.emit("breaker_close", plane="match",
+                               site=self.site)
+
+    def record_failure(self, error: str = "") -> None:
+        with self._lock:
+            if self.state == self.HALF_OPEN:    # probe failed: back to OPEN
+                self._set_state(self.OPEN)
+                return
+            self._consecutive_failures += 1
+            if (self.state == self.CLOSED
+                    and self._consecutive_failures >= self.failure_threshold):
+                self._set_state(self.OPEN)
+                self._open_calls = 0
+                self.trips += 1
+                telemetry.emit("breaker_trip", plane="match", site=self.site,
+                               consecutive_failures=self._consecutive_failures,
+                               error=error)

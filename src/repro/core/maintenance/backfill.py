@@ -49,11 +49,12 @@ from __future__ import annotations
 
 import os
 import time
+import zipfile
 from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core import telemetry
+from repro.core import faults, telemetry
 from repro.core.automaton import words_for_rules
 from repro.core.control_plane import (ControlBus, MAINTENANCE_ACKS,
                                       SEGMENT_MAINTENANCE)
@@ -600,6 +601,7 @@ class BackfillWorker:
         if seg.path is None:
             self._mem_ckpts[seg.segment_id] = (key, hwm, bm)
             return
+        faults.fire("maintenance.checkpoint", segment=seg.segment_id)
         path = seg.path / CKPT_NAME
         tmp = path.with_name(path.name + ".tmp")
         with open(tmp, "wb") as f:
@@ -623,8 +625,9 @@ class BackfillWorker:
             with np.load(path, allow_pickle=False) as z:
                 if str(z["key"][0]) == key:
                     return int(z["hwm"][0]), np.asarray(z["bm"])
-        except Exception:  # noqa: BLE001 — torn checkpoint == no checkpoint
-            pass
+        except (OSError, ValueError, KeyError, EOFError,
+                zipfile.BadZipFile) as e:   # torn checkpoint == no checkpoint
+            telemetry.suppressed("maintenance.load_checkpoint", e)
         return 0, None
 
     def _clear_checkpoint(self, seg) -> None:
@@ -632,8 +635,8 @@ class BackfillWorker:
         if seg.path is not None:
             try:
                 (seg.path / CKPT_NAME).unlink()
-            except OSError:
-                pass
+            except OSError as e:
+                telemetry.suppressed("maintenance.clear_checkpoint", e)
 
     def _matchers_for(self, delta_rules: tuple, seg) -> dict:
         """Compile (and cache) matchers for a delta sub-ruleset, keeping the

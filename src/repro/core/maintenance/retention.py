@@ -46,7 +46,7 @@ import numpy as np
 
 from repro.core import telemetry
 from repro.core.maintenance.lease import FencedWriteError, LeaseManager
-from repro.core.query.store import RETIRED_MARKER
+from repro.core.query.store import RETENTION_CUTOFF, RETIRED_MARKER  # noqa: F401 — re-exported; the planner reads the same key at plan time
 
 _SEGDIR_RE = re.compile(r"segment-(\d+)$")
 
@@ -66,9 +66,9 @@ _GC_ORPHANS = telemetry.counter(
     "fluxsieve_maintenance_gc_orphans_deleted_total",
     help="Orphaned (never-registered) spill dirs swept by the GC.")
 
-# meta key: rows with timestamp < this value are logically expired and are
-# physically dropped by the Compactor's next rewrite of the segment
-RETENTION_CUTOFF = "retention_cutoff"
+# RETENTION_CUTOFF (imported above, defined next to the segment metadata it
+# stamps): rows with timestamp < cutoff are plan-time invisible immediately
+# and physically dropped by the Compactor's next rewrite of the segment
 
 
 @dataclass(frozen=True)
@@ -280,7 +280,8 @@ class SpillGC:
                         rep.bytes_deleted += size
                         _GC_ORPHANS.inc()
                         _GC_BYTES.inc(size)
-                    except OSError:
+                    except OSError as e:    # raced another GC / busy file
+                        telemetry.suppressed("maintenance.gc_orphan", e)
                         continue
                     continue
                 if sid is not None and sid in pinned:
@@ -297,7 +298,8 @@ class SpillGC:
                     rep.bytes_deleted += size
                     _GC_DIRS.inc()
                     _GC_BYTES.inc(size)
-                except OSError:
+                except OSError as e:
+                    telemetry.suppressed("maintenance.gc_retired", e)
                     continue    # raced another GC / busy file; retry next
         if rep.dirs_deleted or rep.orphans_deleted:
             telemetry.emit("gc_sweep", plane="maintenance",

@@ -169,8 +169,8 @@ class ArrangementLease:
                 telemetry.emit("lease_leak", plane="arrangement",
                                owner=self.owner,
                                key=repr(self.arrangement.key))
-            except Exception:
-                pass
+            except Exception as e:  # noqa: BLE001
+                telemetry.suppressed("arrangement.lease_leak_emit", e)
             warnings.warn(
                 f"ArrangementLease leaked by {self.owner!r} "
                 f"(key={self.arrangement.key!r}) — released at finalization",

@@ -72,6 +72,9 @@ _QUERY_TOTAL = telemetry.counter(
 _QUERY_BYTES = telemetry.counter(
     "fluxsieve_query_bytes_read_total",
     help="Bytes read from spill by queries (cold-path I/O).")
+_QUERY_PARTIAL = telemetry.counter(
+    "fluxsieve_query_partial_total",
+    help="Queries answered partially (>=1 shard failed or timed out).")
 
 
 @dataclass(frozen=True)
@@ -100,9 +103,25 @@ class QueryResult:
     segments_scanned: int = 0
     segments_pruned: int = 0
     segments_fallback: int = 0
+    segments_failed: int = 0    # shard faulted/deadline overrun: unserved
+    segments_total: int = 0
     bytes_read: int = 0
     fallback_ids: tuple = ()    # segment ids served via consistency fallback
+    failed_segment_ids: tuple = ()  # segment ids a degraded query skipped
     path_classes: dict = field(default_factory=dict)  # class -> num segments
+
+    @property
+    def partial(self) -> bool:
+        """True when >=1 segment went unserved: ``count``/``records`` are a
+        lower bound over ``coverage`` of the store, not the full answer."""
+        return self.segments_failed > 0
+
+    @property
+    def coverage(self) -> float:
+        """Fraction of planned segments actually served (1.0 = complete)."""
+        if not self.segments_total:
+            return 1.0
+        return 1.0 - self.segments_failed / self.segments_total
 
 
 class QueryEngine:
@@ -132,7 +151,7 @@ class QueryEngine:
                  scan_backend: str = None, block_n: int = 1024,
                  interpret: bool = True, arrangements: ArrangementStore = None,
                  device_counts="auto", shards: int = 1,
-                 worker_id: str = "query-0"):
+                 worker_id: str = "query-0", shard_deadline_s: float = None):
         self.store = store
         self.mapper = mapper          # QueryMapper (None -> no fluxsieve path)
         self.profiler = profiler
@@ -147,7 +166,8 @@ class QueryEngine:
             arrangements=self.arrangements, device_counts=device_counts)
         self.executor = (ShardedQueryExecutor(self.plan_executor,
                                               shards=shards,
-                                              worker_id=worker_id)
+                                              worker_id=worker_id,
+                                              deadline_s=shard_deadline_s)
                          if shards > 1 else self.plan_executor)
 
     def close(self) -> None:
@@ -195,15 +215,17 @@ class QueryEngine:
 
     # -- execution ---------------------------------------------------------
     def _run(self, plan: PhysicalPlan, cache: bool) -> QueryResult:
-        res = QueryResult(count=0)
+        res = QueryResult(count=0, segments_total=len(plan.tasks))
         per_seg = self.executor.execute(plan, self.planner, cache=cache)
         matches = []   # (segment, ids) for copy mode
         for task, (ids, stats) in zip(plan.tasks, per_seg):
             res.segments_scanned += stats.scanned
             res.segments_pruned += stats.pruned
             res.segments_fallback += stats.fallback
+            res.segments_failed += stats.failed
             res.bytes_read += stats.bytes_read
             res.fallback_ids += stats.fallback_ids
+            res.failed_segment_ids += stats.failed_ids
             if stats.path_class:
                 res.path_classes[stats.path_class] = \
                     res.path_classes.get(stats.path_class, 0) + 1
@@ -212,11 +234,29 @@ class QueryEngine:
             if isinstance(ids, (int, np.integer)):   # metadata-only count
                 res.count += int(ids)
                 continue
+            if task.cutoff is not None and len(ids):
+                # retention straddler: expired rows are plan-time invisible
+                # long before compaction physically drops them.  ONE central
+                # filter — every physical class funnels its ids through here,
+                # so no per-path filter can tear
+                seg = task.seg
+                in_mem = "timestamp" in seg._columns
+                ts = np.asarray(seg.column_rows("timestamp", ids,
+                                                cache=cache))
+                if not in_mem:
+                    res.bytes_read += ts.nbytes
+                ids = ids[ts >= task.cutoff]
             res.count += len(ids)
             if plan.query.mode == "copy" and len(ids):
                 matches.append((task.seg, ids))
         if plan.query.mode == "copy":
             res.records = self._materialize(matches, cache, res)
+        if res.segments_failed:
+            _QUERY_PARTIAL.inc()
+            telemetry.emit("query_partial", plane="query",
+                           failed=res.segments_failed,
+                           total=res.segments_total,
+                           segments=[int(s) for s in res.failed_segment_ids])
         return res
 
     def _materialize(self, matches, cache, res) -> RecordBatch:

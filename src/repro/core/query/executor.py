@@ -44,11 +44,13 @@ benchmarks.
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core import telemetry
+from repro.core import faults, telemetry
+from repro.core.faults import InjectedCrash
 from repro.core.stream_processor import ENRICH_COLUMN
 from repro.core.query.arrangement import ArrangementItem, ArrangementStore
 from repro.core.query.planner import (BITMAP, FALLBACK, FULL_SCAN,
@@ -91,6 +93,16 @@ def substring_scan(data: np.ndarray, term: str) -> np.ndarray:
     return acc.any(axis=1)
 
 
+# executor-side outcome (not a planner class): the shard serving this
+# segment faulted or overran its deadline — the engine reports a partial
+# result with per-segment coverage accounting instead of failing the query
+FAILED = "failed"
+
+_SHARDS_FAILED = telemetry.counter(
+    "fluxsieve_query_shards_failed_total",
+    help="Query shards that faulted or overran the per-shard deadline.")
+
+
 @dataclass
 class TaskStats:
     """Per-segment counters, merged into the QueryResult by the engine."""
@@ -100,6 +112,8 @@ class TaskStats:
     bytes_read: int = 0
     fallback_ids: tuple = ()
     path_class: str = ""
+    failed: int = 0             # shard faulted/timed out; segment unserved
+    failed_ids: tuple = ()
 
 
 class PlanExecutor:
@@ -207,7 +221,11 @@ class PlanExecutor:
             arr = lease.arrangement
             bits = self._device_bits(plan.flux.rule_ids, bits_np)
             copy_mode = plan.query.mode == "copy"
-            with_counts = not copy_mode and self._use_device_counts()
+            # retention straddlers need row ids (the engine filters them by
+            # timestamp), so device-side count reduction is off for them
+            any_cutoff = any(t.cutoff is not None for t in tasks)
+            with_counts = (not copy_mode and not any_cutoff
+                           and self._use_device_counts())
             with telemetry.span("query/stacked_dispatch", cat="query",
                                 segments=len(tasks), owner=owner):
                 match_dev, counts_dev = bitmap_query_words(
@@ -235,7 +253,7 @@ class PlanExecutor:
                 st.scanned += 1
                 if match is None:
                     ids = int(counts[slot])
-                elif copy_mode:
+                elif copy_mode or t.cutoff is not None:
                     ids = np.flatnonzero(match[off:off + n]).astype(np.int32)
                 else:
                     ids = int(np.count_nonzero(match[off:off + n]))
@@ -352,7 +370,9 @@ class PlanExecutor:
                 stats.fallback_ids += (t.seg.segment_id,)
                 return self._full_scan(query, t.seg, cache, stats), stats
             ids = self._enriched(plan, t, cache, stats)
-            if t.seg.meta is t.meta:
+            # non-flux plans only reach here via retention-expired PRUNED
+            # tasks, which read nothing — no snapshot to invalidate
+            if t.seg.meta is t.meta or plan.flux is None:
                 return ids, stats
             t = planner.classify(t.seg, query, plan.flux, cache)
         stats = TaskStats(path_class=FALLBACK, fallback=1,
@@ -471,15 +491,22 @@ class ShardedQueryExecutor:
 
     Worker identity reuses the maintenance plane's scheme
     (``{worker_id}/shard-{i}``): arrangement leases are attributed per
-    shard, so a leak or a pinned epoch names the worker that owes it."""
+    shard, so a leak or a pinned epoch names the worker that owes it.
+
+    ``deadline_s`` bounds the whole query's shard joins: a shard that
+    faults or has not produced its results by the deadline is marked
+    FAILED — its segments return ``(None, TaskStats(failed=1, ...))``
+    markers and the engine degrades to a *partial* result with coverage
+    accounting, instead of one slow or broken shard wedging the query."""
 
     def __init__(self, executor: PlanExecutor, *, shards: int = 4,
-                 worker_id: str = "query-0"):
+                 worker_id: str = "query-0", deadline_s: float = None):
         if shards < 1:
             raise ValueError(f"shards must be >= 1, got {shards}")
         self.executor = executor
         self.shards = shards
         self.worker_id = worker_id
+        self.deadline_s = deadline_s
         self.worker_idents = tuple(f"{worker_id}/shard-{i}"
                                    for i in range(shards))
         from concurrent.futures import ThreadPoolExecutor
@@ -508,11 +535,13 @@ class ShardedQueryExecutor:
                 owner: str = None) -> list:
         tasks = plan.tasks
         shard_idx = plan.shard_tasks(self.shards)
-        if len(shard_idx) <= 1:
+        if len(shard_idx) <= 1 and self.deadline_s is None:
             return self.executor.execute(plan, planner, cache=cache,
                                          owner=owner or self.worker_idents[0])
 
         def run_shard(k, idx):
+            faults.fire("query.shard", shard=k,
+                        worker=self.worker_idents[k % self.shards])
             sub = plan.subplan(idx)
             return self.executor.execute(
                 sub, planner, cache=cache,
@@ -521,7 +550,30 @@ class ShardedQueryExecutor:
         futures = [self._pool.submit(run_shard, k, idx)
                    for k, idx in enumerate(shard_idx)]
         results = [None] * len(tasks)
-        for idx, fut in zip(shard_idx, futures):
-            for i, r in zip(idx, fut.result()):
+        deadline = (time.monotonic() + self.deadline_s
+                    if self.deadline_s is not None else None)
+        for k, (idx, fut) in enumerate(zip(shard_idx, futures)):
+            try:
+                if deadline is None:
+                    shard_results = fut.result()
+                else:
+                    shard_results = fut.result(
+                        timeout=max(0.0, deadline - time.monotonic()))
+            except InjectedCrash:
+                raise           # a simulated kill is never a partial result
+            except Exception as e:  # noqa: BLE001 — degrade to partial
+                # includes futures.TimeoutError (deadline overrun); the
+                # overrunning worker thread finishes in the background —
+                # only this query stops waiting for it
+                _SHARDS_FAILED.inc()
+                telemetry.emit("shard_failed", plane="query", shard=k,
+                               segments=len(idx),
+                               error=f"{type(e).__name__}: {e}")
+                for i in idx:
+                    results[i] = (None, TaskStats(
+                        path_class=FAILED, failed=1,
+                        failed_ids=(tasks[i].seg.segment_id,)))
+                continue
+            for i, r in zip(idx, shard_results):
                 results[i] = r
         return results

@@ -30,6 +30,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core.query.store import RETENTION_CUTOFF
+
 # physical path classes
 PRUNED = "pruned"
 META_COUNT = "meta_count"
@@ -55,6 +57,9 @@ class SegmentTask:
     path_class: str
     count: int = None           # META_COUNT: precomputed match count
     postings: tuple = None      # POSTINGS: one int32 id array per rule
+    cutoff: int = None          # retention straddler: rows with
+                                # timestamp < cutoff are logically expired
+                                # (engine filters returned ids centrally)
 
 
 @dataclass
@@ -132,19 +137,45 @@ class QueryPlanner:
             if chosen == "fluxsieve":
                 plan.tasks.append(self.classify(seg, query, flux, cache))
             else:
-                cls = TEXT_INDEX if chosen == "text_index" else FULL_SCAN
-                plan.tasks.append(SegmentTask(seg=seg, meta=seg.meta,
-                                              path_class=cls))
+                meta = seg.meta
+                expired, cutoff = self._expiry(meta)
+                cls = (PRUNED if expired
+                       else TEXT_INDEX if chosen == "text_index"
+                       else FULL_SCAN)
+                plan.tasks.append(SegmentTask(seg=seg, meta=meta,
+                                              path_class=cls, cutoff=cutoff))
         return plan
+
+    @staticmethod
+    def _expiry(meta: dict) -> tuple:
+        """Retention visibility at plan time: a segment the retention plane
+        stamped with ``retention_cutoff`` is awaiting physical compaction,
+        but its expired rows must already be invisible.  ->
+        ``(fully_expired, cutoff)`` — fully expired segments (every row
+        below the cutoff) classify as PRUNED with zero I/O; straddlers
+        carry the cutoff so the engine filters returned ids centrally
+        (and the planner refuses metadata shortcuts that would count
+        expired rows)."""
+        cutoff = meta.get(RETENTION_CUTOFF)
+        if cutoff is None:
+            return False, None
+        ts_max = meta.get("ts_max")
+        return (ts_max is not None and ts_max < cutoff), int(cutoff)
 
     def classify(self, seg, query, flux, cache: bool = True) -> SegmentTask:
         """Classify ONE segment for the fluxsieve path against a single
         ``seg.meta`` snapshot (also the executor's re-plan entry after a
         mid-query maintenance swap invalidates a task)."""
         meta = seg.meta
+        # retention: fully expired segments prune outright; straddlers
+        # carry the cutoff through every class below
+        expired, cutoff = self._expiry(meta)
+        if expired:
+            return SegmentTask(seg=seg, meta=meta, path_class=PRUNED)
         # consistency: records ingested before a rule existed -> full scan
         if not flux.covers_segment(seg, meta):
-            return SegmentTask(seg=seg, meta=meta, path_class=FALLBACK)
+            return SegmentTask(seg=seg, meta=meta, path_class=FALLBACK,
+                               cutoff=cutoff)
         # zone-map pruning: segment-level OR of bitmaps lacks a needed bit
         zone = meta.get("rule_bitmap_any")
         if zone is not None:
@@ -155,8 +186,10 @@ class QueryPlanner:
                 k = min(len(zone), len(mask))
                 if not (zone[:k] & mask[:k]).any():
                     return SegmentTask(seg=seg, meta=meta, path_class=PRUNED)
-        # single-rule count: answered from per-segment metadata, zero I/O
-        if query.mode == "count" and len(flux.rule_ids) == 1:
+        # single-rule count: answered from per-segment metadata, zero I/O —
+        # but not on straddlers: the precomputed count includes expired rows
+        if query.mode == "count" and len(flux.rule_ids) == 1 \
+                and cutoff is None:
             c = seg.rule_count(flux.rule_ids[0], meta)
             if c is not None:
                 return SegmentTask(seg=seg, meta=meta, path_class=META_COUNT,
@@ -166,5 +199,6 @@ class QueryPlanner:
                     for rid in flux.rule_ids]
         if all(p is not None for p in postings):
             return SegmentTask(seg=seg, meta=meta, path_class=POSTINGS,
-                               postings=tuple(postings))
-        return SegmentTask(seg=seg, meta=meta, path_class=BITMAP)
+                               postings=tuple(postings), cutoff=cutoff)
+        return SegmentTask(seg=seg, meta=meta, path_class=BITMAP,
+                           cutoff=cutoff)

@@ -45,7 +45,7 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core import telemetry
+from repro.core import faults, telemetry
 from repro.core.records import RecordBatch, decode_texts
 from repro.core.stream_processor import ENGINE_VERSION_COLUMN, ENRICH_COLUMN
 
@@ -73,6 +73,16 @@ RETIRED_MARKER = "RETIRED"
 
 # root manifest: the authoritative valid-segment set + fencing-epoch registry
 MANIFEST_NAME = "manifest.json"
+
+# the ingest WAL's home under the store root (owned by data/pipeline, named
+# here so load() can recognize a WAL-born store without a circular import)
+INGEST_WAL_DIRNAME = "ingest-wal"
+
+# meta key stamped by the retention plane (maintenance.retention) on
+# segments straddling the TTL horizon: rows with timestamp < this value are
+# logically expired.  The planner filters them at plan time (immediate
+# query invisibility); the Compactor's next rewrite drops them physically.
+RETENTION_CUTOFF = "retention_cutoff"
 
 
 def tokenize(text: str) -> list:
@@ -111,7 +121,8 @@ class Manifest:
         self.root = Path(root)
         self.path = self.root / MANIFEST_NAME
         self._lock = threading.Lock()
-        self._state = {"segments": {}, "next_id": 0, "fences": {}}
+        self._state = {"segments": {}, "next_id": 0, "fences": {},
+                       "sealed_rows": 0}
 
     @staticmethod
     def read(root) -> dict:
@@ -127,15 +138,20 @@ class Manifest:
         with self._lock:
             self._state = {"segments": dict(state.get("segments", {})),
                            "next_id": int(state.get("next_id", 0)),
-                           "fences": dict(state.get("fences", {}))}
+                           "fences": dict(state.get("fences", {})),
+                           "sealed_rows": int(state.get("sealed_rows", 0))}
 
     def commit(self, *, add: dict = None, remove=None, next_id: int = None,
-               fences: dict = None) -> None:
+               fences: dict = None, sealed_rows: int = None) -> None:
         """Atomically apply a membership/epoch delta and persist.
 
         ``add``: {segment_id: dirname}; ``remove``: segment ids;
         ``next_id``: id-allocator high-water mark (monotonic);
-        ``fences``: {segment_id: epoch} (monotonic per segment)."""
+        ``fences``: {segment_id: epoch} (monotonic per segment);
+        ``sealed_rows``: ingest durability watermark — total rows the
+        ingest path has sealed into registered segments (monotonic; the
+        WAL truncates, and crash recovery dedups, against it)."""
+        faults.fire("store.manifest_commit", root=str(self.root))
         with self._lock:
             seg = self._state["segments"]
             if add:
@@ -151,6 +167,9 @@ class Manifest:
                 for sid, epoch in fences.items():
                     key = str(int(sid))
                     f[key] = max(int(f.get(key, 0)), int(epoch))
+            if sealed_rows is not None:
+                self._state["sealed_rows"] = max(
+                    self._state.get("sealed_rows", 0), int(sealed_rows))
             _atomic_write_text(self.path,
                                json.dumps(self._state, sort_keys=True))
         _COMMITS.inc()
@@ -178,6 +197,12 @@ class Manifest:
         with self._lock:
             return {int(s): int(e)
                     for s, e in self._state["fences"].items()}
+
+    def sealed_rows(self) -> int:
+        """Ingest durability watermark: rows sealed into registered
+        segments (crash recovery replays WAL entries past it)."""
+        with self._lock:
+            return int(self._state.get("sealed_rows", 0))
 
 
 def build_text_index(data: np.ndarray) -> dict:
@@ -442,6 +467,7 @@ class Segment:
     # -- lifecycle ---------------------------------------------------------
     def spill(self, root: Path) -> None:
         """Write one .npy per column (+ .fts.npz per indexed field)."""
+        faults.fire("store.spill", segment=self.segment_id)
         d = Path(root) / f"segment-{self.segment_id:06d}"
         d.mkdir(parents=True, exist_ok=True)
         for name, arr in self._columns.items():
@@ -548,6 +574,7 @@ class SegmentStore:
         self._active: list = []     # pending RecordBatches
         self._active_count = 0
         self._next_id = 0           # monotonic (compaction retires ids)
+        self._sealed_rows = 0       # ingest durability watermark (see WAL)
         self._lock = threading.RLock()
         # crash-safe root manifest (spilled stores only): authoritative
         # valid-segment set + durable fencing epochs.  A FRESH store over a
@@ -614,10 +641,15 @@ class SegmentStore:
         head, tail = merged.slice(0, n), merged.slice(n, len(merged))
         self._active = [tail] if len(tail) else []
         self._active_count = len(tail)
-        self.segments.append(self._make_segment(head))
+        # the watermark advances with the SAME manifest commit that
+        # registers the sealed segment (one atomic write): a crash can
+        # never observe a registered segment whose rows are not counted,
+        # or a watermark covering rows with no registered segment
+        self._sealed_rows += n
+        self.segments.append(self._make_segment(head, ingest_seal=True))
 
-    def _make_segment(self, batch: RecordBatch,
-                      register: bool = True) -> Segment:
+    def _make_segment(self, batch: RecordBatch, register: bool = True,
+                      ingest_seal: bool = False) -> Segment:
         sid = self._next_id
         self._next_id += 1
         meta = {"columns": {k: (str(v.dtype), list(v.shape))
@@ -658,8 +690,9 @@ class SegmentStore:
             # unregistered dir that a manifest-guarded load simply ignores
             seg.spill(self.root)
             if register:
-                self.manifest.commit(add={sid: seg.path.name},
-                                     next_id=self._next_id)
+                self.manifest.commit(
+                    add={sid: seg.path.name}, next_id=self._next_id,
+                    sealed_rows=self._sealed_rows if ingest_seal else None)
         return seg
 
     # -- maintenance -------------------------------------------------------
@@ -768,7 +801,8 @@ class SegmentStore:
         try:
             (seg.path / RETIRED_MARKER).touch()
             return True
-        except OSError:
+        except OSError as e:
+            telemetry.suppressed("store.retire_spill", e)
             return False
 
     # -- bookkeeping ---------------------------------------------------------
@@ -776,6 +810,28 @@ class SegmentStore:
     def num_records(self) -> int:
         with self._lock:
             return sum(s.num_records for s in self.segments) + self._active_count
+
+    @property
+    def sealed_rows(self) -> int:
+        """Total rows the ingest path has sealed into registered segments
+        — the durability watermark the ingest WAL truncates against.
+        Monotonic across the store's lifetime (compaction/retention change
+        membership, never this counter)."""
+        with self._lock:
+            return self._sealed_rows
+
+    def account_skipped_rows(self, n: int) -> None:
+        """Advance the ingest durability watermark past ``n`` source rows
+        that will never be appended (the pipeline quarantined them after
+        both match lanes failed).  Seals any pending rows first so the
+        watermark stays prefix-accurate: W always means source rows
+        [0, W) are durable — in a registered segment or in quarantine."""
+        with self._lock:
+            if self._active_count:
+                self._seal_locked(self._active_count)
+            self._sealed_rows += int(n)
+            if self.manifest is not None:
+                self.manifest.commit(sealed_rows=self._sealed_rows)
 
     def drop_caches(self) -> None:
         """Cold-run control: all sealed segments forget in-memory data."""
@@ -786,7 +842,9 @@ class SegmentStore:
         return sum(s.nbytes(names) for s in self.segments)
 
     @staticmethod
-    def load(root) -> "SegmentStore":
+    def load(root, *, segment_size: int = 100_000,
+             index_fields: tuple = (), version_rules: dict = None
+             ) -> "SegmentStore":
         """Reopen a spilled store.  When a root manifest exists it is
         authoritative: exactly the manifest's valid-segment set is loaded
         (closing the compaction double-count window — a crash between
@@ -794,8 +852,17 @@ class SegmentStore:
         on disk, but only one side is ever in the manifest).  Pre-manifest
         stores fall back to directory scanning with RETIRED-tombstone
         skipping, and are upgraded: the adopted set is committed as their
-        first manifest."""
-        store = SegmentStore(root=root)
+        first manifest.
+
+        ``segment_size``/``index_fields``/``version_rules`` configure the
+        reopened store's FUTURE seals (persisted segments carry their
+        own); an ingest restart must pass the same settings it ingests
+        with — constructing a fresh ``SegmentStore`` over a populated
+        root instead would start an empty manifest whose first commit
+        disowns every already-committed segment."""
+        store = SegmentStore(root=root, segment_size=segment_size,
+                             index_fields=index_fields,
+                             version_rules=version_rules)
         persisted = Manifest.read(root)
         if persisted is not None:
             store.manifest.adopt(persisted)
@@ -816,6 +883,14 @@ class SegmentStore:
                         f"manifest lists {d.name} but the spill dir is "
                         f"missing; its records are LOST from this load",
                         RuntimeWarning, stacklevel=2)
+        elif (Path(root) / INGEST_WAL_DIRNAME).exists():
+            # a WAL dir proves this store was born under manifest
+            # discipline: no manifest on disk means the process died before
+            # the FIRST commit, so any spilled segment dir is an
+            # uncommitted orphan whose rows the journal still holds.
+            # Adopting it would double-ingest on replay — recovery re-seals
+            # (and overwrites) it from the WAL instead.
+            dirs = []
         else:
             dirs = [d for d in sorted(Path(root).glob("segment-*"))
                     if not (d / RETIRED_MARKER).exists()]
@@ -826,6 +901,7 @@ class SegmentStore:
         store._next_id = max(
             store.manifest.next_id(),
             1 + max((s.segment_id for s in store.segments), default=-1))
+        store._sealed_rows = store.manifest.sealed_rows()
         if persisted is None and store.segments:
             store.manifest.commit(
                 add={s.segment_id: s.path.name for s in store.segments},

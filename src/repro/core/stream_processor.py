@@ -33,9 +33,10 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core import enrichment
+from repro.core import enrichment, faults, telemetry
 from repro.core.control_plane import (ControlBus, MATCHER_ACKS,
                                       MATCHER_UPDATES)
+from repro.core.faults import CircuitBreaker, InjectedCrash
 from repro.core.matcher import (FUSED_BACKENDS, EngineBundle, FusedMatcher,
                                 MatchResult, build_matchers, match_pairs)
 from repro.core.object_store import ObjectRef, ObjectStore
@@ -45,6 +46,27 @@ from repro.core.records import RecordBatch
 ENRICH_COLUMN = "rule_bitmap"
 ENGINE_VERSION_COLUMN = "engine_version_id"
 
+# the oracle lane the breaker degrades to: same compiled tables, jnp
+# reference execution — bitmaps identical to the primary by construction
+FALLBACK_BACKEND = "dfa_ref"
+
+_DISPATCH_ERRORS = telemetry.counter(
+    "fluxsieve_match_dispatch_errors_total",
+    help="Failed primary-lane dispatch attempts (each may be retried).")
+_FALLBACK_BATCHES = telemetry.counter(
+    "fluxsieve_match_fallback_batches_total",
+    help="Batches matched on the degraded oracle lane (breaker open or "
+         "primary retries exhausted).")
+_POLL_HIST = telemetry.histogram(
+    "fluxsieve_match_poll_seconds",
+    help="Control-topology bus-poll latency (poll_updates, per call).")
+
+
+class BatchMatchError(RuntimeError):
+    """A batch failed on the primary AND the fallback match lanes — it
+    cannot be enriched.  The ingest pipeline quarantines such batches to a
+    dead-letter spill dir instead of dropping them (or crashing)."""
+
 
 @dataclass
 class _Active:
@@ -53,6 +75,7 @@ class _Active:
     fused: object           # FusedMatcher, or None for host-path backends
     version_id: int         # monotonically increasing local id
     activated_at: float
+    fallback: object = None  # lazily built FALLBACK_BACKEND FusedMatcher
 
 
 @dataclass
@@ -86,7 +109,9 @@ class StreamProcessor:
                  mode: str = "enrich", backend: str = "dfa_ref",
                  bus: ControlBus = None, store: ObjectStore = None,
                  block_n: int = 256, interpret: bool = True,
-                 confirm_backend: str = "ref"):
+                 confirm_backend: str = "ref", retry_limit: int = 2,
+                 retry_backoff_s: float = 0.002,
+                 breaker: CircuitBreaker = None):
         if mode not in ("enrich", "filter"):
             raise ValueError(mode)
         self.instance_id = instance_id
@@ -97,6 +122,12 @@ class StreamProcessor:
         self.confirm_backend = confirm_backend   # dfa_selective pass 2
         self.bus = bus
         self.store = store
+        # graceful degradation: bounded retry-with-backoff around the
+        # primary dispatch, then a circuit breaker that routes whole
+        # batches to the FALLBACK_BACKEND oracle lane (see _dispatch)
+        self.retry_limit = int(retry_limit)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.breaker = breaker or CircuitBreaker(site="match.dispatch")
         self.stats = ProcessorStats()
         self._lock = threading.RLock()
         self._pending: dict = {}          # version -> ObjectRef (fetch queued)
@@ -120,20 +151,74 @@ class StreamProcessor:
         active = self._active                      # single read: swap-safe
         t0 = time.perf_counter()
         n = len(batch)
-        if active.fused is not None:
-            result = active.fused.match_batch(batch.columns,
-                                              batch.text_fields, n)
-        else:
-            result = self._match_per_field(active, batch)
+        result = self._dispatch(active, batch, n)
         with self._lock:
             self.stats.match_seconds += time.perf_counter() - t0
         return PendingBatch(batch=batch, result=result,
                             version_id=active.version_id, n=n)
 
+    def _dispatch(self, active: _Active, batch: RecordBatch, n: int):
+        """Primary-lane dispatch behind the degradation machinery: bounded
+        retry-with-backoff, then the circuit breaker routes the batch to
+        the oracle lane (same bundle, FALLBACK_BACKEND execution — bitmaps
+        identical by construction).  While OPEN, every batch goes straight
+        to the fallback and periodic HALF_OPEN probes test the primary.
+        A batch that fails on BOTH lanes raises ``BatchMatchError`` — the
+        pipeline quarantines it, ingest keeps flowing."""
+        def primary():
+            faults.fire("match.dispatch", backend=self.backend,
+                        instance=self.instance_id)
+            if active.fused is not None:
+                return active.fused.match_batch(batch.columns,
+                                                batch.text_fields, n)
+            return self._match_per_field(active, batch)
+
+        if self.breaker.allow_primary():
+            err = None
+            for attempt in range(self.retry_limit + 1):
+                try:
+                    result = primary()
+                    self.breaker.record_success()
+                    return result
+                except InjectedCrash:
+                    raise               # a simulated kill is not retryable
+                except Exception as e:  # noqa: BLE001 — degrade, not drop
+                    err = e
+                    _DISPATCH_ERRORS.inc()
+                    if attempt < self.retry_limit and self.retry_backoff_s:
+                        time.sleep(self.retry_backoff_s * (2 ** attempt))
+            self.breaker.record_failure(
+                error=f"{type(err).__name__}: {err}")
+        try:
+            faults.fire("match.fallback", backend=FALLBACK_BACKEND,
+                        instance=self.instance_id)
+            result = self._fallback_for(active).match_batch(
+                batch.columns, batch.text_fields, n)
+            _FALLBACK_BATCHES.inc()
+            return result
+        except InjectedCrash:
+            raise
+        except Exception as e:  # noqa: BLE001 — deterministic failure
+            raise BatchMatchError(
+                f"batch failed on primary ({self.backend}) and fallback "
+                f"({FALLBACK_BACKEND}) lanes: {type(e).__name__}: {e}") from e
+
+    def _fallback_for(self, active: _Active) -> FusedMatcher:
+        """The degraded lane's matcher, built lazily per active version
+        (off the happy path — most processes never pay for it)."""
+        if active.fallback is None:
+            with self._swap_lock:
+                if active.fallback is None:
+                    active.fallback = FusedMatcher(
+                        active.bundle, backend=FALLBACK_BACKEND,
+                        block_n=self.block_n, interpret=self.interpret)
+        return active.fallback
+
     def finalize(self, pending: PendingBatch) -> RecordBatch:
         """Materialize a pending batch: single D2H transfer, attach the
         enrichment columns, apply filter mode, account stats."""
         t0 = time.perf_counter()
+        faults.fire("match.d2h", version=pending.version_id)
         bm, matched = pending.result.to_host()
         out = pending.batch.with_column(ENRICH_COLUMN, bm)
         out = out.with_column(
@@ -176,6 +261,15 @@ class StreamProcessor:
         if self.bus is None or self.store is None:
             return 0
         group = f"matcher/{self.instance_id}"
+        swaps = 0
+        t0 = time.perf_counter()
+        with telemetry.span("match/poll_updates", cat="control",
+                            instance=self.instance_id):
+            swaps = self._poll_updates(group)
+        _POLL_HIST.observe(time.perf_counter() - t0)
+        return swaps
+
+    def _poll_updates(self, group: str) -> int:
         swaps = 0
         for msg in self.bus.poll(MATCHER_UPDATES, group):
             ok = False

@@ -33,9 +33,25 @@ def reset() -> None:
     events.reset()
 
 
+def suppressed(site: str, err: BaseException) -> None:
+    """Account an intentionally swallowed error.  Every ``except ...: pass``
+    style handler routes through here so suppressed failures stay
+    observable: bumps ``fluxsieve_errors_suppressed_total{site}`` and emits
+    an ``error_suppressed`` event.  Never raises (safe from ``__del__`` at
+    interpreter teardown, when the registry may already be torn down)."""
+    try:
+        metrics.counter("fluxsieve_errors_suppressed_total",
+                        labels={"site": site},
+                        help="Errors intentionally swallowed, by site.").inc()
+        emit("error_suppressed", plane=site.split(".", 1)[0], site=site,
+             error=f"{type(err).__name__}: {err}")
+    except Exception:       # noqa: BLE001 — observability must not throw
+        pass
+
+
 __all__ = [
     "counter", "gauge", "histogram", "enabled", "set_enabled",
-    "span", "export_chrome_trace", "emit",
+    "span", "export_chrome_trace", "emit", "suppressed",
     "prometheus_text", "snapshot", "write_dump", "reset",
     "metrics", "trace", "events", "export",
 ]

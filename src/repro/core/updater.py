@@ -20,6 +20,8 @@ import threading
 import time
 from dataclasses import dataclass, field
 
+from repro.core import telemetry
+from repro.core.automaton import STATE_BUCKETS
 from repro.core.control_plane import (ControlBus, MAINTENANCE_ACKS,
                                       MATCHER_ACKS, MATCHER_UPDATES,
                                       SEGMENT_MAINTENANCE)
@@ -29,6 +31,16 @@ from repro.core.patterns import RuleSet
 
 ENGINE_KEY = "engines/matcher"
 
+_COMPILE_HIST = telemetry.histogram(
+    "fluxsieve_updater_compile_seconds",
+    help="Engine compilation latency (off the data path).")
+_PUBLISH_HIST = telemetry.histogram(
+    "fluxsieve_updater_publish_seconds",
+    help="Artifact upload + control-bus notification latency.")
+_RULES_REJECTED = telemetry.counter(
+    "fluxsieve_updater_rules_rejected_total",
+    help="Rules nacked by submit-time validation (rest of the set sails).")
+
 
 @dataclass
 class UpdateHandle:
@@ -37,6 +49,7 @@ class UpdateHandle:
     ref: ObjectRef = None
     checksum: str = ""
     error: str = ""
+    rejected: dict = field(default_factory=dict)  # rule name -> nack reason
     _done: threading.Event = field(default_factory=threading.Event)
 
     def wait(self, timeout: float = None) -> bool:
@@ -82,34 +95,86 @@ class MatcherUpdater:
             return self._current.version_hash()
 
     # -- steps 1-4 -------------------------------------------------------
+    @staticmethod
+    def _validate_rule(rule) -> str:
+        """Submit-time sanity check for ONE rule; -> nack reason or None.
+        A rule can pass construction (<=4096 literals, each <=256 bytes)
+        yet blow past the largest DFA state bucket at compile time — the
+        trie upper bound (sum of literal lengths) catches it here, before
+        it can fail the compile for every OTHER rule in the set."""
+        try:
+            lits = rule.literals()
+        except Exception as e:  # noqa: BLE001 — any expand failure is a nack
+            return f"{type(e).__name__}: {e}"
+        states = 1 + sum(len(lit) for lit in lits)
+        if states > STATE_BUCKETS[-1]:
+            return (f"state estimate {states} exceeds the largest DFA "
+                    f"bucket ({STATE_BUCKETS[-1]})")
+        return None
+
     def submit(self, ruleset: RuleSet, *, asynchronous: bool = True) -> UpdateHandle:
-        """Compute delta, compile, upload, notify.  Compilation runs in a
-        worker thread by default — 'performed asynchronously and does not
-        block ongoing stream processing' (paper §3.4 step 2)."""
+        """Compute delta, validate, compile, upload, notify.  Compilation
+        runs in a worker thread by default — 'performed asynchronously and
+        does not block ongoing stream processing' (paper §3.4 step 2).
+
+        Validation nacks *individual* bad rules (``handle.rejected``, one
+        ``rule_rejected`` event each) and compiles the rest: one
+        un-compilable rule must not take down an otherwise-good rollout."""
+        rejected = {}
+        with self._lock:
+            known = {r.rule_id: r for r in self._current.rules}
+        for rule in ruleset.rules:
+            if known.get(rule.rule_id) == rule:
+                continue                # unchanged: compiled in a past rollout
+            err = self._validate_rule(rule)
+            if err is not None:
+                rejected[rule.name] = err
+                _RULES_REJECTED.inc()
+                telemetry.emit("rule_rejected", plane="control",
+                               rule=rule.name, rule_id=rule.rule_id,
+                               error=err)
+        if rejected:
+            bad_names = set(rejected)
+            ruleset = ruleset.without_ids(
+                r.rule_id for r in ruleset.rules if r.name in bad_names)
         with self._lock:
             delta = self._current.diff(ruleset)
-        handle = UpdateHandle(version=ruleset.version_hash(), delta=delta)
+        handle = UpdateHandle(version=ruleset.version_hash(), delta=delta,
+                              rejected=rejected)
         if not (delta["added"] or delta["removed"] or delta["changed"]):
-            handle.error = "no-op: target equals current rule set"
+            handle.error = ("no-op: every submitted change was rejected"
+                            if rejected else
+                            "no-op: target equals current rule set")
             handle._done.set()
             return handle
 
         def work():
             try:
-                bundle = compile_bundle(ruleset, self.fields)
-                ref = self.store.put(ENGINE_KEY, bundle.serialize())
-                checksum = bundle.checksum()
-                notification = {
-                    "engine_version": bundle.version,
-                    "object_ref": ref.to_dict(),
-                    "checksum": checksum,
-                    "num_rules": bundle.num_rules,
-                    "delta": {k: [r.name for r in v] for k, v in delta.items()},
-                }
-                self.bus.publish(MATCHER_UPDATES, notification)
-                # fan out to the maintenance plane: backfill workers
-                # re-enrich historical (sealed) segments off the ingest path
-                self.bus.publish(SEGMENT_MAINTENANCE, notification)
+                t0 = time.perf_counter()
+                with telemetry.span("updater/compile", cat="control",
+                                    version=handle.version,
+                                    rules=ruleset.num_rules):
+                    bundle = compile_bundle(ruleset, self.fields)
+                _COMPILE_HIST.observe(time.perf_counter() - t0)
+                t1 = time.perf_counter()
+                with telemetry.span("updater/publish", cat="control",
+                                    version=bundle.version):
+                    ref = self.store.put(ENGINE_KEY, bundle.serialize())
+                    checksum = bundle.checksum()
+                    notification = {
+                        "engine_version": bundle.version,
+                        "object_ref": ref.to_dict(),
+                        "checksum": checksum,
+                        "num_rules": bundle.num_rules,
+                        "delta": {k: [r.name for r in v]
+                                  for k, v in delta.items()},
+                    }
+                    self.bus.publish(MATCHER_UPDATES, notification)
+                    # fan out to the maintenance plane: backfill workers
+                    # re-enrich historical (sealed) segments off the ingest
+                    # path
+                    self.bus.publish(SEGMENT_MAINTENANCE, notification)
+                _PUBLISH_HIST.observe(time.perf_counter() - t1)
                 with self._lock:
                     self._current = ruleset
                     self._history.append((bundle.version, ref, checksum,

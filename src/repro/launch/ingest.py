@@ -10,6 +10,7 @@ from __future__ import annotations
 import argparse
 import threading
 import time
+from pathlib import Path
 
 import numpy as np
 
@@ -25,7 +26,8 @@ from repro.core.patterns import Rule, RuleSet
 from repro.core.query.engine import Query, QueryEngine
 from repro.core.query.mapper import QueryMapper
 from repro.core.query.profiler import QueryProfiler
-from repro.core.query.store import SegmentStore
+from repro.core.query.store import (INGEST_WAL_DIRNAME, MANIFEST_NAME,
+                                    SegmentStore)
 from repro.core.stream_processor import StreamProcessor
 from repro.core.updater import MatcherUpdater
 from repro.data.generator import LogGenerator, WorkloadSpec
@@ -51,6 +53,11 @@ def main(argv=None) -> int:
     ap.add_argument("--backend", default="dfa_ref",
                     choices=("dfa", "dfa_ref", "shift_or", "parallel"))
     ap.add_argument("--store", default=None, help="spill directory")
+    ap.add_argument("--wal", action="store_true",
+                    help="crash-safe ingest: journal every raw batch to "
+                         "<store>/ingest-wal before dispatch and truncate "
+                         "against the manifest watermark (needs --store; "
+                         "enrich mode only)")
     ap.add_argument("--segment-size", type=int, default=50_000)
     ap.add_argument("--batch-size", type=int, default=4096)
     ap.add_argument("--fields", type=int, default=2)
@@ -112,9 +119,21 @@ def main(argv=None) -> int:
                              initial=ruleset)
     proc = StreamProcessor(bundle, mode=args.mode, backend=args.backend,
                            bus=bus, store=ostore)
-    store = SegmentStore(segment_size=args.segment_size, root=args.store)
-    pipe = IngestPipeline(gen, store, proc)
-    times = pipe.run(batch_size=args.batch_size)
+    if args.wal and args.store is None:
+        ap.error("--wal needs --store (the journal lives next to the "
+                 "spill dirs)")
+    root = Path(args.store) if args.store is not None else None
+    if root is not None and ((root / MANIFEST_NAME).exists()
+                             or (root / INGEST_WAL_DIRNAME).exists()):
+        # restart over a populated root: reopen the committed store (a
+        # fresh SegmentStore here would disown every durable segment on
+        # its first manifest commit)
+        store = SegmentStore.load(root, segment_size=args.segment_size)
+    else:
+        store = SegmentStore(segment_size=args.segment_size, root=args.store)
+    pipe = IngestPipeline(gen, store, proc, wal=args.wal)
+    start = pipe.recover() if args.wal else 0
+    times = pipe.run(batch_size=args.batch_size, start=start)
     print(f"ingested {times.records} records in "
           f"{times.generate_s + times.process_s + times.store_s:.2f}s "
           f"({times.throughput():,.0f} rec/s; "

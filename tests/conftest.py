@@ -1,8 +1,21 @@
+import os
+
 import numpy as np
 import pytest
 
 from repro.core.patterns import Rule, RuleSet
 from repro.core.records import RecordBatch, encode_texts
+
+
+def pytest_sessionfinish(session, exitstatus):
+    """CI chaos leg: FLUXSIEVE_TELEMETRY_DUMP=<dir> makes the suite leave
+    its full telemetry dump (metrics.prom / snapshot.json / trace.json)
+    behind as a build artifact — the record of every injected fault and
+    every recovery action the run actually exercised."""
+    out = os.environ.get("FLUXSIEVE_TELEMETRY_DUMP")
+    if out:
+        from repro.core import telemetry
+        telemetry.write_dump(out)
 
 
 @pytest.fixture

@@ -1,0 +1,209 @@
+"""Fault-injection plane unit tests: spec firing semantics, profile
+parsing, the zero-cost-when-off discipline, and the circuit breaker's
+state machine (core/faults.py)."""
+import os
+import time
+
+import pytest
+
+from repro.core import faults, telemetry
+from repro.core.faults import (CircuitBreaker, FaultSpec, InjectedCrash,
+                               InjectedFault)
+
+
+@pytest.fixture(autouse=True)
+def _fault_isolation():
+    """Each test starts disarmed; afterwards restore any env profile (the
+    CI chaos leg arms FLUXSIEVE_FAULTS for the whole suite)."""
+    faults.reset()
+    yield
+    faults.reset()
+    if os.environ.get(faults.ENV_VAR):
+        faults.load_profile(os.environ[faults.ENV_VAR])
+
+
+# -- registry / spec semantics ------------------------------------------------
+def test_unknown_site_and_kind_rejected():
+    with pytest.raises(ValueError):
+        faults.inject("nonsense.site")
+    with pytest.raises(ValueError):
+        faults.inject("match.dispatch", "meltdown")
+
+
+def test_disarmed_fire_is_noop():
+    assert not faults.armed()
+    faults.fire("match.dispatch")            # nothing armed: returns
+    assert faults.act("bus.deliver") is None
+    faults.inject("match.dispatch", "error")
+    assert faults.armed()
+    faults.reset()
+    assert not faults.armed()
+    faults.fire("match.dispatch")            # disarmed again
+
+
+def test_every_after_times_schedule():
+    spec = faults.inject("ingest.append", "error", after=2, every=3, times=2)
+    fired_at = []
+    for call in range(1, 13):
+        try:
+            faults.fire("ingest.append")
+        except InjectedFault:
+            fired_at.append(call)
+    # skip 2 calls, then every 3rd matching call, capped at 2 fires
+    assert fired_at == [5, 8]
+    assert spec.fired == 2 and spec.calls == 12
+
+
+def test_default_spec_fires_every_call():
+    faults.inject("ingest.append", "error")
+    for _ in range(3):
+        with pytest.raises(InjectedFault):
+            faults.fire("ingest.append")
+
+
+def test_prob_is_seed_deterministic():
+    def sequence():
+        spec = faults.inject("store.spill", "error", prob=0.5, seed=42)
+        out = []
+        for _ in range(64):
+            try:
+                faults.fire("store.spill")
+                out.append(0)
+            except InjectedFault:
+                out.append(1)
+        faults.reset()
+        return out, spec.fired
+
+    a, fired_a = sequence()
+    b, fired_b = sequence()
+    assert a == b
+    assert 0 < fired_a == fired_b < 64
+
+
+def test_where_filter_string_compared():
+    faults.inject("bus.deliver", "drop", topic="segment-maintenance")
+    assert faults.act("bus.deliver", topic="matcher-updates") is None
+    assert faults.act("bus.deliver", topic="segment-maintenance") == "drop"
+    # int context values compare through str()
+    faults.inject("query.shard", "error", shard=1)
+    faults.fire("query.shard", shard=0)      # no match, no raise
+    with pytest.raises(InjectedFault):
+        faults.fire("query.shard", shard=1)
+
+
+def test_crash_escapes_broad_exception_handlers():
+    faults.inject("store.manifest_commit", "crash")
+    with pytest.raises(InjectedCrash):
+        try:
+            faults.fire("store.manifest_commit")
+        except Exception:  # noqa: BLE001 — the point: this must NOT catch
+            pytest.fail("InjectedCrash was swallowed by `except Exception`")
+    assert not issubclass(InjectedCrash, Exception)
+
+
+def test_stall_sleeps_delay():
+    faults.inject("query.shard", "stall", delay=0.05)
+    t0 = time.perf_counter()
+    faults.fire("query.shard")               # returns (no raise)
+    assert time.perf_counter() - t0 >= 0.04
+
+
+def test_act_returns_bus_actions():
+    for kind in ("drop", "dup", "reorder"):
+        faults.inject("bus.deliver", kind, times=1)
+    seen = {faults.act("bus.deliver") for _ in range(3)}
+    assert seen == {"drop", "dup", "reorder"}
+    assert faults.act("bus.deliver") is None          # all specs exhausted
+    # bus kinds never raise out of fire()
+    faults.inject("bus.deliver", "drop")
+    faults.fire("bus.deliver")
+
+
+def test_injection_bumps_counter_and_event():
+    c = telemetry.counter("fluxsieve_faults_injected_total",
+                          labels={"site": "match.d2h"})
+    before = c.value
+    faults.inject("match.d2h", "error", times=1)
+    with pytest.raises(InjectedFault):
+        faults.fire("match.d2h", version=3)
+    assert c.value == before + 1
+    evs = telemetry.events.events(kind="fault_injected")
+    assert any(e["site"] == "match.d2h" and e["fault"] == "error"
+               for e in evs)
+
+
+def test_load_profile_grammar():
+    specs = faults.load_profile(
+        "match.dispatch:error@every=97;"
+        "bus.deliver:dup@times=1,topic=segment-maintenance;"
+        "query.shard:stall@delay=0.25")
+    assert [s.site for s in specs] == ["match.dispatch", "bus.deliver",
+                                      "query.shard"]
+    assert specs[0].kind == "error" and specs[0].every == 97
+    assert specs[1].kind == "dup" and specs[1].times == 1
+    assert specs[1].where == {"topic": "segment-maintenance"}
+    assert specs[2].delay == 0.25
+    assert faults.armed() and len(faults.specs()) == 3
+
+
+def test_load_profile_default_kind_and_blank_parts():
+    (spec,) = faults.load_profile(";ingest.wal_append;")
+    assert spec.site == "ingest.wal_append" and spec.kind == "error"
+
+
+# -- circuit breaker ----------------------------------------------------------
+def test_breaker_trips_on_consecutive_failures_only():
+    br = CircuitBreaker(site="t.consec", failure_threshold=3)
+    for _ in range(5):                        # interleaved successes reset
+        br.record_failure()
+        br.record_failure()
+        br.record_success()
+    assert br.state == br.CLOSED and br.trips == 0
+    for _ in range(3):
+        assert br.allow_primary()
+        br.record_failure()
+    assert br.state == br.OPEN and br.trips == 1
+
+
+def test_breaker_probe_cycle_and_recovery():
+    br = CircuitBreaker(site="t.probe", failure_threshold=1, probe_interval=3)
+    gauge = telemetry.gauge("fluxsieve_breaker_state",
+                            labels={"site": "t.probe"})
+    br.record_failure()
+    assert br.state == br.OPEN and gauge.value == 1
+    # every 3rd open call is the probe
+    assert not br.allow_primary()
+    assert not br.allow_primary()
+    assert br.allow_primary()                 # probe
+    assert br.state == br.HALF_OPEN and gauge.value == 2
+    assert not br.allow_primary()             # one probe in flight at a time
+    br.record_failure()                       # probe failed: back to OPEN
+    assert br.state == br.OPEN and br.trips == 1
+    assert not br.allow_primary()
+    assert not br.allow_primary()
+    assert br.allow_primary()                 # next probe
+    br.record_success()                       # probe succeeded: close
+    assert br.state == br.CLOSED and gauge.value == 0
+    assert br.allow_primary()
+
+
+def test_breaker_emits_lifecycle_events():
+    br = CircuitBreaker(site="t.events", failure_threshold=1,
+                        probe_interval=1)
+    br.record_failure(error="boom")
+    assert br.allow_primary()                 # immediate probe
+    br.record_success()
+    kinds = {e["kind"] for e in telemetry.events.events()
+             if e.get("site") == "t.events"}
+    assert {"breaker_trip", "breaker_probe", "breaker_close"} <= kinds
+
+
+def test_spec_counters_exposed_for_assertions():
+    spec = faults.inject("maintenance.checkpoint", "error", every=2)
+    for _ in range(4):
+        try:
+            faults.fire("maintenance.checkpoint")
+        except InjectedFault:
+            pass
+    assert isinstance(spec, FaultSpec)
+    assert spec.calls == 4 and spec.fired == 2

@@ -1,0 +1,397 @@
+"""Chaos suite: crash-safe ingest (WAL replay, exactly-once), graceful
+match-path degradation (breaker -> oracle lane, quarantine), query-plane
+degradation (shard deadlines/faults -> partial results), plan-time
+retention visibility, and control-plane fault handling.
+
+Every scenario drives REAL plane code through the deterministic fault
+registry (core/faults.py); the kill-point sweep aborts the process state
+mid-loop with ``InjectedCrash`` (a BaseException no recovery handler may
+swallow), then "restarts" by reloading the store from disk."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import faults, telemetry
+from repro.core.control_plane import ControlBus
+from repro.core.faults import CircuitBreaker, InjectedCrash
+from repro.core.matcher import compile_bundle
+from repro.core.object_store import ObjectStore
+from repro.core.patterns import Rule, RuleSet
+from repro.core.query.engine import Query, QueryEngine
+from repro.core.query.mapper import QueryMapper
+from repro.core.query.store import RETENTION_CUTOFF, SegmentStore
+from repro.core.stream_processor import (ENRICH_COLUMN, StreamProcessor)
+from repro.core.updater import MatcherUpdater
+from repro.data.generator import LogGenerator, WorkloadSpec
+from repro.data.pipeline import (QUARANTINE_DIRNAME, IngestPipeline,
+                                 IngestWAL)
+
+SPEC = WorkloadSpec(num_records=2400, seed=13, text_width=256,
+                    ultra_rate=2e-3, high_rate=1e-2)
+BATCH = 400          # 6 batches per run
+SEG = 800            # 3 segments per run
+
+
+@pytest.fixture(autouse=True)
+def _fault_isolation():
+    faults.reset()
+    yield
+    faults.reset()
+    if os.environ.get(faults.ENV_VAR):
+        faults.load_profile(os.environ[faults.ENV_VAR])
+
+
+@pytest.fixture(scope="module")
+def bundle():
+    rs = RuleSet(tuple(Rule(i, t.term, t.term, fields=(t.fieldname,))
+                       for i, t in enumerate(SPEC.planted)))
+    return rs, compile_bundle(rs, SPEC.content_fields)
+
+
+def make_pipeline(root, bundle, *, wal=True):
+    _, eb = bundle
+    store = SegmentStore(segment_size=SEG, root=root,
+                         index_fields=SPEC.content_fields)
+    pipe = IngestPipeline(LogGenerator(SPEC), store, StreamProcessor(eb),
+                          wal=wal)
+    return pipe, store
+
+
+def sealed_timestamps(store):
+    parts = [np.asarray(s.column("timestamp")) for s in store.segments]
+    if not parts:
+        return np.array([], np.int64)
+    return np.sort(np.concatenate(parts))
+
+
+EXPECTED_TS = np.arange(SPEC.num_records, dtype=np.int64) * 1000
+
+
+# -- crash-safe ingest --------------------------------------------------------
+# (site, after): the Nth traversal of each site the simulated kill hits.
+# Together these cover every stage of the double-buffered loop: journal
+# write, dispatch, D2H finalize, store append, seal spill, manifest commit.
+KILL_POINTS = [
+    ("ingest.wal_append", 0), ("ingest.wal_append", 2),
+    ("match.dispatch", 2),
+    ("match.d2h", 2),
+    ("ingest.append", 0), ("ingest.append", 2),
+    ("store.spill", 1),
+    ("store.manifest_commit", 0), ("store.manifest_commit", 1),
+]
+
+
+@pytest.mark.parametrize("site,after", KILL_POINTS)
+def test_kill_point_sweep_exactly_once(tmp_path, bundle, site, after):
+    root = tmp_path / "segments"
+    pipe, store = make_pipeline(root, bundle)
+    faults.inject(site, "crash", after=after)
+    with pytest.raises(InjectedCrash):
+        pipe.run(batch_size=BATCH)
+    faults.reset()
+
+    # restart: every in-memory object is abandoned, disk is the only truth
+    store2 = SegmentStore.load(root)
+    pipe2 = IngestPipeline(LogGenerator(SPEC), store2,
+                           StreamProcessor(bundle[1]), wal=True)
+    resume = pipe2.recover()
+    assert store2.sealed_rows <= resume <= SPEC.num_records
+    pipe2.run(batch_size=BATCH, start=resume)
+
+    # exactly-once: timestamps are absolute-row-indexed, so the sealed set
+    # must be precisely {row * 1000} — no loss, no duplication
+    assert np.array_equal(sealed_timestamps(store2), EXPECTED_TS)
+    assert store2.sealed_rows == SPEC.num_records
+    assert IngestWAL(root).entries() == []    # journal fully reclaimed
+
+
+def test_recovery_emits_replay_event(tmp_path, bundle):
+    root = tmp_path / "segments"
+    pipe, _ = make_pipeline(root, bundle)
+    faults.inject("store.manifest_commit", "crash", after=1)
+    with pytest.raises(InjectedCrash):
+        pipe.run(batch_size=BATCH)
+    faults.reset()
+    store2 = SegmentStore.load(root)
+    pipe2 = IngestPipeline(LogGenerator(SPEC), store2,
+                           StreamProcessor(bundle[1]), wal=True)
+    n_before = len(telemetry.events.events(kind="wal_replay"))
+    resume = pipe2.recover()
+    evs = telemetry.events.events(kind="wal_replay")
+    assert len(evs) == n_before + 1
+    assert evs[-1]["records"] > 0 and evs[-1]["resume"] == resume
+
+
+def test_ingest_cli_restart_reopens_committed_store(tmp_path):
+    """The launcher must REOPEN a populated root on restart, not build a
+    fresh store over it — a fresh SegmentStore starts an empty manifest
+    whose first commit disowns every already-committed segment (the WAL
+    then replays only its own window: rows sealed before the journal's
+    oldest entry are silently lost)."""
+    from repro.launch.ingest import main as ingest_main
+    root = tmp_path / "store"
+    argv = ["--records", "2400", "--rules", "8", "--segment-size", "800",
+            "--batch-size", "400", "--store", str(root), "--wal"]
+    # kill at the 3rd manifest commit: by then seals 1-2 are durable and
+    # the journal has been truncated behind their watermark, so recovery
+    # MUST adopt the committed segments — the WAL alone can't rebuild them
+    faults.inject("store.manifest_commit", "crash", after=2)
+    with pytest.raises(InjectedCrash):
+        ingest_main(argv)
+    faults.reset()
+    ingest_main(argv)
+    store = SegmentStore.load(root)
+    assert np.array_equal(sealed_timestamps(store),
+                          np.arange(2400, dtype=np.int64) * 1000)
+    assert store.sealed_rows == 2400
+    assert IngestWAL(root).entries() == []
+
+
+def test_wal_requires_rooted_store_and_enrich_mode(bundle):
+    _, eb = bundle
+    with pytest.raises(ValueError, match="rooted"):
+        IngestPipeline(LogGenerator(SPEC), SegmentStore(segment_size=SEG),
+                       StreamProcessor(eb), wal=True)
+
+
+def test_wal_rejects_filter_mode(tmp_path, bundle):
+    _, eb = bundle
+    store = SegmentStore(segment_size=SEG, root=tmp_path / "s")
+    with pytest.raises(ValueError, match="enrich"):
+        IngestPipeline(LogGenerator(SPEC), store,
+                       StreamProcessor(eb, mode="filter"), wal=True)
+
+
+# -- graceful match-path degradation ------------------------------------------
+def test_breaker_routes_to_oracle_lane_and_recovers(bundle):
+    _, eb = bundle
+    gen = LogGenerator(SPEC)
+    batches = [gen.batch(i * 200, 200) for i in range(8)]
+    clean = StreamProcessor(eb)
+    expected = [clean.process(b).columns[ENRICH_COLUMN] for b in batches]
+
+    breaker = CircuitBreaker(site="t.equiv", failure_threshold=2,
+                             probe_interval=2)
+    proc = StreamProcessor(eb, retry_limit=0, retry_backoff_s=0.0,
+                           breaker=breaker)
+    faults.inject("match.dispatch", "error", times=4)
+    states = []
+    for b, exp in zip(batches, expected):
+        out = proc.process(b)
+        # degraded lane output is bit-identical to the healthy run
+        assert np.array_equal(out.columns[ENRICH_COLUMN], exp)
+        states.append(breaker.state)
+    # fail, trip, fallback, failed probe, fallback, failed probe (last
+    # injected error), fallback, successful probe -> closed
+    assert states == ["closed", "open", "open", "open",
+                      "open", "open", "open", "closed"]
+    assert breaker.trips == 1
+    assert proc.stats.batches == 8
+
+
+def test_both_lanes_down_quarantines_and_stream_flows(tmp_path, bundle):
+    root = tmp_path / "segments"
+    pipe, store = make_pipeline(root, bundle)
+    faults.inject("match.dispatch", "error")            # primary always down
+    faults.inject("match.fallback", "error", times=2)   # oracle down briefly
+    pipe.run(batch_size=BATCH)
+    faults.reset()
+
+    # first two batches failed BOTH lanes -> dead-lettered, rest flowed
+    assert pipe.quarantined == 2 * BATCH
+    assert store.num_records == SPEC.num_records - 2 * BATCH
+    assert np.array_equal(sealed_timestamps(store), EXPECTED_TS[2 * BATCH:])
+    # the durability watermark covers the quarantined gap...
+    assert store.sealed_rows == SPEC.num_records
+    qdir = root / QUARANTINE_DIRNAME
+    assert len(list(qdir.glob("batch-*.npy"))) == 2
+    assert any(e["records"] == BATCH
+               for e in telemetry.events.events(kind="quarantine"))
+
+    # ...so a restart neither replays nor regenerates the dead letters
+    store2 = SegmentStore.load(root)
+    pipe2 = IngestPipeline(LogGenerator(SPEC), store2,
+                           StreamProcessor(bundle[1]), wal=True)
+    assert pipe2.recover() == SPEC.num_records
+
+
+# -- query-plane degradation --------------------------------------------------
+@pytest.fixture(scope="module")
+def world(bundle, tmp_path_factory):
+    rs, eb = bundle
+    root = tmp_path_factory.mktemp("world")
+    store = SegmentStore(segment_size=SEG, root=root,
+                         index_fields=SPEC.content_fields)
+    gen = LogGenerator(SPEC)
+    IngestPipeline(gen, store, StreamProcessor(eb)).run(batch_size=BATCH)
+    return gen, store, QueryMapper(rs)
+
+
+def _high_query():
+    t = next(p for p in SPEC.planted if p.rate == SPEC.high_rate)
+    return t, Query(terms=((t.fieldname, t.term),), mode="count")
+
+
+def test_shard_fault_yields_partial_result(world):
+    gen, store, mapper = world
+    qe = QueryEngine(store, mapper=mapper, shards=2, shard_deadline_s=10.0)
+    try:
+        t, q = _high_query()
+        full = qe.execute(q)
+        assert not full.partial and full.coverage == 1.0
+        assert full.count == gen.true_count(t)
+
+        faults.inject("query.shard", "error", shard=0)
+        res = qe.execute(q)
+        assert res.partial
+        assert 0 < res.segments_failed < res.segments_total
+        assert 0.0 < res.coverage < 1.0
+        assert res.count <= full.count
+        assert len(res.failed_segment_ids) == res.segments_failed
+        assert any(e["failed"] == res.segments_failed for e in
+                   telemetry.events.events(kind="query_partial"))
+
+        faults.reset()                   # fault clears -> full answers again
+        again = qe.execute(q)
+        assert not again.partial and again.count == full.count
+    finally:
+        qe.close()
+
+
+def test_shard_deadline_yields_partial_result(world):
+    gen, store, mapper = world
+    qe = QueryEngine(store, mapper=mapper, shards=2, shard_deadline_s=0.2)
+    try:
+        t, q = _high_query()
+        faults.inject("query.shard", "stall", delay=1.0, shard=1)
+        res = qe.execute(q)
+        assert res.partial and res.segments_failed >= 1
+        assert res.coverage < 1.0
+    finally:
+        faults.reset()
+        qe.close()
+
+
+def test_shard_crash_is_not_absorbed_into_partial(world):
+    _, store, mapper = world
+    qe = QueryEngine(store, mapper=mapper, shards=2)
+    try:
+        _, q = _high_query()
+        faults.inject("query.shard", "crash", shard=0)
+        with pytest.raises(InjectedCrash):
+            qe.execute(q)
+    finally:
+        faults.reset()
+        qe.close()
+
+
+# -- retention visibility at plan time ----------------------------------------
+def test_retention_cutoff_visible_before_compaction(tmp_path, bundle):
+    rs, eb = bundle
+    store = SegmentStore(segment_size=SEG, root=tmp_path / "segments",
+                         index_fields=SPEC.content_fields)
+    IngestPipeline(LogGenerator(SPEC), store,
+                   StreamProcessor(eb)).run(batch_size=BATCH)
+    qe = QueryEngine(store, mapper=QueryMapper(rs))
+    t, q = _high_query()
+
+    pre = qe.execute(Query(terms=q.terms, mode="copy"))
+    cutoff = 1200 * 1000                 # mid segment 1: seg0 fully expired
+    expect = int((pre.records.columns["timestamp"] >= cutoff).sum())
+    assert 0 < expect < pre.count
+
+    # the retention plane stamps segments long before compaction runs
+    segs = list(store.segments)
+    segs[0].apply_update(meta_updates={RETENTION_CUTOFF: cutoff})
+    segs[1].apply_update(meta_updates={RETENTION_CUTOFF: cutoff})
+
+    # expired rows are invisible on EVERY logical path, counts and copies
+    for path in ("fluxsieve", "text_index", "full_scan"):
+        assert qe.execute(q, path=path).count == expect, path
+    post = qe.execute(Query(terms=q.terms, mode="copy"))
+    assert post.count == expect
+    assert (post.records.columns["timestamp"] >= cutoff).all()
+
+    # fully-expired segment classifies PRUNED (zero I/O); the straddler
+    # refuses the metadata count shortcut (it would count expired rows)
+    plan = qe.plan(q)
+    classes = {task.seg.segment_id: task.path_class for task in plan.tasks}
+    assert classes[segs[0].segment_id] == "pruned"
+    assert classes[segs[1].segment_id] != "meta_count"
+    assert next(task.cutoff for task in plan.tasks
+                if task.seg.segment_id == segs[1].segment_id) == cutoff
+
+
+# -- control-plane robustness -------------------------------------------------
+def test_updater_nacks_uncompilable_rule_individually(bundle):
+    rs, eb = bundle
+    bus, ostore = ControlBus(), ObjectStore()
+    upd = MatcherUpdater(ostore, bus, SPEC.content_fields, initial=rs)
+    proc = StreamProcessor(eb, bus=bus, store=ostore)
+
+    # passes construction (4096 literals of 63 bytes) but its trie upper
+    # bound blows past the largest DFA state bucket at compile time
+    monster = Rule(5, "monster", "X" * 60 + "[a-p][a-p][a-p]",
+                   fields=("content1",))
+    good = Rule(4, "goodlit", "BRANDNEWLITERAL", fields=("content1",))
+    handle = upd.submit(rs.with_rules([monster, good]), asynchronous=False)
+
+    assert handle.published, handle.error
+    assert set(handle.rejected) == {"monster"}
+    assert "state estimate" in handle.rejected["monster"]
+    names = {r.name for r in upd.current_ruleset.rules}
+    assert "goodlit" in names and "monster" not in names
+    assert any(e["rule"] == "monster"
+               for e in telemetry.events.events(kind="rule_rejected"))
+
+    # the rest of the rollout sails: the processor swaps to the clean set
+    assert proc.poll_updates() == 1
+    assert proc.num_rules == rs.num_rules + 1
+
+    # a submit where EVERY change is rejected publishes nothing
+    monster2 = Rule(6, "monster2", "Y" * 60 + "[a-p][a-p][a-p]",
+                    fields=("content1",))
+    h2 = upd.submit(upd.current_ruleset.with_rules([monster2]),
+                    asynchronous=False)
+    assert not h2.published
+    assert "every submitted change was rejected" in h2.error
+
+    # control-topology spans/histograms observed submit + poll latencies
+    assert telemetry.histogram("fluxsieve_updater_compile_seconds").count >= 1
+    assert telemetry.histogram("fluxsieve_updater_publish_seconds").count >= 1
+    assert telemetry.histogram("fluxsieve_match_poll_seconds").count >= 1
+
+
+def test_bus_drop_dup_reorder_and_at_least_once():
+    bus = ControlBus()
+    for i in range(3):
+        bus.publish("t", {"i": i})
+
+    faults.inject("bus.deliver", "drop", times=1, topic="t")
+    assert bus.poll("t", "g") == []          # delivery delayed, not lost
+    msgs = bus.poll("t", "g")                # uncommitted window redelivers
+    assert [m.value["i"] for m in msgs] == [0, 1, 2]
+
+    faults.inject("bus.deliver", "dup", times=1, topic="t")
+    msgs = bus.poll("t", "g2")
+    assert [m.value["i"] for m in msgs] == [0, 1, 2, 0, 1, 2]
+
+    faults.inject("bus.deliver", "reorder", times=1, topic="t")
+    msgs = bus.poll("t", "g3")
+    assert [m.value["i"] for m in msgs] == [2, 1, 0]
+
+    # a filter on another topic leaves this one untouched
+    faults.inject("bus.deliver", "drop", topic="other")
+    assert [m.value["i"] for m in bus.poll("t", "g4")] == [0, 1, 2]
+
+
+def test_suppressed_errors_are_counted():
+    c = telemetry.counter("fluxsieve_errors_suppressed_total",
+                          labels={"site": "test.site"})
+    before = c.value
+    telemetry.suppressed("test.site", ValueError("boom"))
+    assert c.value == before + 1
+    evs = telemetry.events.events(kind="error_suppressed")
+    assert any(e.get("site") == "test.site" and "boom" in e.get("error", "")
+               for e in evs)
