@@ -49,8 +49,8 @@ def main(argv=None) -> int:
 
     from benchmarks import (bench_backfill, bench_layout_grid, bench_matcher,
                             bench_overhead, bench_query_concurrency,
-                            bench_scale, bench_speedup, bench_storage,
-                            bench_update)
+                            bench_scale, bench_speedup, bench_standing,
+                            bench_storage, bench_update)
     from benchmarks.common import print_rows
 
     if args.smoke:
@@ -99,6 +99,13 @@ def main(argv=None) -> int:
             scale_records=12_000 if args.smoke or args.quick else 24_000,
             scale_segment=1_500,
             scale_repeats=3 if args.smoke else 3 if args.quick else 5),
+        "standing": entry(
+            bench_standing.run,
+            tiers=((6, 12) if args.smoke
+                   else (10, 30, 60) if args.quick else (20, 80, 200)),
+            segment_size=400 if args.smoke else 500 if args.quick else 600,
+            runs=3 if args.smoke else 5 if args.quick else 7,
+            churn_epochs=4 if args.smoke else 6 if args.quick else 10),
         "query": entry(
             bench_query_concurrency.run,
             num_records=(4_000 if args.smoke
@@ -117,7 +124,8 @@ def main(argv=None) -> int:
         # CI smoke: the kernel-path benches must run to completion so
         # enrich, query, AND distributed-maintenance regressions fail the
         # build, not only the nightly eyeball
-        smoke_names = ("overhead", "matcher", "query", "backfill")
+        smoke_names = ("overhead", "matcher", "query", "backfill",
+                       "standing")
         if args.only and args.only not in smoke_names:
             print(f"bench {args.only!r} is excluded by --smoke "
                   f"(smoke runs: {', '.join(smoke_names)})", file=sys.stderr)

@@ -17,6 +17,7 @@ consult at named **injection sites**:
     ``bus.deliver``             control-bus delivery (drop/dup/reorder)
     ``maintenance.checkpoint``  backfill checkpoint write
     ``query.shard``             sharded query-executor shard entry
+    ``standing.fold``           standing-query delta fold (epoch feed)
 
 Design mirrors ``telemetry.set_enabled``'s zero-cost-when-off discipline:
 ``fire``/``act`` early-return on a module-level flag, so a disarmed
@@ -65,6 +66,7 @@ SITES = (
     "bus.deliver",
     "maintenance.checkpoint",
     "query.shard",
+    "standing.fold",
 )
 
 # error/crash/stall raise or sleep at the site; drop/dup/reorder are

@@ -8,3 +8,5 @@ from repro.core.query.executor import (PlanExecutor,  # noqa: F401
                                        ShardedQueryExecutor)
 from repro.core.query.mapper import QueryMapper  # noqa: F401
 from repro.core.query.profiler import QueryProfiler  # noqa: F401
+from repro.core.query.standing import (StandingQuery,  # noqa: F401
+                                       StandingRegistry)

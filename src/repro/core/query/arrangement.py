@@ -70,6 +70,10 @@ _T_RETIRED = telemetry.counter(
 _T_LEAKS = telemetry.counter(
     "fluxsieve_arrangement_lease_leaks_total",
     help="Leases released at finalization instead of by their owner.")
+_T_PREFETCH = telemetry.counter(
+    "fluxsieve_arrangement_prefetch_total",
+    help="Arrangements rebuilt eagerly on epoch publish (off the query "
+         "path), so the first post-swap query skips the cold build.")
 _DEV_BYTES = telemetry.gauge(
     "fluxsieve_arrangement_device_bytes",
     help="Device bytes resident across all arrangement stores.")
@@ -114,9 +118,11 @@ class Arrangement:
     vector, ``lens`` the unpadded per-segment record counts."""
 
     __slots__ = ("key", "tokens", "words", "epoch", "stack", "row_seg",
-                 "lens", "columns", "nbytes", "refcount", "retired")
+                 "lens", "columns", "nbytes", "refcount", "retired",
+                 "block_n")
 
-    def __init__(self, key, epoch, stack, row_seg, lens, columns, nbytes):
+    def __init__(self, key, epoch, stack, row_seg, lens, columns, nbytes,
+                 block_n: int = 1024):
         self.key = key
         self.tokens, self.words = key
         self.epoch = epoch
@@ -127,6 +133,8 @@ class Arrangement:
         self.nbytes = nbytes            # stack + row_seg (columns accounted
         self.refcount = 0               # separately in the pool)
         self.retired = False
+        self.block_n = block_n          # padding bucket (prefetch rebuilds
+                                        # reproduce the family's key shape)
 
 
 class ArrangementLease:
@@ -182,8 +190,10 @@ class ArrangementStore:
     """The shared device plane.  Thread-safe; one instance is shared by
     every executor shard and (typically) every engine over one
     ``SegmentStore`` — wire maintenance with
-    ``segment_store.subscribe_maintenance(arrangements.publish)`` so swaps
-    publish epochs here instead of invalidating anything in place.
+    ``segment_store.subscribe_epochs(arrangements.on_epoch)`` (the
+    kind-aware feed; the legacy
+    ``subscribe_maintenance(arrangements.publish)`` wiring still works) so
+    swaps publish epochs here instead of invalidating anything in place.
 
     ``max_live`` bounds the number of DISTINCT live arrangements (query
     families); evicting one only retires it — leased readers keep it alive
@@ -212,7 +222,12 @@ class ArrangementStore:
         self.builds = 0
         self.lease_hits = 0
         self.leaks = 0
+        self.prefetches = 0
         self._lease_owners: Counter = Counter()
+        # prefetch source (set via set_prefetch_source): segment_id ->
+        # ArrangementItem with the segment's CURRENT token, or None when
+        # the segment left the store.  Enables eager post-swap rebuilds.
+        self._prefetch_source = None
 
     # -- epoch plane -------------------------------------------------------
     @property
@@ -225,17 +240,49 @@ class ArrangementStore:
         is freed under a reader — retired entries with live refcounts
         survive until they drain; drained ones free immediately.  Returns
         the new epoch."""
+        epoch, _ = self._publish_collect(segment_ids)
+        return epoch
+
+    def set_prefetch_source(self, fn) -> None:
+        """Arm epoch-publish prefetch: ``fn(segment_id)`` must return an
+        ``ArrangementItem`` bound to the segment's current token (or None
+        when the segment is gone).  With a source set, ``on_epoch`` eagerly
+        rebuilds the arrangements an ``update`` epoch retired — off the
+        query path, so the first post-swap query leases a hot entry
+        instead of paying the cold build."""
+        self._prefetch_source = fn
+
+    def on_epoch(self, delta) -> None:
+        """Kind-aware epoch feed entry (``store.subscribe_epochs``
+        target).  Seals publish nothing here — a new segment invalidates
+        no arrangement.  Cache drops retire WITHOUT prefetching (cold-run
+        semantics: re-warming device state would un-drop the caches);
+        updates retire and, when a prefetch source is armed, rebuild the
+        retired live arrangements under the swapped segments' new
+        tokens."""
+        if delta.kind == "seal":
+            return
+        _, retired = self._publish_collect(delta.segment_ids)
+        if delta.kind == "update" and self._prefetch_source is not None:
+            self._prefetch(retired)
+
+    def _publish_collect(self, segment_ids) -> tuple:
+        """publish() + the retired live arrangements' rebuild specs
+        ``[(tokens, words, block_n)]`` (prefetch input)."""
         ids = None if segment_ids is None else {int(s) for s in segment_ids}
 
         def touches(tokens):
             return ids is None or any(t[0] in ids for t in tokens)
 
+        retired = []
         with self._lock:
             self._epoch += 1
             _T_EPOCHS.inc()
             for key in [k for k, a in self._live.items()
                         if touches(a.tokens)]:
-                self._retire_locked(self._live.pop(key))
+                arr = self._live.pop(key)
+                retired.append((arr.tokens, arr.words, arr.block_n))
+                self._retire_locked(arr)
                 _T_RETIRED.inc()
             # a build in flight over the published segments must not enter
             # _live as a fresh entry: its key is marked doomed and the
@@ -250,7 +297,29 @@ class ArrangementStore:
                 col.retired = True
                 if col.refs == 0:
                     self._remove_column_locked(col)
-            return self._epoch
+            return self._epoch, retired
+
+    def _prefetch(self, retired: list) -> None:
+        """Rebuild each retired live arrangement under the current tokens:
+        swapped segments resolve fresh items (new token -> fresh upload),
+        untouched ones keep their pooled columns, and the lease/release
+        installs the entry at refcount 0 — exactly what the next query of
+        the new epoch leases without building.  Best-effort: a segment
+        that left the store or a failed build skips that family."""
+        source = self._prefetch_source
+        for tokens, words, block_n in retired:
+            try:
+                items = [source(t[0]) for t in tokens]
+                if any(it is None for it in items):
+                    continue        # a member segment left the store
+                self.lease(items, words, block_n=block_n,
+                           owner="prefetch").release()
+                self.prefetches += 1
+                _T_PREFETCH.inc()
+                telemetry.emit("arrangement_prefetch", plane="arrangement",
+                               segments=len(items), words=len(words))
+            except Exception as e:  # noqa: BLE001 — prefetch is advisory
+                telemetry.suppressed("arrangement.prefetch", e)
 
     # -- lease plane -------------------------------------------------------
     def lease(self, items, words, *, block_n: int = 1024,
@@ -311,7 +380,8 @@ class ArrangementStore:
         stack, row_seg, lens, nbytes = self._assemble(
             items, words, block_n, pooled=False)
         arr = Arrangement((tuple(i.token for i in items), tuple(words)),
-                          self._epoch, stack, row_seg, lens, (), nbytes)
+                          self._epoch, stack, row_seg, lens, (), nbytes,
+                          block_n)
         arr.retired = True              # frees as soon as the lease drops
         arr.refcount = 1
         with self._lock:
@@ -398,8 +468,12 @@ class ArrangementStore:
 
     def _evict_locked(self) -> None:
         while len(self._live) > self.max_live:
-            # retire the oldest key; leased readers keep it alive
-            key = next(iter(self._live))
+            # cost-weighted: evict the CHEAPEST-to-rebuild arrangement
+            # (device bytes proxy its upload+assembly cost), so expensive
+            # families stay resident under pressure.  Ties break on
+            # insertion order (oldest first).  Leased readers keep the
+            # evicted entry alive until their refcounts drain.
+            key = min(self._live, key=lambda k: self._live[k].nbytes)
             self._retire_locked(self._live.pop(key))
             _T_EVICT_ARR.inc()
 
@@ -427,7 +501,7 @@ class ArrangementStore:
                         col.refs += 1
                         cols.append(col)
             arr = Arrangement(key, self._epoch, stack, row_seg, lens,
-                              tuple(cols), nbytes)
+                              tuple(cols), nbytes, block_n)
             self._alloc_bytes(nbytes)
             return arr
 

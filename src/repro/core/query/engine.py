@@ -77,6 +77,21 @@ _QUERY_PARTIAL = telemetry.counter(
     help="Queries answered partially (>=1 shard failed or timed out).")
 
 
+def filter_expired(task, ids: np.ndarray, cache: bool) -> tuple:
+    """Retention-straddler filter: expired rows are plan-time invisible
+    long before compaction physically drops them.  ONE central filter —
+    every physical class (and the standing-query fold path) funnels its
+    row ids through here, so no per-path filter can tear.  Returns
+    ``(kept_ids, bytes_read)`` (bytes only when the timestamp column came
+    off disk)."""
+    if task.cutoff is None or not len(ids):
+        return ids, 0
+    seg = task.seg
+    in_mem = "timestamp" in seg._columns
+    ts = np.asarray(seg.column_rows("timestamp", ids, cache=cache))
+    return ids[ts >= task.cutoff], (0 if in_mem else ts.nbytes)
+
+
 @dataclass(frozen=True)
 class Query:
     """terms: ((field, term), ...) AND-combined; mode: 'copy' | 'count'."""
@@ -151,15 +166,20 @@ class QueryEngine:
                  scan_backend: str = None, block_n: int = 1024,
                  interpret: bool = True, arrangements: ArrangementStore = None,
                  device_counts="auto", shards: int = 1,
-                 worker_id: str = "query-0", shard_deadline_s: float = None):
+                 worker_id: str = "query-0", shard_deadline_s: float = None,
+                 shard_affinity: str = "weighted", prefetch: bool = True):
         self.store = store
         self.mapper = mapper          # QueryMapper (None -> no fluxsieve path)
         self.profiler = profiler
         self.workers = workers
         self.planner = QueryPlanner(mapper)
         self.arrangements = arrangements or ArrangementStore()
-        # maintenance swaps publish epochs to the shared device plane
-        store.subscribe_maintenance(self.arrangements.publish)
+        # maintenance swaps publish kind-aware epoch deltas to the shared
+        # device plane (on_epoch retires + optionally prefetches; seals
+        # pass through without bumping the arrangement epoch)
+        store.subscribe_epochs(self.arrangements.on_epoch)
+        if prefetch:
+            self.arrangements.set_prefetch_source(self._prefetch_item)
         self.plan_executor = PlanExecutor(
             backend=backend, scan_backend=scan_backend, block_n=block_n,
             interpret=interpret, workers=workers,
@@ -167,13 +187,46 @@ class QueryEngine:
         self.executor = (ShardedQueryExecutor(self.plan_executor,
                                               shards=shards,
                                               worker_id=worker_id,
-                                              deadline_s=shard_deadline_s)
+                                              deadline_s=shard_deadline_s,
+                                              affinity=shard_affinity)
                          if shards > 1 else self.plan_executor)
+        self._standing = None         # StandingRegistry, built on demand
 
     def close(self) -> None:
-        """Release the shard worker pool (no-op for unsharded engines)."""
+        """Release standing queries and the shard worker pool (both no-ops
+        when unused)."""
+        if self._standing is not None:
+            self._standing.close()
         if isinstance(self.executor, ShardedQueryExecutor):
             self.executor.close()
+
+    def _prefetch_item(self, segment_id: int):
+        """Arrangement-prefetch source: the segment's CURRENT-token
+        ``ArrangementItem`` (hot bitmap read), or None once it left the
+        store."""
+        from repro.core.stream_processor import ENRICH_COLUMN
+        from repro.core.query.arrangement import ArrangementItem
+        for seg in self.store.segments:
+            if seg.segment_id == segment_id:
+                return ArrangementItem(
+                    token=seg.meta_token(),
+                    num_records=int(seg.num_records),
+                    load=lambda s=seg: np.asarray(s.column(ENRICH_COLUMN)))
+        return None
+
+    # -- standing queries ----------------------------------------------------
+    def register_standing(self, query: Query, *, path: str = "auto",
+                          name: str = None):
+        """Register ``query`` for incremental view maintenance: the result
+        materializes once through the normal executor, then per-segment
+        deltas from the store's epoch feed fold into it — ``refresh()``
+        answers in O(changed segments) instead of O(all segments).
+        Returns the :class:`repro.core.query.standing.StandingQuery`."""
+        from repro.core.query.standing import StandingRegistry
+        if self._standing is None:
+            self._standing = StandingRegistry(self)
+            self.store.subscribe_epochs(self._standing.on_epoch)
+        return self._standing.register(query, path=path, name=name)
 
     # -- public ------------------------------------------------------------
     def plan(self, query: Query, *, path: str = "auto",
@@ -234,18 +287,8 @@ class QueryEngine:
             if isinstance(ids, (int, np.integer)):   # metadata-only count
                 res.count += int(ids)
                 continue
-            if task.cutoff is not None and len(ids):
-                # retention straddler: expired rows are plan-time invisible
-                # long before compaction physically drops them.  ONE central
-                # filter — every physical class funnels its ids through here,
-                # so no per-path filter can tear
-                seg = task.seg
-                in_mem = "timestamp" in seg._columns
-                ts = np.asarray(seg.column_rows("timestamp", ids,
-                                                cache=cache))
-                if not in_mem:
-                    res.bytes_read += ts.nbytes
-                ids = ids[ts >= task.cutoff]
+            ids, extra_bytes = filter_expired(task, ids, cache)
+            res.bytes_read += extra_bytes
             res.count += len(ids)
             if plan.query.mode == "copy" and len(ids):
                 matches.append((task.seg, ids))

@@ -479,8 +479,10 @@ class PlanExecutor:
 class ShardedQueryExecutor:
     """Sharded query workers over the shared arrangement plane.
 
-    ``plan.tasks`` partition by segment identity (``segment_id % shards``,
-    stable across repeated queries so each shard's arrangement stays hot)
+    ``plan.tasks`` partition across shards by record-count-weighted
+    greedy assignment (``affinity="weighted"``, deterministic so repeated
+    queries keep each shard's arrangement hot; ``"modulo"`` selects the
+    legacy ``segment_id % shards`` scheme for A/B comparison)
     onto a persistent worker pool; every shard runs its own stacked
     dispatch — leasing from the SAME ``ArrangementStore``, so sharding
     multiplies concurrency, not device copies — and re-plans segments the
@@ -500,13 +502,15 @@ class ShardedQueryExecutor:
     accounting, instead of one slow or broken shard wedging the query."""
 
     def __init__(self, executor: PlanExecutor, *, shards: int = 4,
-                 worker_id: str = "query-0", deadline_s: float = None):
+                 worker_id: str = "query-0", deadline_s: float = None,
+                 affinity: str = "weighted"):
         if shards < 1:
             raise ValueError(f"shards must be >= 1, got {shards}")
         self.executor = executor
         self.shards = shards
         self.worker_id = worker_id
         self.deadline_s = deadline_s
+        self.affinity = affinity    # shard_tasks scheme: weighted | modulo
         self.worker_idents = tuple(f"{worker_id}/shard-{i}"
                                    for i in range(shards))
         from concurrent.futures import ThreadPoolExecutor
@@ -534,7 +538,7 @@ class ShardedQueryExecutor:
     def execute(self, plan, planner, *, cache: bool = True,
                 owner: str = None) -> list:
         tasks = plan.tasks
-        shard_idx = plan.shard_tasks(self.shards)
+        shard_idx = plan.shard_tasks(self.shards, affinity=self.affinity)
         if len(shard_idx) <= 1 and self.deadline_s is None:
             return self.executor.execute(plan, planner, cache=cache,
                                          owner=owner or self.worker_idents[0])

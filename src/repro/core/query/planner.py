@@ -92,15 +92,42 @@ class PhysicalPlan:
         sub.tasks = [self.tasks[i] for i in indices]
         return sub
 
-    def shard_tasks(self, shards: int) -> list:
-        """Partition task indices by segment identity into at most
-        ``shards`` non-empty groups.  Keyed on ``segment_id % shards`` —
-        stable across repeated queries and across seals/compactions of
-        OTHER segments, so each shard's arrangement key (its token subset)
-        stays hot as the store grows."""
-        groups = [[] for _ in range(max(1, shards))]
-        for i, t in enumerate(self.tasks):
-            groups[t.seg.segment_id % len(groups)].append(i)
+    def shard_tasks(self, shards: int, *,
+                    affinity: str = "weighted") -> list:
+        """Partition task indices into at most ``shards`` non-empty
+        groups.
+
+        ``affinity="weighted"`` (default) balances *cost*, not count:
+        greedy longest-processing-time assignment by per-segment record
+        count (the read-side analogue of the maintenance plane's
+        heat-weighted ``shard_of``), so stacked-dispatch sizes stay even
+        under skewed segment sizes.  Deterministic — task order sorts on
+        (record count desc, segment id) and ties in shard load break on
+        shard index — so repeated queries over an unchanged store produce
+        identical groups, keeping each shard's arrangement key hot.
+
+        ``affinity="modulo"`` keys on ``segment_id % shards`` — the
+        legacy scheme, stable across seals/compactions of OTHER segments
+        (kept for A/B comparison; see bench_standing's shard lanes)."""
+        n = max(1, shards)
+        groups = [[] for _ in range(n)]
+        if affinity == "modulo":
+            for i, t in enumerate(self.tasks):
+                groups[t.seg.segment_id % n].append(i)
+            return [g for g in groups if g]
+        if affinity != "weighted":
+            raise ValueError(f"unknown shard affinity {affinity!r}")
+        order = sorted(range(len(self.tasks)),
+                       key=lambda i: (-int(self.tasks[i].seg.num_records),
+                                      self.tasks[i].seg.segment_id))
+        loads = [0] * n
+        for i in order:
+            k = loads.index(min(loads))
+            groups[k].append(i)
+            # +1 keeps empty segments from piling onto one shard
+            loads[k] += int(self.tasks[i].seg.num_records) + 1
+        for g in groups:
+            g.sort()        # preserve plan order inside each shard
         return [g for g in groups if g]
 
 

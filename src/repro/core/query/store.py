@@ -84,6 +84,40 @@ INGEST_WAL_DIRNAME = "ingest-wal"
 # query invisibility); the Compactor's next rewrite drops them physically.
 RETENTION_CUTOFF = "retention_cutoff"
 
+# epoch change kinds published to subscribe_epochs listeners
+EPOCH_KINDS = ("seal", "update", "drop", "replace", "retire")
+
+
+@dataclass(frozen=True)
+class EpochDelta:
+    """One maintenance epoch's change record — the payload of the
+    ``subscribe_epochs`` feed (the richer sibling of the legacy
+    ``subscribe_maintenance`` segment-id feed).
+
+    ``kind`` names the change class:
+
+      ``seal``     a new segment entered the store off the append path;
+      ``update``   ``Segment.apply_update`` swapped enrichment artifacts
+                   (backfill install, retention-cutoff stamp);
+      ``drop``     a cold-run cache drop bumped tokens (data unchanged —
+                   derived device/host caches are invalid, results are not);
+      ``replace``  compaction swapped ``segment_ids`` out for ``added``;
+      ``retire``   retention removed ``segment_ids`` with no replacement.
+
+    ``segment_ids`` are the ids whose previous state this epoch
+    invalidates (for ``seal`` the new segment's own id); ``added`` carries
+    the Segment objects entering the store (seal/replace); ``tokens`` maps
+    every affected id still in the store to its post-change
+    ``meta_token()`` — the affected-version detail incremental consumers
+    (standing queries) compare against their folded state, so a duplicated
+    delivery or an already-folded epoch is recognized without re-reading
+    any data."""
+    seq: int
+    kind: str
+    segment_ids: tuple
+    added: tuple = ()
+    tokens: dict = field(default_factory=dict)
+
 
 def tokenize(text: str) -> list:
     return _TOKEN_RE.findall(text)
@@ -282,9 +316,10 @@ class Segment:
     # in-cache fast paths stay lock-free (install happens-before meta flip).
     _io_lock: object = field(default_factory=threading.Lock)
     # maintenance-epoch publication hook (set by the owning SegmentStore):
-    # called with (segment_ids,) AFTER a swap/cache-drop bumps the token, so
-    # shared-arrangement readers retire the old epoch instead of racing a
-    # cache invalidation
+    # called with (segment_ids, kind, changed_segments) AFTER a swap/
+    # cache-drop bumps the token, so shared-arrangement readers retire the
+    # old epoch instead of racing a cache invalidation, and standing-query
+    # folds learn the change kind + post-change tokens
     _on_swap: object = None
 
     # -- column access ---------------------------------------------------
@@ -462,7 +497,7 @@ class Segment:
         # epoch publication OUTSIDE the io lock (listeners take their own
         # locks; a listener that re-entered column() must not deadlock)
         if self._on_swap is not None:
-            self._on_swap((self.segment_id,))
+            self._on_swap((self.segment_id,), "update", (self,))
 
     # -- lifecycle ---------------------------------------------------------
     def spill(self, root: Path) -> None:
@@ -495,7 +530,7 @@ class Segment:
             # cold query re-reads from disk (and is accounted as such)
             self._meta_gen += 1
         if self._on_swap is not None:
-            self._on_swap((self.segment_id,))
+            self._on_swap((self.segment_id,), "drop", (self,))
 
     def nbytes(self, names=None) -> int:
         names = names or self.column_names
@@ -585,6 +620,12 @@ class SegmentStore:
         # apply_update / drop_caches / replace_segments publishes the
         # affected segment ids here instead of invalidating caches in place
         self._maintenance_listeners: list = []
+        # kind-aware delta listeners (standing queries, prefetching
+        # arrangement stores): receive an EpochDelta for EVERY epoch,
+        # including seals — the legacy segment-id feed above never saw
+        # seals, because a new segment invalidates nothing
+        self._epoch_listeners: list = []
+        self._epoch_seq = 0
 
     # -- epoch publication ---------------------------------------------------
     def subscribe_maintenance(self, fn) -> None:
@@ -596,47 +637,104 @@ class SegmentStore:
         Idempotent per callable (N engines sharing one ArrangementStore
         publish ONE epoch per swap, not N), and bound methods are held
         weakly: a discarded engine's arrangement store is collectable — a
-        store outliving its engines must not pin their device memory."""
-        with self._lock:
-            if any(r() == fn for r in self._maintenance_listeners):
-                return
-            ref = (weakref.WeakMethod(fn) if hasattr(fn, "__self__")
-                   else (lambda f: (lambda: f))(fn))
-            self._maintenance_listeners.append(ref)
-            for s in self.segments:
-                s._on_swap = self._publish_epoch
+        store outliving its engines must not pin their device memory.
 
-    def _publish_epoch(self, segment_ids) -> None:
+        Seals are NOT delivered here (a new segment invalidates no derived
+        state); subscribe to the kind-aware ``subscribe_epochs`` feed for
+        the full change stream."""
+        with self._lock:
+            self._subscribe_locked(self._maintenance_listeners, fn)
+
+    def subscribe_epochs(self, fn) -> None:
+        """Register ``fn(delta: EpochDelta)`` on the kind-aware epoch feed:
+        every seal, enrichment swap, cache drop, compaction replace, and
+        retention retire publishes one delta carrying the change kind, the
+        affected segment ids, the Segment objects entering the store, and
+        the post-change ``meta_token()`` of every surviving affected
+        segment.  Same subscription discipline as ``subscribe_maintenance``
+        (idempotent per callable, bound methods held weakly)."""
+        with self._lock:
+            self._subscribe_locked(self._epoch_listeners, fn)
+
+    def _subscribe_locked(self, listeners: list, fn) -> None:
+        if any(r() == fn for r in listeners):
+            return
+        ref = (weakref.WeakMethod(fn) if hasattr(fn, "__self__")
+               else (lambda f: (lambda: f))(fn))
+        listeners.append(ref)
+        for s in self.segments:
+            s._on_swap = self._publish_epoch
+
+    def _publish_epoch(self, segment_ids, kind: str = "update",
+                       changed=(), added=()) -> None:
+        """Fan one maintenance epoch out to both feeds.  ``changed`` are
+        surviving Segment objects whose artifacts swapped (update/drop);
+        ``added`` are Segment objects entering the store (seal/replace).
+        Always called OUTSIDE the store and segment locks — listeners take
+        their own locks and may re-enter column reads."""
         _EPOCH_PUBLISHES.inc()
-        telemetry.emit("epoch_publish", plane="store",
+        telemetry.emit("epoch_publish", plane="store", change=kind,
                        segments=[int(s) for s in segment_ids])
+        delta = None
         dead = False
-        for r in list(self._maintenance_listeners):
+        for r in list(self._epoch_listeners):
             fn = r()
             if fn is None:
                 dead = True
-            else:
-                fn(tuple(segment_ids))
+                continue
+            if delta is None:
+                with self._lock:
+                    self._epoch_seq += 1
+                    seq = self._epoch_seq
+                delta = EpochDelta(
+                    seq=seq, kind=kind,
+                    segment_ids=tuple(int(s) for s in segment_ids),
+                    added=tuple(added),
+                    tokens={int(s.segment_id): s.meta_token()
+                            for s in (*changed, *added)})
+            fn(delta)
+        # legacy feed: segment ids only, and no seal deliveries (a fresh
+        # segment invalidates no arrangement; publishing would spuriously
+        # retire unrelated epochs' bookkeeping)
+        if kind != "seal":
+            for r in list(self._maintenance_listeners):
+                fn = r()
+                if fn is None:
+                    dead = True
+                else:
+                    fn(tuple(segment_ids))
         if dead:
             with self._lock:
                 self._maintenance_listeners = [
-                    r for r in self._maintenance_listeners if r() is not None]
+                    r for r in self._maintenance_listeners
+                    if r() is not None]
+                self._epoch_listeners = [
+                    r for r in self._epoch_listeners if r() is not None]
 
     # -- ingestion ---------------------------------------------------------
     def append(self, batch: RecordBatch) -> None:
+        sealed = []
         with self._lock:
             self._active.append(batch)
             self._active_count += len(batch)
             while self._active_count >= self.segment_size:
-                self._seal_locked(self.segment_size)
+                sealed.append(self._seal_locked(self.segment_size))
+        self._publish_seals(sealed)
 
     def seal(self) -> None:
         """Seal whatever is pending (end of stream)."""
         with self._lock:
-            if self._active_count:
-                self._seal_locked(self._active_count)
+            sealed = ([self._seal_locked(self._active_count)]
+                      if self._active_count else [])
+        self._publish_seals(sealed)
 
-    def _seal_locked(self, n: int) -> None:
+    def _publish_seals(self, sealed: list) -> None:
+        """Seal epochs publish AFTER the store lock releases (listeners —
+        standing-query folds — take their own locks and read columns)."""
+        for seg in sealed:
+            self._publish_epoch((seg.segment_id,), "seal", added=(seg,))
+
+    def _seal_locked(self, n: int) -> Segment:
         merged = RecordBatch.concat(self._active)
         head, tail = merged.slice(0, n), merged.slice(n, len(merged))
         self._active = [tail] if len(tail) else []
@@ -646,7 +744,9 @@ class SegmentStore:
         # never observe a registered segment whose rows are not counted,
         # or a watermark covering rows with no registered segment
         self._sealed_rows += n
-        self.segments.append(self._make_segment(head, ingest_seal=True))
+        seg = self._make_segment(head, ingest_seal=True)
+        self.segments.append(seg)
+        return seg
 
     def _make_segment(self, batch: RecordBatch, register: bool = True,
                       ingest_seal: bool = False) -> Segment:
@@ -749,7 +849,8 @@ class SegmentStore:
         # compactor retire is a maintenance epoch: arrangements over the
         # replaced segments retire (in-flight leases pin them; the old
         # segment objects and spill files stay valid for those readers)
-        self._publish_epoch([s.segment_id for s in old])
+        self._publish_epoch([s.segment_id for s in old], "replace",
+                            added=(new,))
         self._tombstone_all(old)
         return True
 
@@ -772,7 +873,7 @@ class SegmentStore:
             if self.manifest is not None:
                 self.manifest.commit(
                     remove=[s.segment_id for s in old])
-        self._publish_epoch([s.segment_id for s in old])
+        self._publish_epoch([s.segment_id for s in old], "retire")
         self._tombstone_all(old)
         return True
 
@@ -826,12 +927,14 @@ class SegmentStore:
         both match lanes failed).  Seals any pending rows first so the
         watermark stays prefix-accurate: W always means source rows
         [0, W) are durable — in a registered segment or in quarantine."""
+        sealed = []
         with self._lock:
             if self._active_count:
-                self._seal_locked(self._active_count)
+                sealed.append(self._seal_locked(self._active_count))
             self._sealed_rows += int(n)
             if self.manifest is not None:
                 self.manifest.commit(sealed_rows=self._sealed_rows)
+        self._publish_seals(sealed)
 
     def drop_caches(self) -> None:
         """Cold-run control: all sealed segments forget in-memory data."""

@@ -320,3 +320,56 @@ def test_max_live_eviction_retires_not_frees_leased():
         lease.release()
     store.publish()
     assert store.device_bytes == 0
+
+
+# -- epoch prefetch + cost-weighted eviction (standing-query satellites) -----
+
+def test_epoch_prefetch_zero_builds_after_swap(tmp_path):
+    """Satellite: an update epoch re-builds the retired arrangement
+    families eagerly (on publish, from maintenance context), so the next
+    query over the swapped store performs ZERO builds — the post-epoch
+    latency spike moves off the query path."""
+    spec, gen, store, mapper = build_ragged_world(tmp_path, seed=23,
+                                                  num_records=2500)
+    engine = QueryEngine(store, mapper=mapper, backend="ref")
+    q = Query(terms=DENSE_TERMS, mode="count")
+    want = engine.execute(q, path="fluxsieve").count
+    arr = engine.arrangements
+    assert arr.prefetches == 0
+
+    store.segments[0].apply_update(meta_updates={"touched": True})
+    assert arr.prefetches >= 1          # rebuilt on publish, eagerly
+    builds = arr.builds
+    r = engine.execute(q, path="fluxsieve")
+    assert r.count == want
+    assert arr.builds == builds         # the hot query built nothing
+
+
+def test_epoch_prefetch_off_when_disabled(tmp_path):
+    spec, gen, store, mapper = build_ragged_world(tmp_path, seed=23,
+                                                  num_records=2500)
+    engine = QueryEngine(store, mapper=mapper, backend="ref",
+                         prefetch=False)
+    q = Query(terms=DENSE_TERMS, mode="count")
+    engine.execute(q, path="fluxsieve")
+    store.segments[0].apply_update(meta_updates={"touched": True})
+    assert engine.arrangements.prefetches == 0
+
+
+def test_eviction_prefers_cheapest_rebuild():
+    """Satellite: at max_live pressure the store evicts the family that is
+    cheapest to rebuild (fewest device bytes), not the oldest — a large
+    hot arrangement survives a parade of small one-off queries."""
+    store = ArrangementStore(max_live=2)
+    store.lease([_item(0, 0, n=512)], (0,), block_n=64, owner="big").release()
+    store.lease([_item(1, 0, n=8)], (0,), block_n=64, owner="small").release()
+    # third family forces an eviction: under FIFO the (older) big family
+    # would go; cost-weighted eviction drops the small one
+    store.lease([_item(2, 0, n=128)], (0,), block_n=64, owner="mid").release()
+    assert store.live_arrangements() <= 2
+
+    builds = store.builds
+    store.lease([_item(0, 0, n=512)], (0,), block_n=64, owner="big2").release()
+    assert store.builds == builds           # big survived: lease hit
+    store.lease([_item(1, 0, n=8)], (0,), block_n=64, owner="s2").release()
+    assert store.builds == builds + 1       # small was the one evicted

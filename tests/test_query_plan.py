@@ -14,7 +14,7 @@ from repro.core.query import executor as executor_mod
 from repro.core.query.engine import Query, QueryEngine
 from repro.core.query.mapper import QueryMapper
 from repro.core.query.planner import (BITMAP, FALLBACK, META_COUNT, POSTINGS,
-                                      PRUNED)
+                                      PRUNED, PhysicalPlan, SegmentTask)
 from repro.core.query.store import SegmentStore
 from repro.core.stream_processor import StreamProcessor
 from repro.data.generator import LogGenerator, WorkloadSpec
@@ -371,3 +371,31 @@ def test_workers_threaded_equivalence(tmp_path):
               Query(terms=DENSE_TERMS, mode="count")):
         assert result_fingerprint(e1.execute(q, path="fluxsieve")) == \
             result_fingerprint(e4.execute(q, path="fluxsieve"))
+
+
+def test_shard_affinity_weighted_balances_skewed_sizes():
+    """Satellite: record-count-weighted shard assignment keeps per-shard
+    load even under skewed segment sizes, where the legacy modulo scheme
+    piles the big segments onto one shard."""
+    class _Seg:
+        def __init__(self, sid, n):
+            self.segment_id, self.num_records = sid, n
+
+    # even ids huge, odd ids tiny: modulo(2) puts ALL the weight on shard 0
+    sizes = [10_000 if sid % 2 == 0 else 10 for sid in range(8)]
+    plan = PhysicalPlan(query=None, path="fluxsieve")
+    plan.tasks = [SegmentTask(seg=_Seg(sid, n), meta={}, path_class=BITMAP)
+                  for sid, n in enumerate(sizes)]
+
+    def loads(groups):
+        return sorted(sum(sizes[i] for i in g) for g in groups)
+
+    modulo = plan.shard_tasks(2, affinity="modulo")
+    weighted = plan.shard_tasks(2)
+    assert loads(modulo) == [40, 40_000]
+    assert loads(weighted) == [20_020, 20_020]
+    # deterministic (hot-arrangement keys depend on it), plan order kept
+    assert weighted == plan.shard_tasks(2, affinity="weighted")
+    assert all(g == sorted(g) for g in weighted)
+    with pytest.raises(ValueError):
+        plan.shard_tasks(2, affinity="random")

@@ -1,0 +1,287 @@
+"""Standing-query tests: O(delta) incremental view maintenance stays
+bit-identical to the pull path across every epoch kind the store publishes
+(seal / backfill install / compaction replace / retention retire), folds
+only the changed segments, degrades honestly when a fold faults, and heals
+on the next pass."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import faults
+from repro.core.control_plane import ControlBus
+from repro.core.maintenance import (BackfillWorker, Compactor,
+                                    RetentionPolicy, RetentionWorker)
+from repro.core.matcher import compile_bundle
+from repro.core.object_store import ObjectStore
+from repro.core.patterns import Rule, RuleSet
+from repro.core.query.engine import Query, QueryEngine
+from repro.core.query.mapper import QueryMapper
+from repro.core.query.store import SegmentStore
+from repro.core.records import decode_texts
+from repro.core.stream_processor import StreamProcessor
+from repro.core.updater import MatcherUpdater
+from repro.data.generator import LogGenerator, WorkloadSpec
+
+
+@pytest.fixture(autouse=True)
+def _fault_isolation():
+    """Fresh fault state per test, with the chaos-leg env profile (if any)
+    re-armed *before* each test so its fire budget resets: every standing
+    test absorbs the same `standing.fold` injection — a failed seal fold
+    healed by the next pass with results identical to a clean run."""
+    faults.reset()
+    if os.environ.get(faults.ENV_VAR):
+        faults.load_profile(os.environ[faults.ENV_VAR])
+    yield
+    faults.reset()
+    if os.environ.get(faults.ENV_VAR):
+        faults.load_profile(os.environ[faults.ENV_VAR])
+
+
+def make_world(tmp_path, *, num_records=6000, segment_size=1500, seed=13,
+               hold_back=None, shards=1):
+    """Planted workload + full maintenance stack.  ``hold_back`` keeps one
+    rule out of the initial rollout (the late rule backfill re-enriches)."""
+    spec = WorkloadSpec(num_records=num_records, ultra_rate=1e-3,
+                        high_rate=1e-2, seed=seed, text_width=256)
+    gen = LogGenerator(spec)
+    full = RuleSet(tuple(Rule(i, t.term, t.term, fields=(t.fieldname,))
+                         for i, t in enumerate(spec.planted)))
+    initial = full.without_ids([hold_back]) if hold_back is not None else full
+    bus, ostore = ControlBus(), ObjectStore()
+    proc = StreamProcessor(compile_bundle(initial, spec.content_fields),
+                           bus=bus, store=ostore)
+    store = SegmentStore(segment_size=segment_size, root=tmp_path,
+                         index_fields=spec.content_fields)
+    updater = MatcherUpdater(ostore, bus, spec.content_fields,
+                             initial=initial)
+    from repro.data.pipeline import IngestPipeline
+    IngestPipeline(gen, store, proc).run(batch_size=1000)
+    mapper = QueryMapper(initial, version_id=0)
+    engine = QueryEngine(store, mapper=mapper, shards=shards)
+    return dict(spec=spec, gen=gen, full=full, initial=initial, bus=bus,
+                ostore=ostore, proc=proc, store=store, updater=updater,
+                mapper=mapper, engine=engine)
+
+
+def activate_full_ruleset(w):
+    h = w["updater"].submit(w["full"], asynchronous=False)
+    assert h.published, h.error
+    w["proc"].poll_updates()
+    w["mapper"].notify(w["full"], version_id=w["proc"].active_version_id)
+
+
+def ingest_more(w, num_records, seed):
+    spec = WorkloadSpec(num_records=num_records,
+                        ultra_rate=w["spec"].ultra_rate,
+                        high_rate=w["spec"].high_rate, seed=seed,
+                        text_width=w["spec"].text_width)
+    from repro.data.pipeline import IngestPipeline
+    IngestPipeline(LogGenerator(spec), w["store"], w["proc"]).run(
+        batch_size=1000)
+
+
+def assert_matches_pull(w, sq, q):
+    """The maintained view must be bit-identical to a cold re-plan: count
+    equals the fluxsieve pull path AND the enrichment-free full-scan
+    oracle; copy mode returns the same physical records."""
+    r = sq.refresh()
+    pull = w["engine"].execute(q, path="auto")
+    scan = w["engine"].execute(q, path="full_scan")
+    assert not r.partial, r.failed_segment_ids
+    assert r.count == pull.count == scan.count
+    if q.mode == "copy":
+        for f, col in pull.records.columns.items():
+            assert np.array_equal(r.records.columns[f], col), f
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Maintained-vs-pull equivalence
+# ---------------------------------------------------------------------------
+
+def test_standing_tracks_seals(tmp_path):
+    w = make_world(tmp_path)
+    t = w["spec"].planted[1]
+    q = Query(terms=((t.fieldname, t.term),), mode="count")
+    sq = w["engine"].register_standing(q, name="seals")
+    assert sq.refresh().count == w["gen"].true_count(t)
+
+    folds0 = sq.folds
+    ingest_more(w, 3000, seed=21)           # two more seal epochs
+    assert sq.folds > folds0                # folds rode the epoch feed
+    assert_matches_pull(w, sq, q)
+
+
+def test_standing_refresh_is_o_changed_segments(tmp_path):
+    """The maintained view's steady state: refresh after refresh touches
+    NO segment; one apply_update epoch folds exactly that one segment."""
+    w = make_world(tmp_path)
+    t = w["spec"].planted[1]
+    q = Query(terms=((t.fieldname, t.term),), mode="count")
+    sq = w["engine"].register_standing(q, name="odelta")
+    assert sq.segments_folded == len(w["store"].segments)
+
+    folded0, folds0 = sq.segments_folded, sq.folds
+    sq.refresh()
+    sq.refresh()
+    assert (sq.segments_folded, sq.folds) == (folded0, folds0)
+
+    # one segment's enrichment swaps -> exactly one segment refolds
+    w["store"].segments[2].apply_update(meta_updates={"touched": True})
+    assert sq.segments_folded == folded0 + 1
+    r = sq.refresh()
+    assert sq.segments_folded == folded0 + 1    # refresh folded nothing
+    assert r.count == w["gen"].true_count(t)
+
+
+def test_standing_copy_mode_records_identical(tmp_path):
+    w = make_world(tmp_path)
+    t = w["spec"].planted[1]
+    q = Query(terms=((t.fieldname, t.term),), mode="copy")
+    sq = w["engine"].register_standing(q, name="copy")
+    r = assert_matches_pull(w, sq, q)
+    texts = decode_texts(r.records.columns[t.fieldname])
+    assert all(t.term in x for x in texts)
+    ingest_more(w, 1500, seed=22)
+    assert_matches_pull(w, sq, q)
+
+
+def test_standing_drop_epochs_fold_nothing(tmp_path):
+    """Cache drops change residency, not results — a fold would re-warm
+    what the cold-run semantics need cold."""
+    w = make_world(tmp_path)
+    t = w["spec"].planted[1]
+    sq = w["engine"].register_standing(
+        Query(terms=((t.fieldname, t.term),), mode="count"), name="drop")
+    sq.refresh()
+    folds0, folded0 = sq.folds, sq.segments_folded
+    for seg in w["store"].segments:
+        seg.drop_caches()
+    assert (sq.folds, sq.segments_folded) == (folds0, folded0)
+    assert sq.refresh().count == w["gen"].true_count(t)
+
+
+@pytest.mark.parametrize("seed", [5, 17])
+def test_standing_randomized_interleaved_epochs(tmp_path, seed):
+    """The tentpole invariant: across a randomized interleaving of every
+    epoch source — ingest seals, a late-rule rollout + backfill installs,
+    compaction replaces, retention stamps and retires — the maintained
+    result stays bit-identical to a cold pull-path re-plan after EVERY
+    step, in count and copy mode both."""
+    rng = np.random.default_rng(seed)
+    w = make_world(tmp_path, num_records=6000, segment_size=700,
+                   seed=seed, hold_back=0)
+    t = w["spec"].planted[1]
+    late = w["spec"].planted[0]
+    qc = Query(terms=((t.fieldname, t.term),), mode="count")
+    qr = Query(terms=((t.fieldname, t.term),), mode="copy")
+    ql = Query(terms=((late.fieldname, late.term),), mode="count")
+    e = w["engine"]
+    standing = [(e.register_standing(qc, name="rand-count"), qc),
+                (e.register_standing(qr, name="rand-copy"), qr),
+                (e.register_standing(ql, name="rand-late"), ql)]
+
+    backfill = BackfillWorker(w["store"], w["bus"], w["ostore"])
+    compactor = Compactor(w["store"], min_records=900, target_records=2500)
+    activated = False
+    extra_seed = 100 + seed
+    for step in range(10):
+        op = rng.integers(0, 5)
+        if op == 0:                         # seal epochs
+            extra_seed += 1
+            ingest_more(w, int(rng.integers(700, 2000)), seed=extra_seed)
+        elif op == 1:                       # rollout + backfill installs
+            if not activated:
+                activate_full_ruleset(w)
+                activated = True
+            backfill.run_cycle(max_segments=3)
+        elif op == 2:                       # compaction replaces
+            compactor.run_cycle(max_merges=1)
+        elif op == 3:                       # retention stamp + retire
+            ts = sorted(s.meta["ts_min"] for s in w["store"].segments)
+            if len(ts) > 3:
+                horizon = ts[1] + 1         # expires ~1 segment, straddles 1
+                RetentionWorker(w["store"],
+                                RetentionPolicy(horizon=horizon)).run_cycle()
+        else:                               # meta-only enrichment swap
+            segs = w["store"].segments
+            segs[int(rng.integers(0, len(segs)))].apply_update(
+                meta_updates={"step": step})
+        for sq, q in standing:
+            assert_matches_pull(w, sq, q)
+    assert len(w["store"].segments) > 0
+
+
+def test_standing_sharded_engine(tmp_path):
+    """Folds route through the sharded executor with the same equivalence
+    (and the weighted shard affinity is the engine default)."""
+    w = make_world(tmp_path, shards=3)
+    assert w["engine"].executor.affinity == "weighted"
+    t = w["spec"].planted[1]
+    q = Query(terms=((t.fieldname, t.term),), mode="count")
+    sq = w["engine"].register_standing(q, name="sharded")
+    ingest_more(w, 3000, seed=31)
+    assert_matches_pull(w, sq, q)
+
+
+# ---------------------------------------------------------------------------
+# Honest degradation + healing
+# ---------------------------------------------------------------------------
+
+def test_standing_fold_fault_partial_then_heals(tmp_path):
+    """An injected ``standing.fold`` error marks exactly the fold's
+    segments failed: refresh reports honest partial/coverage, and once the
+    fault clears the next pass heals the failed set."""
+    w = make_world(tmp_path)
+    t = w["spec"].planted[1]
+    truth = w["gen"].true_count(t)
+    q = Query(terms=((t.fieldname, t.term),), mode="count")
+    sq = w["engine"].register_standing(q, name="faulty")
+    assert sq.refresh().count == truth
+
+    faults.reset()
+    try:
+        # first shot kills the seal-epoch fold, second kills the heal
+        # attempt inside the next refresh -> the partial is observable
+        faults.inject("standing.fold", "error", times=2)
+        ingest_more(w, 1500, seed=41)
+        r = sq.refresh()
+        assert r.partial
+        assert r.segments_failed == 1
+        assert r.coverage < 1.0
+        new_sid = w["store"].segments[-1].segment_id
+        assert new_sid in r.failed_segment_ids
+        # served segments still answer: the old store's worth of matches
+        assert r.count == truth
+    finally:
+        faults.reset()
+
+    # fault cleared: the refresh heal pass refolds the failed segment
+    r2 = sq.refresh()
+    assert not r2.partial
+    assert r2.count == w["engine"].execute(q, path="fluxsieve").count
+    assert r2.count >= truth
+
+
+def test_standing_close_and_registry(tmp_path):
+    w = make_world(tmp_path)
+    t = w["spec"].planted[1]
+    q = Query(terms=((t.fieldname, t.term),), mode="count")
+    sq = w["engine"].register_standing(q, name="dup")
+    with pytest.raises(ValueError):
+        w["engine"].register_standing(q, name="dup")
+    assert w["engine"]._standing.get("dup") is sq
+
+    folds0 = sq.folds
+    sq.close()
+    ingest_more(w, 1500, seed=51)           # epochs after close: ignored
+    assert sq.folds == folds0
+    with pytest.raises(RuntimeError):
+        sq.refresh()
+    assert w["engine"]._standing.get("dup") is None
+    # the name frees up for a fresh registration
+    sq2 = w["engine"].register_standing(q, name="dup")
+    assert sq2.refresh().count == \
+        w["engine"].execute(q, path="fluxsieve").count
