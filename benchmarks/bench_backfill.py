@@ -18,17 +18,31 @@ work per run regardless of N — and reports wall-clock convergence,
 aggregate backfill throughput, and the scaling ratio vs the 1-worker lane.
 Matcher compilation is warmed and shared (``matcher_cache``) so lanes
 compare matching throughput, not compile time.
+
+The ``backfill_scale_procs_w{N}`` lanes run the same race with
+``ProcessMaintenancePool`` — real OS processes over the durable control
+plane — and carry TWO calibrated ceilings: ``cpu_ceiling_x`` (two
+interpreters, the hardware limit) and ``single_process_ceiling_x`` (two
+threads under one GIL).  Scaling above the latter is the escape-the-GIL
+evidence the thread lanes structurally cannot produce.
 """
 from __future__ import annotations
 
+import shutil
+import statistics
 import subprocess
 import sys
+import tempfile
+import threading
 import time
+from pathlib import Path
 
-from repro.core.control_plane import ControlBus
+from repro.core.control_plane import (CONTROL_DIRNAME, ControlBus,
+                                      DurableControlBus)
 from repro.core.maintenance import (BackfillWorker, MaintenancePolicy,
                                     MaintenanceScheduler,
-                                    MaintenanceWorkerPool)
+                                    MaintenanceWorkerPool,
+                                    ProcessMaintenancePool)
 from repro.core.matcher import compile_bundle
 from repro.core.object_store import ObjectStore
 from repro.core.patterns import Rule, RuleSet
@@ -45,26 +59,62 @@ from benchmarks.common import (Measurement, bootstrap_median, measure,
                                planted_ruleset)
 
 
-def _cpu_ceiling(seconds: float = 0.5) -> float:
-    """Aggregate CPU scaling this box ACTUALLY offers two concurrent
-    processes (pure busy-loop calibration, separate interpreters, no GIL,
-    no XLA): the hardware ceiling for ANY 2-worker wall-clock scaling
-    measurement.  On dedicated 2+-core hosts this is ~2.0; on shared/SMT/
-    burst-throttled CI boxes it can be well under 1.5 — in which case the
-    ``efficiency`` column (scaling / ceiling), not raw ``scaling_x``, is
-    the number that transfers across machines."""
+def _cpu_ceilings(seconds: float = 0.3, probes: int = 5) -> dict:
+    """Calibrate the aggregate CPU scaling this box ACTUALLY offers two
+    concurrent workers, two ways:
+
+      * ``process`` — two separate interpreters (no GIL, no XLA): the
+        HARDWARE ceiling for any 2-process wall-clock scaling.  ~2.0 on a
+        dedicated 2+-core host, ~1.0 on a 1-core box;
+      * ``single_process`` — two busy threads in ONE interpreter: the GIL
+        ceiling a thread pool can never exceed for pure-Python work (~1.0
+        everywhere).  Process-model lanes beating THIS number is the
+        escape-the-GIL evidence.
+
+    Probes are interleaved — every probe measures its own 1-worker baseline
+    immediately before its 2-worker burn, so load drift (noisy CI
+    neighbors, thermal throttling) hits numerator and denominator alike —
+    and each ceiling reports ``{min, median, max}`` across ``probes``
+    rounds: the spread IS the signal on a shared box, and a single-shot
+    number (the old behavior) can swing 2x between runs."""
     code = ("import time\nt0=time.perf_counter()\nx=0\n"
             f"while time.perf_counter()-t0 < {seconds}: x+=1\n"
             "print(x)")
 
-    def burn(n):
+    def burn_procs(n):
         ps = [subprocess.Popen([sys.executable, "-c", code],
                                stdout=subprocess.PIPE, text=True)
               for _ in range(n)]
         return sum(int(p.communicate()[0]) for p in ps)
 
-    one = burn(1)
-    return burn(2) / max(one, 1)
+    def burn_threads(n):
+        counts = [0] * n
+        stop = time.perf_counter() + seconds
+
+        def loop(i):
+            x = 0
+            while time.perf_counter() < stop:
+                x += 1
+            counts[i] = x
+
+        ts = [threading.Thread(target=loop, args=(i,)) for i in range(n)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        return sum(counts)
+
+    proc_ratios, thread_ratios = [], []
+    for _ in range(max(1, probes)):
+        proc_ratios.append(burn_procs(2) / max(burn_procs(1), 1))
+        thread_ratios.append(burn_threads(2) / max(burn_threads(1), 1))
+
+    def spread(ratios):
+        return {"min": min(ratios), "median": statistics.median(ratios),
+                "max": max(ratios)}
+
+    return {"process": spread(proc_ratios),
+            "single_process": spread(thread_ratios)}
 
 
 def scaling_lanes(*, num_records: int = 24_000, segment_size: int = 1_500,
@@ -134,20 +184,118 @@ def scaling_lanes(*, num_records: int = 24_000, segment_size: int = 1_500,
             base = med
         else:
             scaling = base / max(med, 1e-9)
-            ceiling = _cpu_ceiling()
+            ceil = _cpu_ceilings()["process"]
             derived["scaling_x"] = f"{scaling:.2f}x"
-            derived["cpu_ceiling_x"] = f"{ceiling:.2f}x"
-            derived["efficiency"] = f"{scaling / max(ceiling, 1e-9):.2f}"
+            derived["cpu_ceiling_x"] = f"{ceil['median']:.2f}x"
+            derived["cpu_ceiling_spread"] = \
+                f"{ceil['min']:.2f}..{ceil['max']:.2f}"
+            derived["efficiency"] = \
+                f"{scaling / max(ceil['median'], 1e-9):.2f}"
         rows.append(Measurement(name=f"backfill_scale_w{w}", median_s=med,
                                 ci_lo=lo, ci_hi=hi, runs=repeats,
                                 derived=derived))
     return rows
 
 
+def process_scaling_lanes(*, num_records: int = 24_000,
+                          segment_size: int = 1_500, num_rules: int = 32,
+                          late_rules: int = 4, workers: tuple = (1, 2),
+                          repeats: int = 3, seed: int = 11) -> list:
+    """The scaling race again, but with ``ProcessMaintenancePool`` — N real
+    OS processes over a spilled store and the durable control plane, no
+    shared interpreter.  This is the lane the GIL cannot cap: on a
+    multi-core box the 2-process row's ``scaling_x`` should land ABOVE the
+    same-run ``single_process`` (GIL) ceiling and track the ``process``
+    (hardware) ceiling.  ``beats_single_process_ceiling`` records exactly
+    that comparison — honestly: on a 1-core host both ceilings are ~1.0
+    and the flag stays false; no assertion hides it."""
+    spec = WorkloadSpec(num_records=num_records, ultra_rate=2e-5,
+                        high_rate=2e-4, seed=seed)
+    gen = LogGenerator(spec)
+    full = planted_ruleset(spec, num_rules)
+    late_ids = list(range(min(late_rules, len(spec.planted))))
+    initial = full.without_ids(late_ids)
+    prime = RuleSet(tuple(
+        Rule(r.rule_id, r.name, r.pattern + "Zz9", fields=r.fields)
+        if r.rule_id in set(late_ids) else r for r in full.rules))
+
+    tmp = Path(tempfile.mkdtemp(prefix="fluxsieve-bench-procs-"))
+    try:
+        bus = DurableControlBus(tmp / CONTROL_DIRNAME)
+        ostore = ObjectStore(root=tmp / "objects")
+        proc = StreamProcessor(compile_bundle(initial, spec.content_fields),
+                               bus=bus, store=ostore)
+        store = SegmentStore(segment_size=segment_size, root=tmp)
+        updater = MatcherUpdater(ostore, bus, spec.content_fields,
+                                 initial=initial)
+        IngestPipeline(gen, store, proc).run(batch_size=4096)
+        n_seg = len(store.segments)
+
+        state = {"cur": initial}
+
+        def flip():
+            nxt = prime if state["cur"] in (initial, full) else full
+            state["cur"] = nxt
+            h = updater.submit(nxt, asynchronous=False)
+            assert h.published, h.error
+
+        rows, base = [], None
+        for w in workers:
+            pool = ProcessMaintenancePool(
+                tmp, store=store, objects_root=tmp / "objects",
+                num_workers=w, worker_prefix=f"benchp{w}",
+                segment_size=segment_size)
+            try:
+                # warmup: both flip variants converge untimed — child
+                # matcher caches and jit warm, spawn/import cost excluded
+                for _ in range(2):
+                    flip()
+                    pool.run_until_converged()
+                samples = []
+                for _ in range(repeats):
+                    flip()
+                    t0 = time.perf_counter()
+                    rep = pool.run_until_converged()
+                    dt = time.perf_counter() - t0
+                    assert rep.pending_after == 0, "lane did not converge"
+                    samples.append(dt)
+            finally:
+                pool.close()
+            med, lo, hi = bootstrap_median(samples)
+            derived = {"workers": w, "segments": n_seg,
+                       "records": num_records, "model": "process",
+                       "records_per_s":
+                           f"{num_records / max(med, 1e-9):,.0f}"}
+            if base is None:
+                base = med
+            else:
+                scaling = base / max(med, 1e-9)
+                ceil = _cpu_ceilings()
+                hw, gil = ceil["process"], ceil["single_process"]
+                derived["scaling_x"] = f"{scaling:.2f}x"
+                derived["cpu_ceiling_x"] = f"{hw['median']:.2f}x"
+                derived["cpu_ceiling_spread"] = \
+                    f"{hw['min']:.2f}..{hw['max']:.2f}"
+                derived["single_process_ceiling_x"] = \
+                    f"{gil['median']:.2f}x"
+                derived["single_process_ceiling_spread"] = \
+                    f"{gil['min']:.2f}..{gil['max']:.2f}"
+                derived["efficiency"] = \
+                    f"{scaling / max(hw['median'], 1e-9):.2f}"
+                derived["beats_single_process_ceiling"] = \
+                    scaling > gil["median"]
+            rows.append(Measurement(name=f"backfill_scale_procs_w{w}",
+                                    median_s=med, ci_lo=lo, ci_hi=hi,
+                                    runs=repeats, derived=derived))
+        return rows
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 def run(*, num_records: int = 60_000, segment_size: int = 5_000,
         num_rules: int = 200, runs: int = 5, workers: tuple = (1, 2),
-        scale_records: int = 24_000, scale_segment: int = 1_500,
-        scale_repeats: int = 3) -> list:
+        process_workers: tuple = (1, 2), scale_records: int = 24_000,
+        scale_segment: int = 1_500, scale_repeats: int = 3) -> list:
     spec = WorkloadSpec(num_records=num_records, ultra_rate=2e-5,
                         high_rate=2e-4, seed=7)
     gen = LogGenerator(spec)
@@ -224,9 +372,16 @@ def run(*, num_records: int = 60_000, segment_size: int = 5_000,
         rows.extend(scaling_lanes(num_records=scale_records,
                                   segment_size=scale_segment,
                                   workers=workers, repeats=scale_repeats))
+    if process_workers:
+        rows.extend(process_scaling_lanes(num_records=scale_records,
+                                          segment_size=scale_segment,
+                                          workers=process_workers,
+                                          repeats=scale_repeats))
     return rows
 
 
 if __name__ == "__main__":
     from benchmarks.common import print_rows
-    print_rows(run(num_records=20_000, segment_size=2_000, runs=3))
+    print_rows(run(num_records=20_000, segment_size=2_000, runs=3,
+                   scale_records=8_000, scale_segment=1_000,
+                   scale_repeats=2))

@@ -1,7 +1,7 @@
 """Query-plane benchmark: planner/executor lanes + concurrent clients +
 arrangement-sharing regimes.
 
-Three parts, one shared world (planted workload + 1000 rules, plus two
+Four parts, one shared world (planted workload + 1000 rules, plus two
 deliberately DENSE rules whose posting lists are suppressed by the density
 cut — queries over them land in the batched bitmap-scan class):
 
@@ -20,7 +20,13 @@ cut — queries over them land in the batched bitmap-scan class):
     column) vs ``shared`` (all clients lease ONE refcounted arrangement
     plane) vs ``shared+sharded`` (shared plane + sharded query workers);
     each lane reports H2D bytes, device-memory high-water, and per-column
-    upload multiplicity alongside p50/p99.
+    upload multiplicity alongside p50/p99;
+  * the ``query_process_shards`` lane: the same mix over a
+    ``ProcessQueryPool`` — shard *processes* (not threads) each leasing a
+    private arrangement plane over the spilled store, counts cross-checked
+    against the in-process ``ref`` lane.  Each shard reports its own H2D
+    bytes and per-column upload multiplicity (exactly 1 per epoch per
+    process — Shared Arrangements held across the GIL boundary).
 """
 from __future__ import annotations
 
@@ -36,6 +42,7 @@ from repro.core.matcher import compile_bundle
 from repro.core.patterns import Rule
 from repro.core.query.engine import Query, QueryEngine
 from repro.core.query.mapper import QueryMapper
+from repro.core.query.process_shards import ProcessQueryPool
 from repro.core.query.store import SegmentStore
 from repro.core.stream_processor import StreamProcessor
 from repro.data.generator import LogGenerator, WorkloadSpec
@@ -67,7 +74,7 @@ def _build(num_records: int, segment_size: int, root: str):
         "pallas": QueryEngine(store, mapper=mapper, backend="pallas",
                               block_n=8192),
     }
-    return spec, store, engines
+    return spec, store, engines, ruleset
 
 
 def _queries(spec) -> dict:
@@ -137,9 +144,10 @@ def _run_clients(engine_for, qlist, *, clients, rounds, seed_base=0):
 
 
 def run(*, num_records: int = 120_000, segment_size: int = 10_000,
-        clients: int = 12, rounds: int = 6, runs_hot: int = 7) -> list:
+        clients: int = 12, rounds: int = 6, runs_hot: int = 7,
+        process_shards: int = 2) -> list:
     tmp = tempfile.mkdtemp(prefix="query-conc-")
-    spec, store, engines = _build(num_records, segment_size, tmp)
+    spec, store, engines, ruleset = _build(num_records, segment_size, tmp)
     qs = _queries(spec)
     rows = []
 
@@ -247,6 +255,56 @@ def run(*, num_records: int = 120_000, segment_size: int = 10_000,
                      "uploads_per_column":
                          f"{max(up) if up else 0}",
                      "clients": clients}))
+
+    # -- part 4: process-backed shards (the lane the GIL cannot cap) -------
+    if process_shards:
+        pool = ProcessQueryPool(tmp, ruleset, shards=process_shards,
+                                backend="ref")
+        try:
+            lats, counts = [], {}
+            for qname, q in qs.items():     # warm: per-shard jit + uploads
+                mode = "ids" if q.mode == "copy" else "count"
+                r = pool.execute(q.terms, mode=mode)
+                assert not r.partial, f"{qname}: shard failure during warm"
+                counts[qname] = r.count
+            for qname, q in qs.items():     # cross-check vs in-process ref
+                expect = engines["ref"].execute(q, path="fluxsieve").count
+                assert counts[qname] == expect, \
+                    (qname, counts[qname], expect)
+            t0 = time.perf_counter()
+            for _ in range(rounds):
+                for q in qs.values():
+                    mode = "ids" if q.mode == "copy" else "count"
+                    r = pool.execute(q.terms, mode=mode)
+                    assert not r.partial
+                    lats.append(r.latency_s)
+            wall = time.perf_counter() - t0
+            per_shard = [s for s in pool.stats() if s is not None]
+            # each shard is one process with a PRIVATE arrangement store:
+            # every word column it serves crossed H2D exactly once across
+            # warm + measured — multiplicity 1 per epoch per process
+            up_max = max((max(s["uploads_per_column"].values(), default=0)
+                          for s in per_shard), default=0)
+            arr = np.asarray(lats)
+            rows.append(Measurement(
+                name=f"query_process_shards/s{process_shards}/ref",
+                median_s=float(np.percentile(arr, 50)),
+                ci_lo=float(np.percentile(arr, 25)),
+                ci_hi=float(np.percentile(arr, 75)),
+                runs=len(arr),
+                derived={
+                    "p99_us": f"{float(np.percentile(arr, 99)) * 1e6:.1f}",
+                    "qps": f"{len(arr) / max(wall, 1e-9):.0f}",
+                    "shards": process_shards,
+                    "uploads_per_column_per_proc": up_max,
+                    "h2d_mb_by_shard": ",".join(
+                        f"{s['h2d_bytes'] / 1e6:.2f}" for s in per_shard),
+                    "segments_by_shard": ",".join(
+                        str(s["segments"]) for s in per_shard)}))
+            assert up_max <= 1, \
+                f"per-process upload multiplicity {up_max} > 1"
+        finally:
+            pool.close()
     return rows
 
 

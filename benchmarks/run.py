@@ -96,9 +96,12 @@ def main(argv=None) -> int:
                           else 2_000 if args.quick else 5_000),
             runs=2 if args.smoke else 3 if args.quick else 5,
             workers=(1, 2),
+            # process lanes run even in smoke (one spawn-pool backfill
+            # lane) so the durable-control-plane path regresses loudly
+            process_workers=(1, 2),
             scale_records=12_000 if args.smoke or args.quick else 24_000,
             scale_segment=1_500,
-            scale_repeats=3 if args.smoke else 3 if args.quick else 5),
+            scale_repeats=2 if args.smoke else 3 if args.quick else 5),
         "standing": entry(
             bench_standing.run,
             tiers=((6, 12) if args.smoke
@@ -114,7 +117,8 @@ def main(argv=None) -> int:
                           else 5_000 if args.quick else 10_000),
             clients=4 if args.smoke else 8 if args.quick else 12,
             rounds=2 if args.smoke else 4 if args.quick else 6,
-            runs_hot=3 if args.smoke else 5 if args.quick else 7),
+            runs_hot=3 if args.smoke else 5 if args.quick else 7,
+            process_shards=2),
     }
     if args.only and args.only not in suite:
         print(f"unknown bench {args.only!r} (available: {', '.join(suite)})",

@@ -7,8 +7,10 @@ well-formed sample, every ``# TYPE`` must name a known metric kind, every
 sample must belong to a declared metric (histogram samples via their
 ``_bucket``/``_sum``/``_count`` suffixes), histogram bucket series must be
 cumulative with a terminal ``le="+Inf"``, and metric/label names must match
-the Prometheus grammar.  Deliberately dependency-free — the point is that
-any scraper would accept the file, checked without shipping one.
+the Prometheus grammar.  Bucket lines may carry OpenMetrics exemplar
+suffixes (`` # {span_id="1234"} 0.0371``) — validated when present, never
+required.  Deliberately dependency-free — the point is that any scraper
+would accept the file, checked without shipping one.
 
     python scripts/check_prom_format.py /tmp/telemetry/metrics.prom
 """
@@ -21,9 +23,11 @@ import sys
 NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
 SAMPLE_RE = re.compile(
     r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
-    r"(?:\{(?P<labels>.*)\})?"
-    r" (?P<value>[^ ]+)"
-    r"(?: (?P<ts>-?\d+))?$")
+    r"(?:\{(?P<labels>.*?)\})?"
+    r" (?P<value>[^ #]+)"
+    r"(?: (?P<ts>-?\d+))?"
+    r"(?: # \{(?P<ex_labels>[^}]*)\} (?P<ex_value>[^ ]+)"
+    r"(?: (?P<ex_ts>-?\d+(?:\.\d+)?))?)?$")
 LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
 KINDS = {"counter", "gauge", "histogram", "summary", "untyped"}
 HIST_SUFFIXES = ("_bucket", "_sum", "_count")
@@ -89,6 +93,14 @@ def check_text(text: str) -> list:
         except ValueError:
             err(f"non-numeric value {m.group('value')!r}")
             continue
+        if m.group("ex_labels") is not None:
+            _parse_labels(m.group("ex_labels"), err)
+            try:
+                float(m.group("ex_value"))
+            except ValueError:
+                err(f"non-numeric exemplar value {m.group('ex_value')!r}")
+            if not name.endswith("_bucket"):
+                err(f"exemplar on non-bucket sample {name}")
         base = _base_name(name, types)
         if base not in types:
             err(f"sample {name} has no preceding # TYPE")

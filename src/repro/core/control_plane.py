@@ -3,13 +3,30 @@
 Semantics preserved: named topics; ordered, durable, at-least-once delivery;
 per-consumer-group offsets (poll without commit re-delivers); small messages
 only (the payload is an ObjectRef, never the compiled engine itself — the
-paper's "reference-based distribution model").  Thread-safe, in-process.
+paper's "reference-based distribution model").
+
+Two backends share one surface:
+
+  * ``ControlBus`` — in-memory, thread-safe, in-process.  The default for
+    tests and the thread worker model.
+  * ``DurableControlBus`` — file-backed under a root directory so the same
+    at-least-once contract holds across OS *processes*: each topic is an
+    append-only JSONL log (appends serialized by an ``flock``), each
+    (topic, group) committed offset is its own small JSON file written
+    atomically (tmp + ``os.replace``, like the store manifest).  Any number
+    of processes may open the same root; a process that crashes between
+    processing and committing simply re-reads the uncommitted window on
+    restart — exactly the redelivery the in-memory bus gives a thread that
+    never called ``commit``.
 """
 from __future__ import annotations
 
+import json
+import os
 import threading
 import time
 from dataclasses import dataclass, field
+from pathlib import Path
 
 from repro.core import faults
 
@@ -20,6 +37,10 @@ MATCHER_ACKS = "matcher-acks"
 # workers ack once historical segments are re-enriched for a version
 SEGMENT_MAINTENANCE = "segment-maintenance"
 MAINTENANCE_ACKS = "maintenance-acks"
+
+# conventional location of the durable bus (and lease table) under a store
+# root — launchers and process pools agree on <store_root>/<CONTROL_DIRNAME>
+CONTROL_DIRNAME = "control-bus"
 
 
 @dataclass(frozen=True)
@@ -68,6 +89,13 @@ class ControlBus:
         return msgs
 
     def commit(self, topic: str, group: str, offset: int) -> None:
+        """Advance the group's committed offset (never rewinds).  The
+        ``bus.commit`` fault site fires BEFORE the offset moves: a crash
+        here models the classic consume/commit window — the work was done
+        but the offset was not persisted, so the same messages redeliver
+        (at-least-once, consumers must be idempotent)."""
+        if faults.armed():
+            faults.fire("bus.commit", topic=topic, group=group)
         with self._lock:
             cur = self._offsets.get((topic, group), 0)
             self._offsets[(topic, group)] = max(cur, offset + 1)
@@ -80,3 +108,179 @@ class ControlBus:
         """Raw log read (used by the updater to watch acks)."""
         with self._lock:
             return list(self._topics.get(topic, [])[start:])
+
+
+class DurableControlBus:
+    """File-backed ``ControlBus`` — same surface, cross-process semantics.
+
+    Layout under ``root``::
+
+        topics/<topic>.log    append-only JSONL, one message per line
+        topics/<topic>.lock   flock serializing appends (and log repair)
+        offsets/<topic>--<group>.json   committed offset, atomic replace
+
+    Appends happen under the topic's ``flock`` and are flushed + fsynced
+    before the lock drops, so a message whose ``publish`` returned is
+    durable and every process sees a consistent prefix.  A writer killed
+    mid-append can leave a torn (newline-less) final line; readers ignore
+    it and the next publisher truncates it away under the lock — the torn
+    message was never acknowledged to anyone, so nothing is lost.
+
+    Offset commits are one small JSON file per (topic, group), written
+    tmp + ``os.replace`` like the store manifest: a crash leaves either
+    the old offset (redelivery — at-least-once) or the new one, never a
+    torn file.  ``commit`` never rewinds an offset, so a delayed commit
+    racing a newer one is harmless.
+
+    Instances keep an in-process parse cache per topic (byte watermark +
+    decoded messages) so polling is O(new bytes), not O(log).
+    """
+
+    def __init__(self, root):
+        self.root = Path(root)
+        self._topics_dir = self.root / "topics"
+        self._offsets_dir = self.root / "offsets"
+        self._topics_dir.mkdir(parents=True, exist_ok=True)
+        self._offsets_dir.mkdir(parents=True, exist_ok=True)
+        self._lock = threading.RLock()
+        self._cache: dict = {}      # topic -> [Message] (parsed prefix)
+        self._parsed: dict = {}     # topic -> byte watermark of the prefix
+
+    # -- file plumbing -----------------------------------------------------
+    def _log_path(self, topic: str) -> Path:
+        return self._topics_dir / f"{topic}.log"
+
+    def _offset_path(self, topic: str, group: str) -> Path:
+        # groups contain "/" (e.g. "maintenance/maint-0"); keep one flat,
+        # reversible file per (topic, group)
+        safe = f"{topic}--{group}".replace("/", "__")
+        return self._offsets_dir / f"{safe}.json"
+
+    def _topic_flock(self, topic: str):
+        import fcntl
+
+        class _Held:
+            def __init__(self, path):
+                self._f = open(path, "a+")
+
+            def __enter__(self):
+                fcntl.flock(self._f.fileno(), fcntl.LOCK_EX)
+                return self._f
+
+            def __exit__(self, *exc):
+                fcntl.flock(self._f.fileno(), fcntl.LOCK_UN)
+                self._f.close()
+                return False
+
+        return _Held(self._topics_dir / f"{topic}.lock")
+
+    def _refresh(self, topic: str) -> list:
+        """Parse any bytes appended since the last look.  Returns the full
+        decoded log.  A trailing torn line (no newline — a writer died
+        mid-append) is left unparsed; the watermark stays before it."""
+        msgs = self._cache.setdefault(topic, [])
+        start = self._parsed.get(topic, 0)
+        path = self._log_path(topic)
+        try:
+            with open(path, "rb") as f:
+                f.seek(start)
+                chunk = f.read()
+        except FileNotFoundError:
+            return msgs
+        if not chunk:
+            return msgs
+        end = chunk.rfind(b"\n")
+        if end < 0:
+            return msgs                      # only a torn tail so far
+        for line in chunk[:end].split(b"\n"):
+            if not line.strip():
+                continue
+            rec = json.loads(line)
+            msgs.append(Message(topic=topic, offset=int(rec["offset"]),
+                                value=rec["value"],
+                                timestamp=float(rec["timestamp"])))
+        self._parsed[topic] = start + end + 1
+        return msgs
+
+    # -- bus surface -------------------------------------------------------
+    def publish(self, topic: str, value: dict) -> int:
+        with self._lock:
+            with self._topic_flock(topic):
+                path = self._log_path(topic)
+                msgs = self._refresh(topic)
+                # repair: drop a torn tail left by a killed writer before
+                # appending after it (it was never durable/acknowledged)
+                watermark = self._parsed.get(topic, 0)
+                try:
+                    size = path.stat().st_size
+                except FileNotFoundError:
+                    size = 0
+                if size > watermark:
+                    with open(path, "rb+") as f:
+                        f.truncate(watermark)
+                offset = len(msgs)
+                rec = {"offset": offset, "value": dict(value),
+                       "timestamp": time.time()}
+                line = json.dumps(rec, sort_keys=True) + "\n"
+                with open(path, "a", encoding="utf-8") as f:
+                    f.write(line)
+                    f.flush()
+                    os.fsync(f.fileno())
+                self._cache[topic].append(
+                    Message(topic=topic, offset=offset, value=dict(value),
+                            timestamp=rec["timestamp"]))
+                self._parsed[topic] = watermark + len(line.encode("utf-8"))
+                return offset
+
+    def poll(self, topic: str, group: str, max_messages: int = 100) -> list:
+        """Same contract (and the same ``bus.deliver`` fault hooks) as the
+        in-memory bus: the uncommitted window, redelivered until commit."""
+        with self._lock:
+            log = self._refresh(topic)
+            start = self._read_offset(topic, group)
+            msgs = list(log[start:start + max_messages])
+        if faults.armed() and msgs:
+            action = faults.act("bus.deliver", topic=topic, group=group)
+            if action == "drop":
+                msgs = []
+            elif action == "dup":
+                msgs = msgs + msgs
+            elif action == "reorder":
+                msgs = list(reversed(msgs))
+        return msgs
+
+    def _read_offset(self, topic: str, group: str) -> int:
+        try:
+            state = json.loads(
+                self._offset_path(topic, group).read_text("utf-8"))
+            return int(state.get("offset", 0))
+        except (FileNotFoundError, ValueError):
+            return 0
+
+    def commit(self, topic: str, group: str, offset: int) -> None:
+        """Durably advance the group's offset (never rewinds).  The
+        ``bus.commit`` fault site fires BEFORE the atomic replace: a crash
+        in that window leaves the old offset on disk and the processed
+        messages redeliver on restart — the at-least-once crash window the
+        durable-bus tests exercise with real processes."""
+        if faults.armed():
+            faults.fire("bus.commit", topic=topic, group=group)
+        with self._lock:
+            path = self._offset_path(topic, group)
+            cur = self._read_offset(topic, group)
+            new = max(cur, int(offset) + 1)
+            if new == cur:
+                return
+            tmp = path.with_name(path.name + ".tmp")
+            tmp.write_text(json.dumps({"offset": new}), "utf-8")
+            os.replace(tmp, path)
+
+    def end_offset(self, topic: str) -> int:
+        with self._lock:
+            return len(self._refresh(topic))
+
+    def messages(self, topic: str, start: int = 0) -> list:
+        """Raw log read (used by the updater to watch acks and by workers
+        for recovery replay)."""
+        with self._lock:
+            return list(self._refresh(topic)[start:])

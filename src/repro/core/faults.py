@@ -15,6 +15,7 @@ consult at named **injection sites**:
     ``store.spill``             sealed-segment spill I/O
     ``store.manifest_commit``   root-manifest commit
     ``bus.deliver``             control-bus delivery (drop/dup/reorder)
+    ``bus.commit``              consumer-group offset commit (durable bus)
     ``maintenance.checkpoint``  backfill checkpoint write
     ``query.shard``             sharded query-executor shard entry
     ``standing.fold``           standing-query delta fold (epoch feed)
@@ -64,6 +65,7 @@ SITES = (
     "store.spill",
     "store.manifest_commit",
     "bus.deliver",
+    "bus.commit",
     "maintenance.checkpoint",
     "query.shard",
     "standing.fold",

@@ -10,10 +10,15 @@ Cooperating pieces, all off the ingest path:
   * :class:`MaintenanceWorkerPool` — N backfill workers sharding the
     segment space by id hash, each with its own consumer-group offsets and
     per-shard convergence ack;
+  * :class:`ProcessMaintenancePool` — the same sharded pool as real OS
+    processes over a durable control plane (``DurableControlBus`` +
+    :class:`DurableLeaseManager`), surviving SIGKILL and escaping the GIL;
   * :class:`LeaseManager` — per-segment leases + epoch fencing: two
     maintenance writers can never interleave on one segment, and a crashed
     worker's lease expires instead of wedging its shard
     (:class:`FencedWriteError` is the write barrier's rejection);
+    :class:`DurableLeaseManager` persists the same table + epochs on disk
+    so the guarantee spans processes;
   * :class:`Compactor` — merges small sealed segments into right-sized
     ones, re-deriving zone maps and indexes, and physically drops
     retention-tombstoned rows during rewrites;
@@ -33,8 +38,10 @@ a converged segment is a no-op) so duplicate delivery is always safe.
 from repro.core.maintenance.backfill import (BackfillReport, BackfillWorker,
                                              merge_reports)
 from repro.core.maintenance.compactor import CompactionReport, Compactor
-from repro.core.maintenance.lease import (FencedWriteError, Lease,
+from repro.core.maintenance.lease import (DurableLeaseManager,
+                                          FencedWriteError, Lease,
                                           LeaseManager, shard_of)
+from repro.core.maintenance.process_pool import ProcessMaintenancePool
 from repro.core.maintenance.retention import (GCReport, RetentionPolicy,
                                               RetentionReport,
                                               RetentionWorker, SpillGC)
@@ -44,8 +51,9 @@ from repro.core.maintenance.workers import MaintenanceWorkerPool
 
 __all__ = [
     "BackfillReport", "BackfillWorker", "CompactionReport", "Compactor",
-    "FencedWriteError", "GCReport", "Lease", "LeaseManager",
-    "MaintenancePolicy", "MaintenanceScheduler", "MaintenanceWorkerPool",
-    "RetentionPolicy", "RetentionReport", "RetentionWorker", "SpillGC",
+    "DurableLeaseManager", "FencedWriteError", "GCReport", "Lease",
+    "LeaseManager", "MaintenancePolicy", "MaintenanceScheduler",
+    "MaintenanceWorkerPool", "ProcessMaintenancePool", "RetentionPolicy",
+    "RetentionReport", "RetentionWorker", "SpillGC",
     "merge_reports", "shard_of",
 ]

@@ -193,9 +193,14 @@ class BackfillWorker:
         # steady-state cycles diff just the newly sealed segments
         self._pending_ids: set = None   # None = needs full rescan
         self._scanned_upto = 0          # segment-id high-water mark
-        # (version, delta ids, fields) -> dict; shareable across a pool
+        # (version, delta ids, fields) -> dict; shareable across a THREAD
+        # pool (compiled engines are immutable/thread-safe).  NOT shared
+        # across processes: a ProcessMaintenancePool worker owns a
+        # private cache and warms it once per target version
+        # (``warm_matchers``) instead of silently recompiling.
         self._matchers: dict = matcher_cache if matcher_cache is not None \
             else {}
+        self._warmed_version = None     # target version last warmed for
         self._mem_ckpts: dict = {}      # sid -> (key, hwm, bm) for segments
                                         # without a spill path
 
@@ -377,6 +382,14 @@ class BackfillWorker:
             return rep
         rep.version = self._target.version
         candidates = self._refresh_pending()
+        if self._warmed_version != self._target.version:
+            # warm the compiled-matcher cache ONCE per installed target:
+            # every (delta, fields) engine this worker's shard will need is
+            # compiled up front, so per-cycle passes only ever hit the
+            # cache.  In the process model each worker owns its cache, so
+            # without an explicit warm the compile cost would repeat
+            # per-segment-shape per worker silently inside the timed pass.
+            self.warm_matchers(candidates)
         # a permanently failing segment must not starve healthy ones under a
         # tight budget: previously-failed segments only get budget once
         # everything else has converged
@@ -638,17 +651,51 @@ class BackfillWorker:
             except OSError as e:
                 telemetry.suppressed("maintenance.clear_checkpoint", e)
 
+    def warm_matchers(self, candidates: list = None) -> int:
+        """Precompile the delta matchers the current target needs over this
+        worker's pending segments.  Returns how many engines were compiled
+        (0 when the cache was already warm — the idempotent steady state).
+        Called automatically once per installed target version at the top
+        of the first cycle; safe to call explicitly (a process-pool worker
+        warms right after opening the store, before its first timed
+        cycle)."""
+        if self._target is None:
+            return 0
+        t = self._target
+        if candidates is None:
+            candidates = self._refresh_pending()
+        compiled = 0
+        for seg in candidates:
+            delta_ids, _removed = self.segment_delta(seg)
+            if not delta_ids:
+                continue
+            delta_rules = tuple(r for r in t.ruleset.rules
+                                if r.rule_id in set(delta_ids))
+            if self._matcher_key(delta_rules, seg) not in self._matchers:
+                self._matchers_for(delta_rules, seg)
+                compiled += 1
+        self._warmed_version = t.version
+        if compiled:
+            telemetry.emit("matcher_cache_warmed", plane="maintenance",
+                           worker=self.worker_id, version=t.version,
+                           compiled=compiled)
+        return compiled
+
+    def _matcher_key(self, delta_rules: tuple, seg) -> tuple:
+        fields = tuple(sorted(
+            name for name, (dtype, shape) in seg.meta["columns"].items()
+            if dtype == "uint8" and len(shape) == 2))
+        return (self._target.version,
+                tuple(r.rule_id for r in delta_rules), fields)
+
     def _matchers_for(self, delta_rules: tuple, seg) -> dict:
         """Compile (and cache) matchers for a delta sub-ruleset, keeping the
         ORIGINAL rule ids so emitted bitmaps OR straight into the segment's
         bitmap words."""
-        fields = tuple(sorted(
-            name for name, (dtype, shape) in seg.meta["columns"].items()
-            if dtype == "uint8" and len(shape) == 2))
-        key = (self._target.version,
-               tuple(r.rule_id for r in delta_rules), fields)
+        key = self._matcher_key(delta_rules, seg)
         if key not in self._matchers:
-            bundle = compile_bundle(RuleSet(delta_rules), fields)
+            bundle = compile_bundle(RuleSet(delta_rules),
+                                    key[2])     # the matchable fields
             self._matchers[key] = build_matchers(
                 bundle, backend=self.backend, block_n=self.block_n,
                 interpret=self.interpret)

@@ -31,9 +31,12 @@ holder.
 """
 from __future__ import annotations
 
+import json
+import os
 import threading
 import time
 from dataclasses import dataclass, field
+from pathlib import Path
 
 from repro.core import telemetry
 
@@ -192,3 +195,167 @@ class LeaseManager:
                     or cur.expires_at <= self.clock()):
                 return None
             return cur.holder
+
+
+class DurableLeaseManager:
+    """Cross-process lease table + fencing-epoch registry — the same
+    surface and fencing-token discipline as ``LeaseManager``, persisted as
+    one JSON document so leases and epochs coordinate writers in
+    *different OS processes*.
+
+    Layout under ``root`` (conventionally the store's ``control-bus/``
+    dir, next to the durable bus logs)::
+
+        leases.json   {"epochs": {sid: int}, "leases": {sid: {...}}}
+        leases.lock   flock serializing read-modify-write transactions
+
+    Invariants carried over from the in-memory manager, made durable:
+
+      * the epoch (and the lease that carries it) is written to disk —
+        tmp + ``os.replace`` while the ``flock`` is held — BEFORE
+        ``acquire`` returns, so a process restart can never re-issue an
+        epoch some write may already carry;
+      * ``check`` re-reads the durable state, so a SIGKILLed-then-
+        restarted stale holder is fenced by the successor epoch another
+        process granted while it was dead;
+      * expiry alone never rejects a write — only a successor epoch does.
+
+    The per-segment epoch registry lives here rather than in the store
+    manifest (where ``LeaseManager`` reserves its blocks): the manifest's
+    read-modify-write commit is single-writer by design, while this file
+    has exactly one writer at a time *by construction* (the flock is held
+    across the whole transaction).
+
+    ``clock`` defaults to wall time — ``time.monotonic`` is not comparable
+    across processes.
+    """
+
+    def __init__(self, root, *, ttl: float = 30.0, clock=time.time):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.path = self.root / "leases.json"
+        self._lockpath = self.root / "leases.lock"
+        self.ttl = float(ttl)
+        self.clock = clock
+        self._lock = threading.Lock()   # thread-safety within one process
+
+    # -- durable state -----------------------------------------------------
+    def _flock(self):
+        import fcntl
+
+        class _Held:
+            def __init__(self, path):
+                self._f = open(path, "a+")
+
+            def __enter__(self):
+                fcntl.flock(self._f.fileno(), fcntl.LOCK_EX)
+                return self._f
+
+            def __exit__(self, *exc):
+                fcntl.flock(self._f.fileno(), fcntl.LOCK_UN)
+                self._f.close()
+                return False
+
+        return _Held(self._lockpath)
+
+    def _read(self) -> dict:
+        try:
+            state = json.loads(self.path.read_text("utf-8"))
+        except (FileNotFoundError, ValueError):
+            return {"epochs": {}, "leases": {}}
+        state.setdefault("epochs", {})
+        state.setdefault("leases", {})
+        return state
+
+    def _write(self, state: dict) -> None:
+        tmp = self.path.with_name(self.path.name + ".tmp")
+        with open(tmp, "w", encoding="utf-8") as f:
+            json.dump(state, f, sort_keys=True)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.path)
+
+    # -- grant plane -------------------------------------------------------
+    def acquire(self, segment_id: int, holder: str):
+        sid = int(segment_id)
+        key = str(sid)
+        with self._lock, self._flock():
+            state = self._read()
+            now = self.clock()
+            cur = state["leases"].get(key)
+            if (cur is not None and not cur.get("released")
+                    and cur["holder"] != holder
+                    and float(cur["expires_at"]) > now):
+                _CONTENDED.inc()
+                return None
+            epoch = int(state["epochs"].get(key, 0)) + 1
+            expires_at = now + self.ttl
+            state["epochs"][key] = epoch
+            state["leases"][key] = {"holder": holder, "epoch": epoch,
+                                    "expires_at": expires_at,
+                                    "released": False}
+            # durability first: epoch + lease hit disk before the grant
+            # returns, so no write can ever carry an unpersisted epoch
+            self._write(state)
+        lease = Lease(segment_id=sid, holder=holder, epoch=epoch,
+                      expires_at=expires_at)
+        _ACQUIRED.inc()
+        telemetry.emit("lease_acquired", plane="maintenance",
+                       segment=sid, holder=holder, epoch=epoch)
+        return lease
+
+    def renew(self, lease: Lease) -> bool:
+        key = str(lease.segment_id)
+        with self._lock, self._flock():
+            state = self._read()
+            if (lease.released
+                    or int(state["epochs"].get(key, 0)) != lease.epoch):
+                return False
+            lease.expires_at = self.clock() + self.ttl
+            cur = state["leases"].get(key)
+            if cur is not None and cur["epoch"] == lease.epoch:
+                cur["expires_at"] = lease.expires_at
+                self._write(state)
+            return True
+
+    def release(self, lease: Lease) -> None:
+        key = str(lease.segment_id)
+        with self._lock, self._flock():
+            lease.released = True
+            state = self._read()
+            cur = state["leases"].get(key)
+            if cur is not None and cur["epoch"] == lease.epoch:
+                del state["leases"][key]
+                self._write(state)
+
+    # -- fencing plane -----------------------------------------------------
+    def check(self, lease: Lease) -> None:
+        """The write barrier, against the DURABLE epoch registry: a holder
+        that slept through its own SIGKILL-and-restart still sees the
+        successor's epoch, whichever process granted it."""
+        with self._lock:
+            state = self._read()
+            current = int(state["epochs"].get(str(lease.segment_id), 0))
+        if lease.released or lease.epoch < current:
+            _FENCED.inc()
+            telemetry.emit("fencing_rejection", plane="maintenance",
+                           segment=lease.segment_id,
+                           holder=lease.holder, token=lease.epoch,
+                           current_epoch=current)
+            raise FencedWriteError(
+                f"segment {lease.segment_id}: fencing token "
+                f"{lease.epoch} (holder {lease.holder!r}) superseded by "
+                f"epoch {current} — write rejected")
+
+    def fence(self, lease: Lease):
+        """Zero-arg fencing callable for ``Segment.apply_update(fence=)``."""
+        return lambda: self.check(lease)
+
+    def holder_of(self, segment_id: int):
+        """Current unexpired holder (None when free) — observability."""
+        with self._lock:
+            cur = self._read()["leases"].get(str(int(segment_id)))
+        if (cur is None or cur.get("released")
+                or float(cur["expires_at"]) <= self.clock()):
+            return None
+        return cur["holder"]

@@ -50,7 +50,11 @@ class MaintenanceWorkerPool:
 
     One ``matcher_cache`` is shared by all workers: compiled delta matchers
     are immutable once built, so N workers pay one compile per
-    (version, delta, fields) instead of N."""
+    (version, delta, fields) instead of N.  This sharing is a THREAD-model
+    property only — the cache holds jitted engines that cannot cross a
+    process boundary, so ``ProcessMaintenancePool`` gives each worker
+    process a private cache and warms it once per target version
+    (``BackfillWorker.warm_matchers``) instead."""
 
     def __init__(self, store, bus, object_store, *, num_workers: int = 2,
                  scheduler=None, leases: LeaseManager = None,

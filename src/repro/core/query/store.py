@@ -941,6 +941,104 @@ class SegmentStore:
         for s in self.segments:
             s.drop_caches()
 
+    def refresh(self) -> dict:
+        """Converge this (rooted) store onto the on-disk world another
+        *process* may have advanced — the read side of the multi-process
+        topology, where maintenance workers and the ingest parent hold
+        independent ``SegmentStore`` objects over one root.
+
+        Three deltas are reconciled against the persisted manifest and the
+        per-segment ``meta.json`` files (each written atomically, so every
+        read here sees a consistent before-or-after state):
+
+          * **added** — segments the manifest lists that this store has
+            never loaded (another process sealed or compacted them in);
+            loaded and published as ``seal`` epochs;
+          * **removed** — in-memory segments the manifest no longer lists
+            (another process compacted/retired them); dropped from the
+            segment list and published as ``retire`` epochs;
+          * **updated** — spilled segments whose on-disk ``meta.json``
+            differs from the in-memory meta (another process's backfill
+            ``apply_update`` swapped enrichment artifacts); the new meta is
+            installed under the segment's io lock, caches are purged, the
+            meta token bumps, and an ``update`` epoch publishes — exactly
+            the invalidation discipline an in-process swap follows.
+
+        Deliberately does NOT touch ``self.manifest``'s in-memory state:
+        this store's own pending commits (e.g. a seal racing the refresh)
+        must never be rolled back by re-adopting a snapshot.  In the
+        supported topology the manifest has a single writer process;
+        refresh only reconciles *membership and artifacts* for readers.
+
+        Returns ``{"added": [...], "removed": [...], "updated": [...]}``
+        segment-id lists.  No-op (empty deltas) for rootless stores.
+        """
+        empty = {"added": [], "removed": [], "updated": []}
+        if self.root is None:
+            return empty
+        persisted = Manifest.read(self.root)
+        if persisted is None:
+            return empty
+        on_disk = {int(s): str(name)
+                   for s, name in persisted.get("segments", {}).items()}
+        added, removed, updated = [], [], []
+        with self._lock:
+            have = {s.segment_id: s for s in self.segments}
+            for sid in sorted(have):
+                if sid not in on_disk:
+                    removed.append(have[sid])
+            for sid, name in sorted(on_disk.items()):
+                if sid in have:
+                    continue
+                d = self.root / name
+                if not d.exists():
+                    continue    # mid-commit window; next refresh sees it
+                seg = Segment.load(d)
+                seg._on_swap = self._publish_epoch
+                added.append(seg)
+            if removed:
+                gone = {s.segment_id for s in removed}
+                self.segments = [s for s in self.segments
+                                 if s.segment_id not in gone]
+            self.segments.extend(added)
+            self._next_id = max(self._next_id,
+                                int(persisted.get("next_id", 0)))
+        for sid, seg in sorted(have.items()):
+            if sid not in on_disk or seg.path is None:
+                continue
+            try:
+                disk_meta = json.loads((seg.path / "meta.json").read_text())
+            except (FileNotFoundError, ValueError):
+                continue
+            # normalize the in-memory meta through the same JSON round-trip
+            # the spill path uses, so an unchanged segment compares equal
+            cur = json.loads(json.dumps(
+                {**seg.meta, "segment_id": seg.segment_id,
+                 "num_records": seg.num_records}, default=_json_np))
+            if disk_meta == cur:
+                continue
+            with seg._io_lock:
+                seg.meta = disk_meta
+                seg._columns = {}
+                seg._text_index = {}
+                seg._rule_postings = None
+                seg._rule_counts = None
+                seg._meta_gen += 1
+            updated.append(seg)
+        # epoch publication outside every lock, mirroring the in-process
+        # paths: seals for arrivals, retire for departures, one update
+        # epoch covering every artifact swap
+        for seg in added:
+            self._publish_epoch((seg.segment_id,), "seal", added=(seg,))
+        if removed:
+            self._publish_epoch([s.segment_id for s in removed], "retire")
+        if updated:
+            self._publish_epoch([s.segment_id for s in updated], "update",
+                                changed=tuple(updated))
+        return {"added": [s.segment_id for s in added],
+                "removed": [s.segment_id for s in removed],
+                "updated": [s.segment_id for s in updated]}
+
     def storage_nbytes(self, names=None) -> int:
         return sum(s.nbytes(names) for s in self.segments)
 

@@ -19,9 +19,11 @@ path, never look up:
 """
 from repro.core.telemetry import events, export, metrics, trace
 from repro.core.telemetry.events import emit
-from repro.core.telemetry.export import prometheus_text, snapshot, write_dump
+from repro.core.telemetry.export import (merge_dumps, merge_snapshots,
+                                         prometheus_text, snapshot,
+                                         write_dump)
 from repro.core.telemetry.metrics import (counter, enabled, gauge, histogram,
-                                          set_enabled)
+                                          set_enabled, set_exemplars)
 from repro.core.telemetry.trace import export_chrome_trace, span
 
 
@@ -51,7 +53,7 @@ def suppressed(site: str, err: BaseException) -> None:
 
 __all__ = [
     "counter", "gauge", "histogram", "enabled", "set_enabled",
-    "span", "export_chrome_trace", "emit", "suppressed",
-    "prometheus_text", "snapshot", "write_dump", "reset",
-    "metrics", "trace", "events", "export",
+    "set_exemplars", "span", "export_chrome_trace", "emit", "suppressed",
+    "prometheus_text", "snapshot", "write_dump", "merge_dumps",
+    "merge_snapshots", "reset", "metrics", "trace", "events", "export",
 ]

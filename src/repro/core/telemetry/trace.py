@@ -165,6 +165,19 @@ class Tracer:
 TRACER = Tracer()
 
 
+def current_span_id() -> int:
+    """Innermost open span's id on THIS thread (0 when none) — the
+    histogram exemplar source: a latency observed inside a span links the
+    bucket back to the exact span that produced it."""
+    st = TRACER._stack()
+    return st[-1] if st else 0
+
+
+# histograms capture exemplars through this hook (registered here, not in
+# metrics.py, to keep metrics import-independent of the tracer)
+metrics.set_exemplar_source(current_span_id)
+
+
 def span(name: str, *, cat: str = "fluxsieve", **args):
     return TRACER.span(name, cat=cat, **args)
 

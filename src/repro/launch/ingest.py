@@ -8,6 +8,7 @@ with the updater feedback loop live (profiler promotes hot predicates).
 from __future__ import annotations
 
 import argparse
+import os
 import threading
 import time
 from pathlib import Path
@@ -15,10 +16,12 @@ from pathlib import Path
 import numpy as np
 
 from repro.core import telemetry
-from repro.core.control_plane import ControlBus
+from repro.core.control_plane import (CONTROL_DIRNAME, ControlBus,
+                                      DurableControlBus)
 from repro.core.maintenance import (Compactor, MaintenancePolicy,
                                     MaintenanceScheduler,
-                                    MaintenanceWorkerPool, RetentionPolicy,
+                                    MaintenanceWorkerPool,
+                                    ProcessMaintenancePool, RetentionPolicy,
                                     RetentionWorker, SpillGC)
 from repro.core.matcher import compile_bundle
 from repro.core.object_store import ObjectStore
@@ -71,6 +74,15 @@ def main(argv=None) -> int:
                          "workers sharding segments by id hash, each with "
                          "its own consumer-group offsets and per-shard "
                          "convergence ack")
+    ap.add_argument("--worker-model",
+                    default=os.environ.get("FLUXSIEVE_WORKER_MODEL",
+                                           "thread"),
+                    choices=("thread", "process"),
+                    help="maintenance worker substrate: 'thread' shares one "
+                         "interpreter; 'process' runs each worker as a "
+                         "spawn process over the durable control plane "
+                         "(file-backed bus + leases under <store>/, needs "
+                         "--store) — escapes the GIL and survives SIGKILL")
     ap.add_argument("--retention", type=int, default=None, metavar="AGE",
                     help="event-time TTL (timestamp-column units): after "
                          "maintenance, retire segments older than AGE past "
@@ -114,15 +126,23 @@ def main(argv=None) -> int:
           f"{time.perf_counter() - t0:.2f}s "
           f"({sum(e.num_states for e in bundle.engines.values())} DFA states)")
 
-    bus, ostore = ControlBus(), ObjectStore()
+    if args.wal and args.store is None:
+        ap.error("--wal needs --store (the journal lives next to the "
+                 "spill dirs)")
+    if args.worker_model == "process" and args.store is None:
+        ap.error("--worker-model process needs --store (worker processes "
+                 "coordinate through the durable bus/leases under it)")
+    root = Path(args.store) if args.store is not None else None
+    if args.worker_model == "process":
+        # durable control plane: worker processes open the same files
+        bus = DurableControlBus(root / CONTROL_DIRNAME)
+        ostore = ObjectStore(root=root / "objects")
+    else:
+        bus, ostore = ControlBus(), ObjectStore()
     updater = MatcherUpdater(ostore, bus, spec.content_fields,
                              initial=ruleset)
     proc = StreamProcessor(bundle, mode=args.mode, backend=args.backend,
                            bus=bus, store=ostore)
-    if args.wal and args.store is None:
-        ap.error("--wal needs --store (the journal lives next to the "
-                 "spill dirs)")
-    root = Path(args.store) if args.store is not None else None
     if root is not None and ((root / MANIFEST_NAME).exists()
                              or (root / INGEST_WAL_DIRNAME).exists()):
         # restart over a populated root: reopen the committed store (a
@@ -153,6 +173,7 @@ def main(argv=None) -> int:
           f"(truth {truth}) in {res.latency_s * 1e3:.2f} ms")
     assert res.count == truth
 
+    pool = None
     if args.maintenance:
         # late rule activation: historical segments fall back until the
         # maintenance plane re-enriches them
@@ -176,14 +197,20 @@ def main(argv=None) -> int:
               f"{r_pre.latency_s * 1e3:.2f} ms")
         scheduler = MaintenanceScheduler(
             profiler, MaintenancePolicy(max_records_per_cycle=args.segment_size))
-        pool = MaintenanceWorkerPool(store, bus, ostore,
-                                     num_workers=args.maintenance_workers,
-                                     scheduler=scheduler,
-                                     backend=args.backend)
+        if args.worker_model == "process":
+            pool = ProcessMaintenancePool(
+                root, store=store, objects_root=root / "objects",
+                num_workers=args.maintenance_workers,
+                policy=scheduler.policy, backend=args.backend)
+        else:
+            pool = MaintenanceWorkerPool(store, bus, ostore,
+                                         num_workers=args.maintenance_workers,
+                                         scheduler=scheduler,
+                                         backend=args.backend)
         rep = pool.run_until_converged()
         print(f"maintenance: backfilled {rep.segments_backfilled} segments "
               f"({rep.records} records, {rep.bytes_rewritten / 1e6:.1f} MB) "
-              f"across {len(pool.workers)} worker(s) "
+              f"across {len(pool.worker_ids)} {args.worker_model} worker(s) "
               f"in {rep.seconds:.2f}s; acked={rep.acked}")
         status = updater.await_maintenance(rep.version, pool.worker_ids)
         r_post = qe.execute(q, path="fluxsieve")
@@ -217,8 +244,18 @@ def main(argv=None) -> int:
     if stop_dumper is not None:
         stop_dumper.set()
     if args.metrics_dump:
-        paths = telemetry.write_dump(args.metrics_dump)
+        if args.worker_model == "process" and pool is not None:
+            # each worker process dumps under its own prefix, the parent
+            # under "parent.", then everything folds into merged.* —
+            # one snapshot covering every process
+            pool.write_dumps(args.metrics_dump)
+            telemetry.write_dump(args.metrics_dump, prefix="parent.")
+            paths = telemetry.merge_dumps(args.metrics_dump)
+        else:
+            paths = telemetry.write_dump(args.metrics_dump)
         print(f"telemetry: wrote {', '.join(sorted(paths.values()))}")
+    if pool is not None and args.worker_model == "process":
+        pool.close()
     return 0
 
 

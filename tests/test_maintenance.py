@@ -9,25 +9,45 @@ or full-scan fallback — before, during, and after maintenance.
 ``FLUXSIEVE_MAINT_WORKERS=N`` (CI's distributed matrix leg) runs every
 end-to-end convergence path below through an N-worker sharded
 ``MaintenanceWorkerPool`` instead of a single ``BackfillWorker`` — same
-assertions, distributed execution."""
+assertions, distributed execution.  ``FLUXSIEVE_WORKER_MODEL=process``
+(CI's process leg) goes further: a ``ProcessMaintenancePool`` of real
+spawn processes over the durable control plane, with the world's bus and
+object store file-backed so children share them."""
 import os
 import threading
 
 import numpy as np
 import pytest
 
-from repro.core.control_plane import ControlBus, SEGMENT_MAINTENANCE
+from repro.core.control_plane import (CONTROL_DIRNAME, ControlBus,
+                                      DurableControlBus, SEGMENT_MAINTENANCE)
 from repro.core.maintenance import (BackfillWorker, Compactor,
                                     MaintenancePolicy, MaintenanceScheduler,
-                                    MaintenanceWorkerPool)
+                                    MaintenanceWorkerPool,
+                                    ProcessMaintenancePool)
 
 MAINT_WORKERS = int(os.environ.get("FLUXSIEVE_MAINT_WORKERS", "1") or "1")
+WORKER_MODEL = os.environ.get("FLUXSIEVE_WORKER_MODEL", "thread")
 
 
 def make_backfill(store, bus, ostore, **kw):
     """A BackfillWorker, or (under the CI matrix's distributed leg) a
     sharded+leased pool with the same run_cycle/run_until_converged/
-    worker_ids surface."""
+    worker_ids surface — as threads, or (process leg) real spawn processes
+    over the durable control plane.  The process pool needs a durable
+    world (spilled store + file-backed bus/objects); in-memory worlds
+    (a few unit tests build their own) keep the thread model."""
+    if (WORKER_MODEL == "process" and store.root is not None
+            and getattr(ostore, "_root", None) is not None
+            and isinstance(bus, DurableControlBus)):
+        sched = kw.pop("scheduler", None)
+        if sched is not None:
+            kw.setdefault("policy", sched.policy)
+        return ProcessMaintenancePool(
+            store.root, store=store, objects_root=ostore._root,
+            num_workers=max(MAINT_WORKERS, 2),
+            segment_size=store.segment_size,
+            index_fields=store.index_fields, **kw)
     if MAINT_WORKERS > 1:
         return MaintenanceWorkerPool(store, bus, ostore,
                                      num_workers=MAINT_WORKERS, **kw)
@@ -58,7 +78,12 @@ def make_world(tmp_path, *, num_records=6000, segment_size=1500, seed=13,
     full = RuleSet(tuple(Rule(i, t.term, t.term, fields=(t.fieldname,))
                          for i, t in enumerate(spec.planted)))
     initial = full.without_ids([hold_back])
-    bus, ostore = ControlBus(), ObjectStore()
+    if WORKER_MODEL == "process":
+        # durable control plane: worker processes read the same files
+        bus = DurableControlBus(tmp_path / CONTROL_DIRNAME)
+        ostore = ObjectStore(root=tmp_path / "objects")
+    else:
+        bus, ostore = ControlBus(), ObjectStore()
     proc = StreamProcessor(compile_bundle(initial, spec.content_fields),
                            bus=bus, store=ostore)
     store = SegmentStore(segment_size=segment_size, root=tmp_path,
@@ -229,6 +254,22 @@ def test_backfill_thread_safe_against_queries(tmp_path):
     assert w["engine"].execute(q, path="fluxsieve").segments_fallback == 0
 
 
+def _read_blob(ostore, version, key="engines/matcher"):
+    """Artifact bytes regardless of the object-store backend — the
+    process-model world uses a ROOTED store, where payloads live in blob
+    files rather than the in-memory dict."""
+    if ostore._root is None:
+        return ostore._mem[(key, version)][0]
+    return ostore._path(key, version).read_bytes()
+
+
+def _write_blob(ostore, version, blob, key="engines/matcher"):
+    if ostore._root is None:
+        ostore._mem[(key, version)] = (blob, ostore._mem[(key, version)][1])
+    else:
+        ostore._path(key, version).write_bytes(blob)
+
+
 def test_backfill_handles_corrupt_artifact(tmp_path):
     """A tampered maintenance artifact is nacked (with the object ref), the
     worker keeps serving its previous target, and the notification is
@@ -236,9 +277,8 @@ def test_backfill_handles_corrupt_artifact(tmp_path):
     version (nor regress the worker to an older one)."""
     w = make_world(tmp_path, num_records=2000, segment_size=1000)
     h = activate_late_rule(w)
-    key = ("engines/matcher", h.ref.version)
-    data, meta = w["ostore"]._mem[key]
-    w["ostore"]._mem[key] = (data[:-40] + b"x" * 40, meta)
+    data = _read_blob(w["ostore"], h.ref.version)
+    _write_blob(w["ostore"], h.ref.version, data[:-40] + b"x" * 40)
     worker = BackfillWorker(w["store"], w["bus"], w["ostore"])
     rep = worker.run_cycle()
     assert rep.segments_backfilled == 0
@@ -248,7 +288,7 @@ def test_backfill_handles_corrupt_artifact(tmp_path):
 
     # the fault heals (e.g. transient object-store corruption): the next
     # cycle re-fetches the same uncommitted notification and converges
-    w["ostore"]._mem[key] = (data, meta)
+    _write_blob(w["ostore"], h.ref.version, data)
     rep2 = worker.run_until_converged()
     assert rep2.segments_backfilled == len(w["store"].segments)
     assert rep2.pending_after == 0 and rep2.acked
@@ -592,10 +632,9 @@ def test_poll_target_keeps_transiently_failed_older_candidate(tmp_path):
     assert h2.published
     blobs = {}
     for h in (h1, h2):
-        key = ("engines/matcher", h.ref.version)
-        data, meta = w["ostore"]._mem[key]
-        blobs[key] = (data, meta)
-        w["ostore"]._mem[key] = (data[:-40] + b"x" * 40, meta)
+        data = _read_blob(w["ostore"], h.ref.version)
+        blobs[h.ref.version] = data
+        _write_blob(w["ostore"], h.ref.version, data[:-40] + b"x" * 40)
 
     worker = BackfillWorker(w["store"], w["bus"], w["ostore"])
     worker.run_cycle()
@@ -603,16 +642,14 @@ def test_poll_target_keeps_transiently_failed_older_candidate(tmp_path):
 
     # the OLDER artifact heals: it must still be fetchable (not forfeited
     # by a premature commit) and becomes the installed target
-    key1 = ("engines/matcher", h1.ref.version)
-    w["ostore"]._mem[key1] = blobs[key1]
+    _write_blob(w["ostore"], h1.ref.version, blobs[h1.ref.version])
     rep = worker.run_until_converged()
     assert worker._target is not None
     assert worker._target.version == h1.version
     assert rep.segments_backfilled == len(w["store"].segments)
 
     # the newest stays uncommitted and wins once it heals too
-    key2 = ("engines/matcher", h2.ref.version)
-    w["ostore"]._mem[key2] = blobs[key2]
+    _write_blob(w["ostore"], h2.ref.version, blobs[h2.ref.version])
     worker.run_until_converged()
     assert worker._target.version == h2.version
 

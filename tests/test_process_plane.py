@@ -1,0 +1,461 @@
+"""Process-model tests: the durable control plane (file-backed bus +
+leases) and the spawn-process maintenance/query pools built on it.
+
+What the thread-model suites cannot exercise lives here:
+
+  * at-least-once across a REAL restart — a consumer crashed inside the
+    consume/commit window (``bus.commit`` fault) must see the same
+    messages redeliver from a fresh bus instance over the same files;
+  * epoch fencing against a SIGKILLed holder — a worker process killed
+    mid-lease, then "restarted" with its stale token, must be rejected by
+    the successor epoch another process granted while it was dead;
+  * a kill-point sweep over the process pool — workers SIGKILL themselves
+    at injected crash sites (checkpoint write, offset commit, delivery),
+    the pool respawns them under the same identity, and convergence plus
+    exact query counts must survive every site.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.core import faults
+from repro.core.control_plane import (CONTROL_DIRNAME, DurableControlBus,
+                                      SEGMENT_MAINTENANCE)
+from repro.core.maintenance import (BackfillWorker, DurableLeaseManager,
+                                    FencedWriteError, Lease,
+                                    MaintenancePolicy, MaintenanceScheduler,
+                                    ProcessMaintenancePool)
+from repro.core.matcher import compile_bundle
+from repro.core.object_store import ObjectStore
+from repro.core.patterns import Rule, RuleSet
+from repro.core.query.engine import Query, QueryEngine
+from repro.core.query.mapper import QueryMapper
+from repro.core.query.process_shards import ProcessQueryPool
+from repro.core.query.store import SegmentStore
+from repro.core.stream_processor import StreamProcessor
+from repro.core.updater import MatcherUpdater
+from repro.data.generator import LogGenerator, WorkloadSpec
+from repro.data.pipeline import IngestPipeline
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    """Fresh fault state per test, and — because several tests here arm
+    `FLUXSIEVE_FAULTS` in the environment for spawn children — restore
+    the original env value (the CI chaos leg's standing profile, if any)
+    and re-arm it afterwards, so these tests never disarm chaos for the
+    rest of the session."""
+    original = os.environ.get(faults.ENV_VAR)
+    yield
+    faults.reset()
+    if original is None:
+        os.environ.pop(faults.ENV_VAR, None)
+    else:
+        os.environ[faults.ENV_VAR] = original
+        faults.load_profile(original)
+
+
+def durable_world(tmp_path, *, num_records=3000, segment_size=500, seed=13,
+                  hold_back=0):
+    """A fully durable world: spilled store, file-backed bus + object
+    store — everything a worker PROCESS needs to reopen it."""
+    spec = WorkloadSpec(num_records=num_records, ultra_rate=1e-3,
+                        high_rate=1e-2, seed=seed, text_width=256)
+    gen = LogGenerator(spec)
+    full = RuleSet(tuple(Rule(i, t.term, t.term, fields=(t.fieldname,))
+                         for i, t in enumerate(spec.planted)))
+    initial = full.without_ids([hold_back])
+    bus = DurableControlBus(tmp_path / CONTROL_DIRNAME)
+    ostore = ObjectStore(root=tmp_path / "objects")
+    proc = StreamProcessor(compile_bundle(initial, spec.content_fields),
+                           bus=bus, store=ostore)
+    store = SegmentStore(segment_size=segment_size, root=tmp_path,
+                         index_fields=spec.content_fields)
+    updater = MatcherUpdater(ostore, bus, spec.content_fields,
+                             initial=initial)
+    IngestPipeline(gen, store, proc).run(batch_size=1000)
+    mapper = QueryMapper(initial, version_id=0)
+    engine = QueryEngine(store, mapper=mapper)
+    return dict(spec=spec, gen=gen, full=full, initial=initial, bus=bus,
+                ostore=ostore, proc=proc, store=store, updater=updater,
+                mapper=mapper, engine=engine, late=spec.planted[hold_back])
+
+
+def activate_late_rule(w):
+    h = w["updater"].submit(w["full"], asynchronous=False)
+    assert h.published, h.error
+    w["proc"].poll_updates()
+    w["mapper"].notify(w["full"], version_id=w["proc"].active_version_id)
+    return h
+
+
+def make_pool(w, **kw):
+    store = w["store"]
+    kw.setdefault("num_workers", 2)
+    return ProcessMaintenancePool(
+        store.root, store=store, objects_root=w["ostore"]._root,
+        segment_size=store.segment_size, index_fields=store.index_fields,
+        **kw)
+
+
+# ---------------------------------------------------------------------------
+# Durable bus
+# ---------------------------------------------------------------------------
+
+def test_durable_bus_roundtrip_across_instances(tmp_path):
+    """Publish through one instance, poll/commit through a FRESH one over
+    the same files — the restart case the in-memory bus cannot model."""
+    a = DurableControlBus(tmp_path)
+    for i in range(5):
+        assert a.publish("t", {"i": i}) == i
+    b = DurableControlBus(tmp_path)          # "restarted" consumer
+    msgs = b.poll("t", "g")
+    assert [m.value["i"] for m in msgs] == [0, 1, 2, 3, 4]
+    assert [m.offset for m in msgs] == [0, 1, 2, 3, 4]
+    b.commit("t", "g", msgs[2].offset)
+    # a third instance (second restart) resumes past the committed prefix
+    c = DurableControlBus(tmp_path)
+    assert [m.value["i"] for m in c.poll("t", "g")] == [3, 4]
+    assert c.end_offset("t") == 5
+    assert len(c.messages("t", 0)) == 5
+    # commit never rewinds, even from a stale instance
+    a.commit("t", "g", 0)
+    assert [m.value["i"] for m in c.poll("t", "g")] == [3, 4]
+
+
+def test_durable_bus_commit_crash_window_redelivers(tmp_path):
+    """A consumer crashed AFTER processing but BEFORE the offset hit disk
+    (the ``bus.commit`` fault window) re-reads the whole uncommitted
+    window on restart — at-least-once, exactly like the thread bus."""
+    bus = DurableControlBus(tmp_path)
+    for i in range(3):
+        bus.publish("t", {"i": i})
+    msgs = bus.poll("t", "g")
+    assert len(msgs) == 3                    # "processed" all three
+    faults.inject("bus.commit", "crash", times=1)
+    with pytest.raises(faults.InjectedCrash):
+        bus.commit("t", "g", msgs[-1].offset)
+    faults.reset()
+    # restart: fresh instance, same files — nothing was committed
+    again = DurableControlBus(tmp_path)
+    redelivered = again.poll("t", "g")
+    assert [m.value["i"] for m in redelivered] == [0, 1, 2]
+    again.commit("t", "g", redelivered[-1].offset)
+    assert again.poll("t", "g") == []
+    assert DurableControlBus(tmp_path).poll("t", "g") == []
+
+
+def test_durable_bus_consumer_groups_independent(tmp_path):
+    """Two groups drain the same topic at their own pace, offsets durable
+    per (topic, group) file, surviving reopen."""
+    bus = DurableControlBus(tmp_path)
+    for i in range(4):
+        bus.publish("t", {"i": i})
+    g1 = bus.poll("t", "workers/a")
+    bus.commit("t", "workers/a", g1[1].offset)       # a consumed 0..1
+    assert [m.value["i"] for m in bus.poll("t", "workers/b")] == [0, 1, 2, 3]
+    reopened = DurableControlBus(tmp_path)
+    assert [m.value["i"] for m in reopened.poll("t", "workers/a")] == [2, 3]
+    assert [m.value["i"] for m in reopened.poll("t", "workers/b")] == \
+        [0, 1, 2, 3]
+    # the sanitized offset files are per (topic, group)
+    names = sorted(p.name for p in (tmp_path / "offsets").glob("*.json"))
+    assert names == ["t--workers__a.json"]
+
+
+def test_durable_bus_torn_tail_ignored_and_repaired(tmp_path):
+    """A writer SIGKILLed mid-append leaves a newline-less torn tail:
+    readers must stop before it (it was never acknowledged), and the next
+    publish must truncate it rather than corrupt the log."""
+    bus = DurableControlBus(tmp_path)
+    bus.publish("t", {"i": 0})
+    log = tmp_path / "topics" / "t.log"
+    with open(log, "a") as f:
+        f.write('{"offset": 1, "value": {"i": 99}, "timesta')   # torn
+    fresh = DurableControlBus(tmp_path)
+    assert [m.value["i"] for m in fresh.poll("t", "g")] == [0]
+    assert fresh.publish("t", {"i": 1}) == 1     # truncates, then appends
+    assert [m.value["i"] for m in fresh.poll("t", "g")] == [0, 1]
+    # every line in the repaired log parses
+    lines = log.read_text().splitlines()
+    assert [json.loads(ln)["value"]["i"] for ln in lines] == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# Durable leases + fencing
+# ---------------------------------------------------------------------------
+
+def test_durable_lease_contention_expiry_release(tmp_path):
+    clock = {"t": 100.0}
+    mgr = DurableLeaseManager(tmp_path, ttl=10.0, clock=lambda: clock["t"])
+    l1 = mgr.acquire(3, "a")
+    assert l1.epoch == 1
+    assert mgr.acquire(3, "b") is None           # contended while unexpired
+    assert mgr.holder_of(3) == "a"
+    assert mgr.renew(l1)
+    clock["t"] += 20.0                           # past ttl: expiry frees it
+    l2 = mgr.acquire(3, "b")
+    assert l2.epoch == 2
+    with pytest.raises(FencedWriteError):
+        mgr.check(l1)                            # superseded epoch fenced
+    mgr.check(l2)                                # current epoch passes
+    assert not mgr.renew(l1)
+    mgr.release(l2)
+    assert mgr.holder_of(3) is None
+    # epochs never rewind across release + reopen
+    l3 = DurableLeaseManager(tmp_path, ttl=10.0,
+                             clock=lambda: clock["t"]).acquire(3, "c")
+    assert l3.epoch == 3
+
+
+def test_fencing_rejects_sigkilled_then_restarted_holder(tmp_path):
+    """The Chubby/ZooKeeper story with a REAL dead process: a holder in
+    another OS process is SIGKILLed mid-lease; after expiry a successor
+    (this process) acquires a higher epoch; the zombie's restart presents
+    its stale token and must get ``FencedWriteError`` from the durable
+    epoch registry — not silently clobber the successor's install."""
+    child = subprocess.Popen(
+        [sys.executable, "-c",
+         "import sys, time\n"
+         "from repro.core.maintenance.lease import DurableLeaseManager\n"
+         f"m = DurableLeaseManager({str(tmp_path)!r}, ttl=0.3)\n"
+         "lease = m.acquire(7, 'zombie')\n"
+         "print(lease.epoch, flush=True)\n"
+         "time.sleep(120)\n"],
+        stdout=subprocess.PIPE, text=True,
+        env={**os.environ, "PYTHONPATH": "src"})
+    try:
+        zombie_epoch = int(child.stdout.readline())
+    finally:
+        child.kill()                             # SIGKILL: no cleanup ran
+        child.wait(timeout=10)
+    assert zombie_epoch == 1
+    mgr = DurableLeaseManager(tmp_path, ttl=30.0)
+    assert mgr.holder_of(7) in ("zombie", None)  # lease may not have expired
+    deadline = time.time() + 5.0
+    successor = None
+    while successor is None and time.time() < deadline:
+        successor = mgr.acquire(7, "successor")  # granted once ttl passes
+        if successor is None:
+            time.sleep(0.05)
+    assert successor is not None and successor.epoch == zombie_epoch + 1
+    stale = Lease(segment_id=7, holder="zombie", epoch=zombie_epoch,
+                  expires_at=time.time() + 60.0)
+    with pytest.raises(FencedWriteError):
+        mgr.check(stale)                         # the restarted zombie
+    mgr.check(successor)                         # successor still writes
+
+
+# ---------------------------------------------------------------------------
+# Process maintenance pool
+# ---------------------------------------------------------------------------
+
+def test_process_pool_backfill_end_to_end(tmp_path):
+    w = durable_world(tmp_path)
+    late = w["late"]
+    truth = w["gen"].true_count(late)
+    assert truth > 0
+    q = Query(terms=((late.fieldname, late.term),), mode="count")
+    activate_late_rule(w)
+    r_pre = w["engine"].execute(q, path="fluxsieve")
+    assert r_pre.count == truth
+    assert r_pre.segments_fallback == len(w["store"].segments)
+
+    pool = make_pool(w)
+    try:
+        assert pool.worker_ids == ("maint-0", "maint-1")
+        rep = pool.run_until_converged()
+        assert rep.pending_after == 0 and rep.acked
+        assert rep.segments_backfilled == len(w["store"].segments)
+        assert rep.rows_matched > 0
+        # the updater sees both workers' acks on the durable topic
+        status = w["updater"].await_maintenance(rep.version,
+                                                pool.worker_ids, timeout=5)
+        assert status.complete
+    finally:
+        pool.close()
+    # the PARENT's store object observed the children's installs
+    r_post = w["engine"].execute(q, path="fluxsieve")
+    assert r_post.count == truth
+    assert r_post.segments_fallback == 0
+    assert w["engine"].execute(q, path="full_scan").count == truth
+
+
+@pytest.mark.parametrize("profile", [
+    # crash while writing a row-watermark checkpoint mid-segment
+    "maintenance.checkpoint:crash@after=1,times=1",
+    # crash inside the consume/commit window (work done, offset not moved)
+    "bus.commit:crash@times=1,topic=segment-maintenance",
+    # crash on delivery itself (before any work)
+    "bus.deliver:crash@times=1,topic=segment-maintenance",
+])
+def test_process_pool_survives_sigkill_at_injected_sites(tmp_path, profile):
+    """Kill-point sweep with REAL processes: each worker loads the fault
+    profile from the environment at spawn, SIGKILLs itself at the injected
+    site, and the pool must respawn it under the same identity and still
+    converge to exact counts over a consistent manifest."""
+    w = durable_world(tmp_path, num_records=2000, segment_size=400)
+    late = w["late"]
+    truth = w["gen"].true_count(late)
+    q = Query(terms=((late.fieldname, late.term),), mode="count")
+    activate_late_rule(w)
+
+    os.environ["FLUXSIEVE_FAULTS"] = profile
+    try:
+        # rows_per_pass forces mid-segment checkpoints (site #1's trigger)
+        pool = make_pool(w, rows_per_pass=150, recv_timeout=60.0)
+    finally:
+        # respawned replacements must start CLEAN — the crash profile
+        # applies to the first generation only
+        del os.environ["FLUXSIEVE_FAULTS"]
+    try:
+        rep = pool.run_until_converged()
+        assert rep.pending_after == 0
+        deaths = telemetry_deaths()
+        assert deaths >= 1, "no worker actually died at the kill point"
+    finally:
+        pool.close()
+
+    # manifest is loadable and consistent after the carnage
+    reopened = SegmentStore.load(tmp_path,
+                                 segment_size=w["store"].segment_size,
+                                 index_fields=w["store"].index_fields)
+    assert sorted(s.segment_id for s in reopened.segments) == \
+        sorted(s.segment_id for s in w["store"].segments)
+    # counts are exact on both the live store and the reopened one
+    r = w["engine"].execute(q, path="fluxsieve")
+    assert r.count == truth and r.segments_fallback == 0
+    engine2 = QueryEngine(reopened, mapper=w["mapper"])
+    r2 = engine2.execute(q, path="fluxsieve")
+    assert r2.count == truth and r2.segments_fallback == 0
+
+
+def telemetry_deaths() -> int:
+    from repro.core import telemetry
+    snap = telemetry.metrics.snapshot()
+    series = snap["counters"].get(
+        "fluxsieve_maintenance_worker_deaths_total", [])
+    return sum(s["value"] for s in series)
+
+
+def test_process_pool_worker_killed_mid_cycle_respawns(tmp_path):
+    """Straight SIGKILL from outside (no faults): the pool marks the
+    worker dead for the cycle, respawns it under the same worker id, and
+    convergence completes with exact results."""
+    w = durable_world(tmp_path, num_records=2000, segment_size=400)
+    late = w["late"]
+    truth = w["gen"].true_count(late)
+    q = Query(terms=((late.fieldname, late.term),), mode="count")
+    activate_late_rule(w)
+    pool = make_pool(w, recv_timeout=60.0)
+    try:
+        victim = pool._workers[0]
+        os.kill(victim["proc"].pid, signal.SIGKILL)
+        victim["proc"].join(timeout=10)
+        rep = pool.run_until_converged()
+        assert rep.pending_after == 0
+        assert pool.worker_ids == ("maint-0", "maint-1")   # same identity
+        alive = [w_["proc"].is_alive() for w_ in pool._workers]
+        assert all(alive), alive
+    finally:
+        pool.close()
+    r = w["engine"].execute(q, path="fluxsieve")
+    assert r.count == truth and r.segments_fallback == 0
+
+
+# ---------------------------------------------------------------------------
+# Process query shards
+# ---------------------------------------------------------------------------
+
+def test_process_query_pool_counts_ids_and_isolation(tmp_path):
+    w = durable_world(tmp_path, num_records=3000, segment_size=500)
+    activate_late_rule(w)
+    # backfill in-process first so every segment serves enriched
+    BackfillWorker(w["store"], w["bus"], w["ostore"]).run_until_converged()
+    term = w["late"]
+    truth = w["gen"].true_count(term)
+
+    pool = ProcessQueryPool(tmp_path, w["full"], shards=2,
+                            index_fields=w["store"].index_fields,
+                            segment_size=w["store"].segment_size)
+    try:
+        r = pool.execute(((term.fieldname, term.term),), mode="count")
+        assert not r.partial and r.shards_served == 2
+        assert r.count == truth
+        assert r.segments_total == len(w["store"].segments)
+        # ids mode: per-segment row ids union to the same cardinality
+        ri = pool.execute(((term.fieldname, term.term),), mode="ids")
+        assert not ri.partial
+        assert ri.count == truth
+        assert sum(len(v) for v in ri.ids.values()) == truth
+        # each shard saw a disjoint, non-empty slice of the store and paid
+        # at most ONE upload per word column (private arrangement planes)
+        stats = [s for s in pool.stats() if s is not None]
+        assert len(stats) == 2
+        assert sum(s["segments"] for s in stats) == len(w["store"].segments)
+        for s in stats:
+            ups = s["uploads_per_column"].values()
+            assert max(ups, default=0) <= 1, s["uploads_per_column"]
+    finally:
+        pool.close()
+
+
+def test_process_query_pool_shard_death_degrades_partial(tmp_path):
+    """A shard that dies MID-QUERY (self-SIGKILL at the ``query.shard``
+    fault site) yields a partial result — never an exception — and the
+    pool respawns it so the next query is whole again.  A shard killed
+    BETWEEN queries is respawned before broadcast: fully transparent."""
+    w = durable_world(tmp_path, num_records=2000, segment_size=500)
+    activate_late_rule(w)
+    BackfillWorker(w["store"], w["bus"], w["ostore"]).run_until_converged()
+    term = w["late"]
+    truth = w["gen"].true_count(term)
+    os.environ["FLUXSIEVE_FAULTS"] = "query.shard:crash@times=1,shard=0"
+    try:
+        pool = ProcessQueryPool(tmp_path, w["full"], shards=2,
+                                index_fields=w["store"].index_fields,
+                                segment_size=w["store"].segment_size)
+    finally:
+        del os.environ["FLUXSIEVE_FAULTS"]     # respawns start clean
+    try:
+        r = pool.execute(((term.fieldname, term.term),), mode="count")
+        assert r.partial and r.shards_failed == 1 and r.shards_served == 1
+        assert r.count <= truth                # subset, never inflated
+        # next query: the shard is respawned, results whole again
+        r2 = pool.execute(((term.fieldname, term.term),), mode="count")
+        assert not r2.partial
+        assert r2.count == truth
+        # between-queries SIGKILL from outside: respawned before broadcast
+        os.kill(pool._workers[1]["proc"].pid, signal.SIGKILL)
+        pool._workers[1]["proc"].join(timeout=10)
+        r3 = pool.execute(((term.fieldname, term.term),), mode="count")
+        assert not r3.partial and r3.count == truth
+    finally:
+        pool.close()
+
+
+# ---------------------------------------------------------------------------
+# Matcher-cache warm (per-process compile discipline)
+# ---------------------------------------------------------------------------
+
+def test_warm_matchers_compiles_once_per_target_version(tmp_path):
+    w = durable_world(tmp_path, num_records=2000, segment_size=500)
+    activate_late_rule(w)
+    worker = BackfillWorker(w["store"], w["bus"], w["ostore"])
+    worker.poll_target()
+    compiled = worker.warm_matchers()
+    assert compiled > 0                      # cold cache: engines compiled
+    assert worker.warm_matchers() == 0       # same version: nothing to do
+    rep = worker.run_until_converged()       # warmed cache serves the run
+    assert rep.pending_after == 0
+    late = w["late"]
+    r = w["engine"].execute(
+        Query(terms=((late.fieldname, late.term),), mode="count"),
+        path="fluxsieve")
+    assert r.count == w["gen"].true_count(late)
+    assert r.segments_fallback == 0
