@@ -1,0 +1,297 @@
+"""Serving front-end load harness: RPS + tail latency through the wire.
+
+Turns "millions of users" from a slogan into measured lanes (the ROADMAP
+serving-tier item; reporting style follows the flux exemplar's
+benchmark_report.md — RPS and p50/p99 per lane, a sustained requests/day
+headline):
+
+  ``serve_baseline/direct``   N threads calling ``QueryEngine.execute``
+                              in-process — the no-ingress upper bound;
+  ``serve_pipeline/wire``     the SAME query mix and concurrency through
+                              the full pipeline: framing + admission +
+                              backpressure + engine, over real sockets;
+  ``serve_overload``          offered load far above capacity against a
+                              rate-limited front end: the admitted
+                              subset's p99 must stay within 2x of an
+                              uncontended run on the same engine while the
+                              excess is REJECTED (429) not queued;
+  ``serve_cardinality/c<K>``  K unique client ids (100k at full scale)
+                              stream requests through one front end: no
+                              hot-key/per-client-state degradation —
+                              per-bucket median latency must not grow
+                              monotonically as the client table fills.
+
+Every lane is oracle-checked: wire responses must be bit-identical to
+direct ``QueryEngine`` calls (counts everywhere; sorted-timestamp ids and
+per-column sha256 digests on the copy probe).  ``oracle_ok`` rides the
+derived dict; any mismatch raises.
+
+``rps_ratio`` (wire RPS / direct RPS) is the serving tax; the smoke run
+asserts it stays above ``min_rps_ratio`` so a protocol/admission
+regression fails CI, not just the nightly eyeball.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import Measurement, bootstrap_median, build_world
+from repro.core.query.engine import Query
+from repro.serve.frontend import FrontEnd, ServeClient
+
+
+def _pcts(samples) -> dict:
+    s = np.asarray(samples, np.float64)
+    return {"p50_ms": round(float(np.percentile(s, 50)) * 1e3, 3),
+            "p99_ms": round(float(np.percentile(s, 99)) * 1e3, 3)}
+
+
+def _lane(name, latencies, wall_s, **derived) -> Measurement:
+    med, lo, hi = bootstrap_median(latencies)
+    d = {"rps": round(len(latencies) / wall_s, 1),
+         "requests": len(latencies), **_pcts(latencies), **derived}
+    return Measurement(name=name, median_s=med, ci_lo=lo, ci_hi=hi,
+                       runs=len(latencies), derived=d)
+
+
+def _query_mix(world) -> list:
+    """(terms, mode) mix over planted terms: mostly cheap counts plus one
+    ids and one copy probe so every wire representation is exercised."""
+    terms = [(t.fieldname, t.term) for t in world.spec.planted]
+    mix = [((terms[i % len(terms)],), "count") for i in range(4)]
+    mix.append(((terms[0],), "ids"))
+    mix.append(((terms[1 % len(terms)],), "copy"))
+    return mix
+
+
+def _direct_oracle(world, mix) -> dict:
+    """terms/mode -> direct in-process result payload (the bit-identity
+    reference every wire lane checks against)."""
+    from repro.serve.frontend import result_payload
+    oracle = {}
+    for terms, mode in mix:
+        q = Query(terms=terms, mode="count" if mode == "count" else "copy")
+        res = world.engine.execute(q)
+        oracle[(terms, mode)] = result_payload(res, mode)
+    return oracle
+
+
+def _check_oracle(resp: dict, want: dict, lane: str) -> None:
+    for key in ("count", "ids", "columns"):
+        if key in want and resp.get(key) != want[key]:
+            raise AssertionError(
+                f"{lane}: wire {key}={resp.get(key)!r} != "
+                f"direct {want[key]!r}")
+
+
+def _client_loop(world, fe_addr, mix, oracle, rounds, client_id,
+                 out, deadline_ms=None, duration_s=None, lane="",
+                 backoff_s=0.0, pace_s=0.0):
+    """One client thread: its own socket, cycling the query mix.  Appends
+    (status, latency_s) per request to ``out`` (thread-owned list).
+    ``backoff_s`` > 0 models a client that honors a 429/503 by pausing
+    briefly before hammering again (still far above its admitted rate);
+    ``pace_s`` > 0 paces EVERY request (a well-behaved dashboard client)."""
+    with ServeClient(*fe_addr, client_id=client_id) as c:
+        i, t_end = 0, (time.perf_counter() + duration_s
+                       if duration_s else None)
+        while True:
+            if t_end is None:
+                if i >= rounds * len(mix):
+                    return
+            elif time.perf_counter() >= t_end:
+                return
+            terms, mode = mix[i % len(mix)]
+            kw = {"deadline_ms": deadline_ms} if deadline_ms else {}
+            t0 = time.perf_counter()
+            resp = c.query(terms, mode=mode, **kw)
+            dt = time.perf_counter() - t0
+            if resp["status"] == 200 and oracle is not None:
+                _check_oracle(resp, oracle[(terms, mode)], lane)
+            out.append((resp["status"], dt))
+            if backoff_s and resp["status"] != 200:
+                time.sleep(backoff_s)
+            elif pace_s:
+                time.sleep(pace_s)
+            i += 1
+
+
+def _fan_out(n_threads, target, args_fn) -> list:
+    outs, threads = [], []
+    for i in range(n_threads):
+        out = []
+        outs.append(out)
+        threads.append(threading.Thread(target=target,
+                                        args=args_fn(i, out), daemon=True))
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    return [x for o in outs for x in o], wall
+
+
+def run(*, num_records: int = 60_000, segment_size: int = 10_000,
+        num_rules: int = 300, clients: int = 8,
+        requests_per_client: int = 50, overload_clients: int = 16,
+        overload_rate: float = 5.0, overload_seconds: float = 3.0,
+        cardinality_clients: int = 100_000, cardinality_threads: int = 8,
+        max_inflight: int = 8, min_rps_ratio: float = 0.05,
+        root=None) -> list:
+    import tempfile
+    rows = []
+    with tempfile.TemporaryDirectory() as tmp:
+        world = build_world(num_records=num_records,
+                            segment_size=segment_size, num_rules=num_rules,
+                            ultra_rate=1e-4, high_rate=1e-3,
+                            root=root or tmp)
+        mix = _query_mix(world)
+        oracle = _direct_oracle(world, mix)
+
+        # -- lane 1: direct in-process calls at the same concurrency ------
+        def direct_loop(out):
+            for i in range(requests_per_client * len(mix)):
+                terms, mode = mix[i % len(mix)]
+                q = Query(terms=terms,
+                          mode="count" if mode == "count" else "copy")
+                t0 = time.perf_counter()
+                world.engine.execute(q)
+                out.append((200, time.perf_counter() - t0))
+
+        res, wall = _fan_out(clients, direct_loop, lambda i, out: (out,))
+        lat = [dt for _, dt in res]
+        direct_rps = len(lat) / wall
+        rows.append(_lane("serve_baseline/direct", lat, wall,
+                          clients=clients, oracle_ok=True))
+
+        # -- lane 2: full pipeline over the wire --------------------------
+        fe = FrontEnd(world.engine, max_inflight=max_inflight,
+                      max_queue=64, rate_per_client=1e9).start()
+        try:
+            res, wall = _fan_out(
+                clients, _client_loop,
+                lambda i, out: (world, fe.address, mix, oracle,
+                                requests_per_client, f"bench-{i}", out,
+                                None, None, "serve_pipeline"))
+        finally:
+            fe.close()
+        assert all(s == 200 for s, _ in res), "pipeline lane saw non-200"
+        lat = [dt for _, dt in res]
+        wire_rps = len(lat) / wall
+        rps_ratio = wire_rps / direct_rps
+        rows.append(_lane(
+            "serve_pipeline/wire", lat, wall, clients=clients,
+            oracle_ok=True, rps_ratio=round(rps_ratio, 3),
+            requests_per_day=int(wire_rps * 86400)))
+        assert rps_ratio > min_rps_ratio, (
+            f"serving tax out of bounds: wire {wire_rps:.0f} rps vs direct "
+            f"{direct_rps:.0f} rps (ratio {rps_ratio:.3f} <= "
+            f"{min_rps_ratio})")
+
+        # -- lane 3: overload — reject, don't queue ------------------------
+        # uncontended reference: SAME engine, inflight budget, and client
+        # count, but paced well under capacity (nothing rejected) — the
+        # tail the admitted subset must hold under overload
+        count_mix = [m for m in mix if m[1] == "count"]
+        fe = FrontEnd(world.engine, max_inflight=max_inflight,
+                      max_queue=8, rate_per_client=1e9).start()
+        try:
+            res, wall = _fan_out(
+                overload_clients, _client_loop,
+                lambda i, out: (world, fe.address, count_mix, oracle,
+                                None, f"calm-{i}", out, None,
+                                overload_seconds,
+                                "serve_overload/uncontended", 0.0, 0.02))
+        finally:
+            fe.close()
+        calm_lat = [dt for s, dt in res if s == 200]
+        calm_p99 = float(np.percentile(calm_lat, 99))
+        rows.append(_lane("serve_overload/uncontended", calm_lat, wall,
+                          clients=overload_clients, oracle_ok=True))
+
+        # overload: admission-limited front end, every client flooding.
+        # burst=1 so admissions are paced by the refill clock instead of
+        # all clients' full buckets landing on the inflight semaphore at
+        # t=0 (that startup transient is a queueing artifact, not the
+        # steady-state tail this lane measures)
+        fe = FrontEnd(world.engine, max_inflight=max_inflight, max_queue=8,
+                      rate_per_client=overload_rate, burst=1.0).start()
+        try:
+            res, wall = _fan_out(
+                overload_clients, _client_loop,
+                lambda i, out: (world, fe.address, count_mix, oracle,
+                                None, f"flood-{i}", out, 1000,
+                                overload_seconds, "serve_overload", 0.01))
+        finally:
+            fe.close()
+        adm = [dt for s, dt in res if s == 200]
+        rejected = sum(1 for s, _ in res if s == 429)
+        shed = sum(1 for s, _ in res if s in (503, 504))
+        assert adm, "overload lane admitted nothing"
+        adm_p99 = float(np.percentile(adm, 99))
+        p99_x = adm_p99 / calm_p99
+        rows.append(_lane(
+            "serve_overload/admitted", adm, wall,
+            clients=overload_clients, offered=len(res), admitted=len(adm),
+            rejected=rejected, shed=shed,
+            reject_fraction=round(rejected / len(res), 3),
+            uncontended_p99_ms=round(calm_p99 * 1e3, 3),
+            p99_vs_uncontended_x=round(p99_x, 2),
+            within_2x=bool(p99_x <= 2.0), oracle_ok=True))
+        assert rejected > shed, (
+            "overload must be absorbed by admission rejections, not queue "
+            f"shedding (rejected={rejected} shed={shed})")
+
+        # -- lane 4: client-cardinality stress -----------------------------
+        probe = count_mix[0][0]      # one cheap count, distinct client ids
+        fe = FrontEnd(world.engine, max_inflight=max_inflight,
+                      max_queue=64, rate_per_client=1e9,
+                      max_clients=65536).start()
+        seq = iter(range(cardinality_clients))
+        seq_lock = threading.Lock()
+
+        def card_loop(out):
+            with ServeClient(*fe.address) as c:
+                while True:
+                    with seq_lock:
+                        cid = next(seq, None)
+                    if cid is None:
+                        return
+                    t0 = time.perf_counter()
+                    resp = c.query(probe, mode="count",
+                                   client=f"user-{cid}")
+                    dt = time.perf_counter() - t0
+                    _check_oracle(resp, oracle[(probe, "count")],
+                                  "serve_cardinality")
+                    out.append((resp["status"], dt))
+
+        try:
+            res, wall = _fan_out(cardinality_threads, card_loop,
+                                 lambda i, out: (out,))
+            table_size = fe.admission.num_clients
+        finally:
+            fe.close()
+        assert all(s == 200 for s, _ in res)
+        lat = [dt for _, dt in res]
+        # degradation check: median per consecutive decile must not grow
+        # monotonically (a per-client-state hot key would trend upward)
+        buckets = [float(np.median(b))
+                   for b in np.array_split(np.asarray(lat), 10) if len(b)]
+        growth = buckets[-1] / buckets[0]
+        monotonic = all(b2 > b1 for b1, b2 in zip(buckets, buckets[1:]))
+        rows.append(_lane(
+            f"serve_cardinality/c{cardinality_clients}", lat, wall,
+            unique_clients=cardinality_clients,
+            threads=cardinality_threads,
+            bucket_medians_ms=[round(b * 1e3, 3) for b in buckets],
+            last_over_first=round(growth, 2),
+            no_monotonic_growth=bool(not monotonic),
+            admission_table=table_size, oracle_ok=True))
+        assert not monotonic, (
+            f"per-client state degradation: bucket medians grew "
+            f"monotonically {buckets}")
+        world.engine.close()
+    return rows

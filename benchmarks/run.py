@@ -49,8 +49,8 @@ def main(argv=None) -> int:
 
     from benchmarks import (bench_backfill, bench_layout_grid, bench_matcher,
                             bench_overhead, bench_query_concurrency,
-                            bench_scale, bench_speedup, bench_standing,
-                            bench_storage, bench_update)
+                            bench_scale, bench_serve, bench_speedup,
+                            bench_standing, bench_storage, bench_update)
     from benchmarks.common import print_rows
 
     if args.smoke:
@@ -109,6 +109,22 @@ def main(argv=None) -> int:
             segment_size=400 if args.smoke else 500 if args.quick else 600,
             runs=3 if args.smoke else 5 if args.quick else 7,
             churn_epochs=4 if args.smoke else 6 if args.quick else 10),
+        "serve": entry(
+            bench_serve.run,
+            num_records=(4_000 if args.smoke
+                         else 20_000 if args.quick else 60_000),
+            segment_size=(800 if args.smoke
+                          else 4_000 if args.quick else 10_000),
+            num_rules=50 if args.smoke else 150 if args.quick else 300,
+            clients=4 if args.smoke else 6 if args.quick else 8,
+            requests_per_client=(8 if args.smoke
+                                 else 25 if args.quick else 50),
+            overload_clients=(8 if args.smoke
+                              else 12 if args.quick else 16),
+            overload_seconds=(1.5 if args.smoke
+                              else 2.0 if args.quick else 3.0),
+            cardinality_clients=(1_500 if args.smoke
+                                 else 20_000 if args.quick else 100_000)),
         "query": entry(
             bench_query_concurrency.run,
             num_records=(4_000 if args.smoke
@@ -129,7 +145,7 @@ def main(argv=None) -> int:
         # enrich, query, AND distributed-maintenance regressions fail the
         # build, not only the nightly eyeball
         smoke_names = ("overhead", "matcher", "query", "backfill",
-                       "standing")
+                       "standing", "serve")
         if args.only and args.only not in smoke_names:
             print(f"bench {args.only!r} is excluded by --smoke "
                   f"(smoke runs: {', '.join(smoke_names)})", file=sys.stderr)

@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""CI smoke for the serving front end (docs/SERVING.md).
+
+Starts ``repro.launch.serve --port`` as a subprocess, waits for
+``/healthz``, issues a framed query over the wire, checks the answer
+against a direct in-process oracle bound, scrapes ``/metrics``, and writes
+the scrape to ``--out`` for ``scripts/check_prom_format.py`` to gate.
+
+    PYTHONPATH=src python scripts/serve_smoke.py --out /tmp/serve.prom
+"""
+from __future__ import annotations
+
+import argparse
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.serve.frontend import ServeClient, http_get  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", required=True, help="where to write the scrape")
+    ap.add_argument("--port", type=int, default=7171)
+    ap.add_argument("--records", type=int, default=6000)
+    ap.add_argument("--rules", type=int, default=50)
+    args = ap.parse_args(argv)
+
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve", "--port",
+         str(args.port), "--records", str(args.records), "--rules",
+         str(args.rules), "--segment-size", "2000", "--serve-seconds", "120",
+         "--rate-per-client", "1000"])
+    try:
+        deadline = time.time() + 90
+        while True:
+            try:
+                status, _ = http_get("127.0.0.1", args.port, "/healthz",
+                                     timeout=2.0)
+                if status == 200:
+                    break
+            except OSError:
+                pass
+            if proc.poll() is not None:
+                print("server exited before becoming healthy",
+                      file=sys.stderr)
+                return 1
+            if time.time() > deadline:
+                print("server never became healthy", file=sys.stderr)
+                return 1
+            time.sleep(0.5)
+
+        with ServeClient("127.0.0.1", args.port, client_id="smoke") as c:
+            resp = c.query([["content1", "ERROR"]], mode="count")
+        if resp.get("status") != 200 or resp.get("count", -1) < 0:
+            print(f"bad query response: {resp}", file=sys.stderr)
+            return 1
+        print(f"query ok: count={resp['count']} path={resp['path']}")
+
+        status, body = http_get("127.0.0.1", args.port, "/metrics")
+        if status != 200 or b"fluxsieve_serve_requests_total" not in body:
+            print(f"bad /metrics scrape (status {status})", file=sys.stderr)
+            return 1
+        Path(args.out).write_bytes(body)
+        print(f"wrote {args.out} ({len(body)} bytes)")
+        return 0
+    finally:
+        proc.terminate()
+        try:
+            proc.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,6 +19,8 @@ consult at named **injection sites**:
     ``maintenance.checkpoint``  backfill checkpoint write
     ``query.shard``             sharded query-executor shard entry
     ``standing.fold``           standing-query delta fold (epoch feed)
+    ``serve.accept``            serving front-end connection accept
+    ``serve.handle``            serving front-end request handler
 
 Design mirrors ``telemetry.set_enabled``'s zero-cost-when-off discipline:
 ``fire``/``act`` early-return on a module-level flag, so a disarmed
@@ -69,6 +71,8 @@ SITES = (
     "maintenance.checkpoint",
     "query.shard",
     "standing.fold",
+    "serve.accept",
+    "serve.handle",
 )
 
 # error/crash/stall raise or sleep at the site; drop/dup/reorder are

@@ -1,4 +1,54 @@
-from repro.serve.kv_cache import (init_caches, cache_specs,  # noqa: F401
-                                  cache_shardings, cache_nbytes)
-from repro.serve.serve_step import build_prefill_step, build_decode_step  # noqa: F401
-from repro.serve.engine import ServeEngine, Request  # noqa: F401
+"""``repro.serve`` hosts TWO serving planes that share the package name:
+
+* the **model plane** — batched LM inference over the reproduced
+  architectures: ``engine.py`` (:class:`ServeEngine`: request queue,
+  length-bucketed batching, prefill+decode loop), ``serve_step.py``
+  (jitted prefill/decode/encode steps), ``kv_cache.py`` (cache specs,
+  shardings, int8 quantization).  Exercised by ``tests/test_serve.py``
+  and ``repro.launch.serve``'s generation mode.
+
+* the **query plane front end** — ``frontend.py``
+  (:class:`FrontEnd`): the socket/HTTP ingress over
+  :class:`repro.core.query.engine.QueryEngine` and the ingest path, with
+  per-client token-bucket admission control, a bounded backpressure
+  queue with deadline shedding, the ``/metrics`` Prometheus scrape and
+  ``/healthz``.  Exercised by ``tests/test_serve_frontend.py`` /
+  ``tests/test_serve_admission.py``, ``benchmarks/bench_serve.py``, and
+  ``repro.launch.serve --port``.  See docs/SERVING.md.
+
+Both stay importable side by side.  The model-plane names keep their
+historical top-level exports (``from repro.serve import ServeEngine``)
+but resolve LAZILY via PEP-562 module ``__getattr__``, so importing the
+front end (``from repro.serve.frontend import FrontEnd, ServeClient``)
+does not pay the model plane's jax/model import cost — the naming
+collision is resolved by isolation, not by renaming either plane.
+"""
+
+_MODEL_PLANE = {
+    "init_caches": "repro.serve.kv_cache",
+    "cache_specs": "repro.serve.kv_cache",
+    "cache_shardings": "repro.serve.kv_cache",
+    "cache_nbytes": "repro.serve.kv_cache",
+    "build_prefill_step": "repro.serve.serve_step",
+    "build_decode_step": "repro.serve.serve_step",
+    "ServeEngine": "repro.serve.engine",
+    "Request": "repro.serve.engine",
+}
+_FRONTEND = {
+    "FrontEnd": "repro.serve.frontend",
+    "ServeClient": "repro.serve.frontend",
+    "AdmissionController": "repro.serve.frontend",
+    "TokenBucket": "repro.serve.frontend",
+}
+
+
+def __getattr__(name: str):
+    home = _MODEL_PLANE.get(name) or _FRONTEND.get(name)
+    if home is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(home), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_MODEL_PLANE) | set(_FRONTEND))

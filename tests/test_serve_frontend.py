@@ -1,0 +1,443 @@
+"""Serving front-end battery (docs/SERVING.md): the framed wire protocol
+answers bit-identically to direct ``QueryEngine`` calls, malformed frames
+never crash or wedge the server (every rejection lands in telemetry), the
+shedding ladder returns the documented statuses (404/429/503/504/500), a
+chaos soak under injected handler + shard faults leaves every client with
+a well-formed response and the inflight gauge at zero, and the model
+plane (``repro.serve.engine``) stays importable beside the front end."""
+import json
+import os
+import random
+import socket
+import struct
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import faults, telemetry
+from repro.core.matcher import compile_bundle
+from repro.core.patterns import Rule, RuleSet
+from repro.core.query.engine import Query, QueryEngine
+from repro.core.query.mapper import QueryMapper
+from repro.core.query.store import SegmentStore
+from repro.core.stream_processor import StreamProcessor
+from repro.data.generator import LogGenerator, WorkloadSpec
+from repro.serve import frontend as fr
+from repro.serve.frontend import (FrontEnd, ProtocolError, ServeClient,
+                                  http_get, recv_frame, result_payload,
+                                  send_frame)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                  # optional dev dep; see pyproject
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(autouse=True)
+def _fault_isolation():
+    """Fresh fault state per test; the CI chaos-leg env profile (if any)
+    is re-armed before each test so its fire budget resets — every
+    front-end test must absorb `serve.accept`/`serve.handle` injections
+    without wedging a connection or leaking an inflight slot."""
+    faults.reset()
+    if os.environ.get(faults.ENV_VAR):
+        faults.load_profile(os.environ[faults.ENV_VAR])
+    yield
+    faults.reset()
+    if os.environ.get(faults.ENV_VAR):
+        faults.load_profile(os.environ[faults.ENV_VAR])
+
+
+@pytest.fixture(scope="module")
+def world(tmp_path_factory):
+    """Small enriched store + engine (module-scoped: the battery hits one
+    corpus through many front ends)."""
+    spec = WorkloadSpec(num_records=3000, ultra_rate=1e-3, high_rate=1e-2,
+                        seed=11, text_width=128)
+    gen = LogGenerator(spec)
+    rules = RuleSet(tuple(Rule(i, t.term, t.term, fields=(t.fieldname,))
+                          for i, t in enumerate(spec.planted)))
+    proc = StreamProcessor(compile_bundle(rules, spec.content_fields),
+                           backend="dfa_ref")
+    store = SegmentStore(segment_size=800,
+                         root=tmp_path_factory.mktemp("serve-store"),
+                         index_fields=spec.content_fields)
+    from repro.data.pipeline import IngestPipeline
+    IngestPipeline(gen, store, proc).run(batch_size=1000)
+    engine = QueryEngine(store, mapper=QueryMapper(rules))
+
+    def ingest_sink(batch):
+        store.append(proc.process(batch))
+        return len(batch)
+
+    w = {"spec": spec, "engine": engine, "terms":
+         [(t.fieldname, t.term) for t in spec.planted],
+         "ingest": ingest_sink}
+    yield w
+    engine.close()
+
+
+def make_fe(world, **kw):
+    kw.setdefault("rate_per_client", 1e9)
+    kw.setdefault("ingest", world["ingest"])
+    return FrontEnd(world["engine"], **kw).start()
+
+
+def raw_conn(fe):
+    return socket.create_connection(fe.address, timeout=5.0)
+
+
+def server_alive(fe):
+    """The liveness probe every malformed-input test ends with: a fresh
+    connection still gets a well-formed pong."""
+    with ServeClient(*fe.address) as c:
+        return c.request("ping").get("pong") is True
+
+
+# -- e2e: wire responses are bit-identical to direct engine calls ------------
+def test_roundtrip_matches_direct_engine(world):
+    with make_fe(world) as fe, ServeClient(*fe.address, client_id="t") as c:
+        for f, term in world["terms"][:3]:
+            for mode in ("count", "ids", "copy"):
+                emode = "count" if mode == "count" else "copy"
+                direct = result_payload(
+                    world["engine"].execute(
+                        Query(terms=((f, term),), mode=emode)), mode)
+                resp = c.query([(f, term)], mode=mode)
+                assert resp["status"] == 200
+                for key in ("count", "ids", "columns", "partial",
+                            "coverage"):
+                    if key in direct:
+                        assert resp[key] == direct[key], (f, term, mode, key)
+
+
+def test_ping_and_id_echo(world):
+    with make_fe(world) as fe, ServeClient(*fe.address) as c:
+        r1, r2 = c.request("ping"), c.request("ping")
+        assert (r1["pong"], r2["pong"]) == (True, True)
+        assert r2["id"] == r1["id"] + 1   # echoed per-request id
+
+
+def test_standing_register_and_refresh(world):
+    f, term = world["terms"][0]
+    with make_fe(world) as fe, ServeClient(*fe.address) as c:
+        reg = c.request("standing.register", terms=[[f, term]],
+                        mode="count", name="wire-view")
+        assert (reg["status"], reg["name"]) == (200, "wire-view")
+        ref = c.request("standing.refresh", name="wire-view")
+        direct = world["engine"].execute(
+            Query(terms=((f, term),), mode="count"))
+        assert (ref["status"], ref["count"]) == (200, direct.count)
+        missing = c.request("standing.refresh", name="nope")
+        assert missing["status"] == 400
+
+
+def test_ingest_route_appends(world):
+    with make_fe(world) as fe, ServeClient(*fe.address) as c:
+        r = c.request("ingest", records=[
+            {"timestamp": 10**9, "content1": "wire ERROR probe"},
+            {"timestamp": 10**9 + 1, "content1": "quiet"}])
+        assert (r["status"], r["appended"]) == (200, 2)
+        bad = c.request("ingest", records="not-a-list")
+        assert bad["status"] == 400
+
+
+# -- protocol fuzz: malformed frames never crash or wedge the server ---------
+def _bad_frame_counter():
+    return fr._rejection("unknown", "bad_frame")
+
+
+def test_truncated_length_prefix(world):
+    with make_fe(world) as fe:
+        with raw_conn(fe) as s:
+            s.sendall(b"\x00\x00")           # half a length prefix, then EOF
+        assert server_alive(fe)
+
+
+def test_oversized_length_rejected_and_closed(world):
+    with make_fe(world) as fe:
+        before = _bad_frame_counter().value
+        with raw_conn(fe) as s:
+            s.sendall(struct.pack(">I", 0x7FFFFFFF))
+            resp = recv_frame(s)             # server answers before closing
+            assert resp["status"] == 400
+            assert s.recv(1) == b""          # then closes: framing is gone
+        assert _bad_frame_counter().value == before + 1
+        assert server_alive(fe)
+
+
+def test_zero_length_frame_rejected(world):
+    with make_fe(world) as fe:
+        with raw_conn(fe) as s:
+            s.sendall(struct.pack(">I", 0))
+            assert recv_frame(s)["status"] == 400
+        assert server_alive(fe)
+
+
+def test_invalid_json_is_recoverable(world):
+    """An intact frame with a garbage payload gets a 400 and the SAME
+    connection keeps working (the framing is still trustworthy)."""
+    with make_fe(world) as fe:
+        before = _bad_frame_counter().value
+        with raw_conn(fe) as s:
+            payload = b"{not json!!"
+            s.sendall(struct.pack(">I", len(payload)) + payload)
+            assert recv_frame(s)["status"] == 400
+            send_frame(s, {"route": "ping"})
+            assert recv_frame(s)["pong"] is True
+        assert _bad_frame_counter().value == before + 1
+
+
+def test_non_object_json_is_recoverable(world):
+    with make_fe(world) as fe:
+        with raw_conn(fe) as s:
+            body = json.dumps([1, 2, 3]).encode()
+            s.sendall(struct.pack(">I", len(body)) + body)
+            assert recv_frame(s)["status"] == 400
+            send_frame(s, {"route": "ping"})
+            assert recv_frame(s)["pong"] is True
+
+
+def test_mid_request_disconnect(world):
+    with make_fe(world) as fe:
+        with raw_conn(fe) as s:
+            s.sendall(struct.pack(">I", 500) + b"x" * 120)  # then vanish
+        assert server_alive(fe)
+
+
+def test_unknown_route_404_counted(world):
+    with make_fe(world) as fe:
+        before = fr._rejection("unknown", "bad_route").value
+        with ServeClient(*fe.address) as c:
+            assert c.request("no.such.route")["status"] == 404
+            assert c.request("query2")["status"] == 404
+        assert fr._rejection("unknown", "bad_route").value == before + 2
+        assert server_alive(fe)
+
+
+def test_bad_query_terms_400(world):
+    with make_fe(world) as fe, ServeClient(*fe.address) as c:
+        assert c.request("query", terms=[])["status"] == 400
+        assert c.request("query", terms=[["only-one"]])["status"] == 400
+        assert c.request("query", terms=[[1, 2]])["status"] == 400
+        assert c.request("query", terms=[["content1", "x"]],
+                         mode="teleport")["status"] == 400
+
+
+def test_garbage_flood_never_wedges(world):
+    """Deterministic fuzz: random byte blobs on fresh connections — every
+    one is rejected or ignored, the listener survives all of them, and
+    each parseable-but-bad frame is counted."""
+    rng = random.Random(1234)
+    with make_fe(world) as fe:
+        before = _bad_frame_counter().value
+        for i in range(40):
+            blob = bytes(rng.randrange(256)
+                         for _ in range(rng.randrange(1, 200)))
+            with raw_conn(fe) as s:
+                s.sendall(blob)
+                if rng.random() < 0.5:       # half linger for the reply
+                    try:
+                        s.settimeout(2.0)
+                        s.recv(64)
+                    except OSError:
+                        pass
+        assert server_alive(fe)
+        assert _bad_frame_counter().value >= before  # only ever grows
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.binary(min_size=0, max_size=64))
+    def test_hyp_recv_frame_total(blob):
+        """recv_frame on arbitrary bytes: parses, raises ProtocolError,
+        or reports EOF — never anything else (run against a socketpair,
+        no server needed)."""
+        a, b = socket.socketpair()
+        try:
+            a.sendall(blob)
+            a.close()
+            b.settimeout(2.0)
+            try:
+                out = recv_frame(b, max_bytes=1 << 16)
+                assert out is None or isinstance(out, dict)
+            except ProtocolError:
+                pass
+        finally:
+            b.close()
+
+
+# -- shedding ladder ---------------------------------------------------------
+def test_admission_429(world):
+    with make_fe(world, rate_per_client=0.001, burst=1.0) as fe:
+        before = fr._rejection("query", "admission").value
+        with ServeClient(*fe.address, client_id="limited") as c:
+            ok = c.query([world["terms"][0]])
+            limited = c.query([world["terms"][0]])
+        assert ok["status"] == 200
+        assert (limited["status"], limited["reason"]) == (429, "admission")
+        assert fr._rejection("query", "admission").value == before + 1
+
+
+def test_queue_full_503(world):
+    """max_queue=0 with the only slot stalled: the next deadline-bearing
+    request is shed immediately as queue_full, not parked."""
+    faults.inject("serve.handle", "stall", delay=0.8, times=1)
+    with make_fe(world, max_inflight=1, max_queue=0) as fe:
+        t = threading.Thread(
+            target=lambda: ServeClient(*fe.address).query(
+                [world["terms"][0]]), daemon=True)
+        t.start()
+        time.sleep(0.2)                      # let it occupy the slot
+        before = fr._shed_counter("query", "queue_full").value
+        with ServeClient(*fe.address) as c:
+            r = c.query([world["terms"][0]], deadline_ms=100)
+        assert (r["status"], r["reason"]) == (503, "queue_full")
+        assert fr._shed_counter("query", "queue_full").value == before + 1
+        t.join(timeout=5)
+        assert not t.is_alive()
+
+
+def test_deadline_504(world):
+    """With queue room, a waiter whose deadline expires before a slot
+    frees is shed with 504."""
+    faults.inject("serve.handle", "stall", delay=0.8, times=1)
+    with make_fe(world, max_inflight=1, max_queue=4) as fe:
+        t = threading.Thread(
+            target=lambda: ServeClient(*fe.address).query(
+                [world["terms"][0]]), daemon=True)
+        t.start()
+        time.sleep(0.2)
+        with ServeClient(*fe.address) as c:
+            t0 = time.monotonic()
+            r = c.query([world["terms"][0]], deadline_ms=100)
+            waited = time.monotonic() - t0
+        assert (r["status"], r["reason"]) == (504, "deadline")
+        assert waited < 0.7                  # shed at the deadline, not after
+        t.join(timeout=5)
+        assert not t.is_alive()
+
+
+def test_handler_fault_is_500_and_slot_freed(world):
+    faults.inject("serve.handle", "error", times=1)
+    with make_fe(world, max_inflight=1) as fe:
+        with ServeClient(*fe.address) as c:
+            r = c.query([world["terms"][0]])
+            assert r["status"] == 500
+            assert c.query([world["terms"][0]])["status"] == 200  # slot free
+        assert fr._INFLIGHT.value == 0
+
+
+def test_accept_fault_drops_conn_listener_survives(world):
+    faults.inject("serve.accept", "error", times=1)
+    with make_fe(world) as fe:
+        with raw_conn(fe) as s:              # this one is dropped at accept
+            s.settimeout(2.0)
+            try:
+                send_frame(s, {"route": "ping"})
+                assert recv_frame(s) is None  # EOF: closed without service
+            except OSError:
+                pass                          # reset also acceptable
+        assert server_alive(fe)               # listener took no damage
+
+
+# -- chaos soak --------------------------------------------------------------
+def test_chaos_soak_all_clients_answered(world):
+    """8 concurrent clients under injected handler + shard faults: every
+    request gets a well-formed framed response (200 with honest partial
+    coverage, or a clean 500), no client hangs past its deadline, and the
+    inflight gauge drains to exactly zero."""
+    faults.inject("serve.handle", "error", prob=0.2, seed=21)
+    faults.inject("query.shard", "error", prob=0.2, seed=22)
+    with make_fe(world, max_inflight=4, max_queue=16) as fe:
+        outs = [[] for _ in range(8)]
+
+        def client(i, out):
+            with ServeClient(*fe.address, client_id=f"chaos-{i}") as c:
+                for j in range(15):
+                    terms = [world["terms"][j % len(world["terms"])]]
+                    out.append(c.query(terms, mode="count",
+                                       deadline_ms=5000))
+
+        threads = [threading.Thread(target=client, args=(i, outs[i]),
+                                    daemon=True) for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=30)               # no hang past deadline
+            assert not t.is_alive()
+        flat = [r for o in outs for r in o]
+        assert len(flat) == 8 * 15           # every request answered
+        statuses = {r["status"] for r in flat}
+        assert statuses <= {200, 500, 504}, statuses
+        assert any(r["status"] == 500 for r in flat)  # faults really fired
+        for r in flat:                       # well-formed: echoed id, and
+            assert "id" in r                 # 200s carry honest coverage
+            if r["status"] == 200:
+                assert "partial" in r and "coverage" in r
+        assert fr._INFLIGHT.value == 0
+        assert fr._QUEUED.value == 0
+    deadline = time.monotonic() + 5          # conn threads unwind on close
+    while fr._CONNS.value != 0 and time.monotonic() < deadline:
+        time.sleep(0.05)
+    assert fr._CONNS.value == 0
+
+
+# -- HTTP plane --------------------------------------------------------------
+def test_metrics_and_healthz(world):
+    with make_fe(world) as fe:
+        with ServeClient(*fe.address) as c:
+            c.query([world["terms"][0]])
+        status, body = http_get(*fe.address, "/metrics")
+        assert status == 200
+        text = body.decode()
+        for series in ("fluxsieve_serve_requests_total",
+                       "fluxsieve_serve_inflight",
+                       "fluxsieve_serve_latency_seconds"):
+            assert series in text, series
+        status, body = http_get(*fe.address, "/healthz")
+        health = json.loads(body)
+        assert (status, health["status"]) == (200, "ok")
+        assert health["inflight"] == 0
+        status, _ = http_get(*fe.address, "/nope")
+        assert status == 404
+        assert server_alive(fe)              # HTTP and frames coexist
+
+
+# -- the serve/ package hosts two planes -------------------------------------
+def test_frontend_import_skips_model_plane():
+    """Importing the query front end must not drag in the model plane
+    (ServeEngine + the model zoo) — the PEP-562 split in
+    repro/serve/__init__.py.  (jax itself still loads via the core
+    matcher kernels; the split isolates the PLANES, not the framework.)"""
+    code = ("import sys; import repro.serve.frontend; "
+            "from repro.serve import FrontEnd, ServeClient; "
+            "bad = [m for m in sys.modules if m.startswith("
+            "('repro.serve.engine', 'repro.serve.serve_step', "
+            "'repro.serve.kv_cache', 'repro.models'))]; "
+            "assert not bad, bad; print('clean')")
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=120,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr
+    assert "clean" in out.stdout
+
+
+def test_both_planes_listed_side_by_side():
+    import repro.serve as pkg
+    names = dir(pkg)
+    assert {"ServeEngine", "Request", "init_caches"} <= set(names)
+    assert {"FrontEnd", "ServeClient", "TokenBucket"} <= set(names)
+    from repro.serve import FrontEnd as FE   # lazy resolution works
+    assert FE is FrontEnd
+    with pytest.raises(AttributeError):
+        pkg.not_a_plane
